@@ -1,0 +1,119 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell table.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits the
+markdown table for EXPERIMENTS.md: three terms in seconds, dominant term,
+MODEL_FLOPS ratio, roofline fraction, bytes/device — per (arch × shape ×
+mesh). Also ranks cells for the perf loop (worst fraction / most
+collective-bound)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ART = "artifacts/dryrun"
+
+
+def load_records(tag: str = "") -> List[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            continue
+        if (r.get("tag") or "") != tag:
+            continue
+        r["_file"] = os.path.basename(path)
+        out.append(r)
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def table(records: List[dict], mesh_filter: Optional[str] = None) -> str:
+    rows = []
+    head = ("| cell | mesh | compute ms | memory ms | collective ms | "
+            "dominant | HBM GiB/dev | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 9
+    for r in records:
+        mesh = "x".join(str(s) for s in r["mesh"]["shape"])
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        ro = r["roofline"]
+        mem_gib = r["memory_analysis"]["temp_bytes"] / 2 ** 30
+        rows.append(
+            f"| {r['cell']} | {mesh} | {fmt_ms(ro['compute_s'])} | "
+            f"{fmt_ms(ro['memory_s'])} | {fmt_ms(ro['collective_s'])} | "
+            f"{ro['dominant'].replace('_s','')} | {mem_gib:.1f} | "
+            f"{ro['useful_flops_ratio']:.2f} | "
+            f"{ro['roofline_fraction']:.3f} |")
+    return "\n".join([head, sep] + rows)
+
+
+def pick_hillclimb_cells(records: List[dict]) -> Dict[str, dict]:
+    """worst roofline fraction (train), most collective-bound, most
+    representative (the XFA-instrumented MoE a2a cell)."""
+    single = [r for r in records if len(r["mesh"]["shape"]) == 2]
+    train = [r for r in single if "train" in r["cell"]]
+    worst = min(train, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = max(single, key=lambda r: r["roofline"]["collective_s"]
+               / max(sum((r["roofline"]["compute_s"],
+                          r["roofline"]["memory_s"],
+                          r["roofline"]["collective_s"])), 1e-12))
+    rep = next((r for r in train if "deepseek" in r["cell"]), worst)
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def compare(base_dir: str = "artifacts/dryrun_baseline") -> str:
+    """Before/after table: paper-faithful baseline vs optimized train cells."""
+    import glob as g
+    base = {}
+    for path in sorted(g.glob(os.path.join(base_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("skipped") and not r.get("tag"):
+            mesh = "x".join(str(s) for s in r["mesh"]["shape"])
+            base[(r["cell"], mesh)] = r
+    cur = {}
+    for r in load_records():
+        mesh = "x".join(str(s) for s in r["mesh"]["shape"])
+        cur[(r["cell"], mesh)] = r
+    rows = ["| cell | mesh | coll. before ms | after ms | frac before | "
+            "after |", "|" + "---|" * 6]
+    for key in sorted(base):
+        if key not in cur or "train" not in key[0]:
+            continue
+        b, c = base[key], cur[key]
+        rows.append(
+            f"| {key[0]} | {key[1]} | "
+            f"{b['roofline']['collective_s']*1e3:.0f} | "
+            f"{c['roofline']['collective_s']*1e3:.0f} | "
+            f"{b['roofline']['roofline_fraction']:.3f} | "
+            f"{c['roofline']['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    records = load_records()
+    print("## Roofline — single pod (16x16 = 256 chips)\n")
+    print(table(records, "16x16"))
+    print("\n## Roofline — multi-pod (2x16x16 = 512 chips)\n")
+    print(table(records, "2x16x16"))
+    if os.path.isdir("artifacts/dryrun_baseline"):
+        print("\n## Train cells: paper-faithful baseline vs optimized\n")
+        print(compare())
+    picks = pick_hillclimb_cells(records)
+    print("\n## Hillclimb picks")
+    for why, r in picks.items():
+        print(f"- {why}: {r['cell']} "
+              f"(frac={r['roofline']['roofline_fraction']:.3f}, "
+              f"dominant={r['roofline']['dominant']})")
+
+
+if __name__ == "__main__":
+    main()

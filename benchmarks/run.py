@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  overhead       Table 1/3  runtime overhead of full-trace XFA
+  events         Table 4    fold throughput (events/s)
+  memory         Table 5    O(#edges) memory vs append logs
+  effectiveness  Table 2    six injected bugs found from XFA views
+  sampling       Table 6    sampling cannot close the gap
+  offline        §4.3.2     offline analysis speed
+  roofline       §Roofline  (separate: python -m benchmarks.roofline)
+
+Prints ``name,value,note`` CSV. Each module is also runnable standalone.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import effectiveness, events, memory, offline, overhead, sampling
+    modules = [("overhead", overhead), ("events", events),
+               ("memory", memory), ("effectiveness", effectiveness),
+               ("sampling", sampling), ("offline", offline)]
+    failures = 0
+    print("name,value,note")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            for row_name, val, note in mod.run():
+                print(f"{row_name},{val:.3f},{note}")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"{name}.elapsed_s,{time.time()-t0:.1f},")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

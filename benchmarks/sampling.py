@@ -1,0 +1,67 @@
+"""Paper Table 6 analogue: can sampling close the gap? (it cannot)
+
+Scaler shows perf at 2x sampling rate changes its output by <1% — sampling
+has converged to an answer that still MISSES the short-burst APIs. We
+reproduce the phenomenon: a synthetic workload where one API fires in dense
+short bursts. The full fold sees every event; step-sampled observation (the
+perf model) underestimates the bursty API's share even as the rate rises."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.folding import FoldedTable, fold_event_log
+
+
+def synth_events(n=200_000, seed=0):
+    """background API: steady 1us calls; bursty API: rare 40-call bursts of
+    0.2us each (short enough to fall between samples)."""
+    rng = np.random.default_rng(seed)
+    events = []
+    t = 0
+    while len(events) < n:
+        if rng.random() < 0.02:
+            for _ in range(40):
+                events.append(("app", "lib", "bursty", 200, t))
+                t += 200
+        events.append(("app", "lib", "steady", 1000, t))
+        t += 1000
+    return events
+
+
+def sampled_share(events, period_ns):
+    """perf model: at each sample tick attribute the tick to whatever call
+    is executing then."""
+    hits = {"bursty": 0, "steady": 0}
+    next_tick = 0
+    for caller, comp, api, dur, t0 in events:
+        while next_tick < t0 + dur:
+            if next_tick >= t0:
+                hits[api] += 1
+            next_tick += period_ns
+    total = sum(hits.values()) or 1
+    return hits["bursty"] / total
+
+
+def run():
+    events = synth_events()
+    folded = fold_event_log([(c, m, a, d) for c, m, a, d, _ in events])
+    true_share = folded.edges[("app", "lib", "bursty")].total_ns / \
+        folded.total_ns()
+    rows = [("sampling.true_bursty_share_pct", 100 * true_share,
+             "full-trace fold (ground truth)")]
+    for rate_hz, label in ((4000, "perf-4000Hz"), (8000, "perf-8000Hz")):
+        period = int(1e9 / rate_hz)
+        share = sampled_share(events, period)
+        rows.append((f"sampling.{label}_share_pct", 100 * share,
+                     f"error {100*abs(share-true_share):.2f}pp"))
+    rows.append(("sampling.rate_doubling_gain_pp",
+                 100 * abs(sampled_share(events, int(1e9 / 8000))
+                           - sampled_share(events, int(1e9 / 4000))),
+                 "paper: 0.57% avg output diff at 2x rate"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, note in run():
+        print(f"{name},{val:.2f},{note}")

@@ -1,0 +1,18 @@
+"""XFA in anger: inject the paper's canneal-style bug into the data path,
+find it from the component/API views (not the code!), fix it, compare.
+
+    PYTHONPATH=src python examples/diagnose_bug.py
+"""
+from benchmarks.effectiveness import ckptbug, databug
+
+
+def main():
+    for scenario in (databug, ckptbug):
+        r = scenario()
+        verdict = "DETECTED" if r["detected"] else "missed"
+        print(f"{r['bug']:10s} {verdict:9s} via {r['signal']}; "
+              f"fix improved step time by {r['speedup_pct']:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

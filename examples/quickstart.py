@@ -1,0 +1,31 @@
+"""Quickstart: build a model, train a few steps, read the XFA report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import get_smoke
+from repro.configs.base import TrainConfig
+from repro.core.session import XFASession
+from repro.data.pipeline import SyntheticLMData
+from repro.models import build_model
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    cfg = get_smoke("tinyllama_1_1b")
+    model = build_model(cfg, impl="auto")
+    tcfg = TrainConfig(total_steps=5, ckpt_interval=0, microbatches=1)
+    trainer = Trainer(model, tcfg, CheckpointManager("artifacts/quickstart"),
+                      session=XFASession(device_spec=model.fold_spec))
+    data = SyntheticLMData(cfg, batch=4, seq_len=64)
+    state, metrics = trainer.run(jax.random.key(0), data, n_steps=5,
+                                 resume=False)
+    print(f"final metrics: {metrics}")
+    report = trainer.session.report()
+    print(report.render(components=("app", "runtime")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Serve a small model with continuously-batched requests.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import ServeConfig
+from repro.core.session import XFASession
+from repro.models import build_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    cfg = get_smoke("tinyllama_1_1b")
+    model = build_model(cfg, impl="auto")
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(model, params,
+                           ServeConfig(max_batch=4, max_seq_len=128))
+    rng = np.random.default_rng(0)
+    reqs = [engine.submit(rng.integers(0, cfg.vocab, n_prompt),
+                          max_new_tokens=8)
+            for n_prompt in (12, 20, 7, 16, 9, 14)]
+    t0 = time.monotonic()
+    done = engine.run_until_drained()
+    dt = time.monotonic() - t0
+    tokens = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests, {tokens} tokens "
+          f"in {dt:.2f}s ({tokens/dt:.1f} tok/s on CPU)")
+    for r in done:
+        ttft = (r.first_token_at - r.submitted_at) * 1e3
+        print(f"  req {r.uid}: prompt {len(r.prompt):3d} -> "
+              f"{len(r.output)} tokens, ttft {ttft:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""repro.core — Cross Flow Analysis (XFA) for distributed JAX systems.
+
+The paper's contribution (Scaler, ASE'24), adapted from x86/ELF binaries to
+the TPU/JAX stack. Three layers:
+
+  L1 host   tracer.py + shadow.py   @xfa.api boundaries, Universal Shadow
+                                    Table slots, per-thread lock-free folds
+  L2 device device_fold.py          in-graph fixed-shape fold accumulators
+  L3 static hlo_flows.py            collective flows read from compiled HLO
+
+folding.py is the shared Relation-Aware Data Folding algebra; views.py the
+component/API views; attribution.py the serial/parallel/wait logic;
+session.py ties a run together.
+"""
+
+from .shadow import (APP_COMPONENT, KIND_CALL, KIND_WAIT, ShadowTable,
+                     ShadowTableSet, SlotInfo, SlotRegistry)
+from .folding import EdgeStats, FoldedTable, fold_event_log
+from .tracer import (TRACER, Tracer, api, count_event, current_component,
+                     reset, scope, set_enabled, set_thread_group, set_timing,
+                     wait, wrap)
+from .device_fold import (STATIC_COSTS, DeviceFoldSpec, annotate_cost,
+                          scan_multiplier)
+from .hlo_flows import (CollectiveFlow, CollectiveSummary,
+                        find_redundant_gathers, parse_collective_flows)
+from .attribution import (ImbalanceReport, attribute_parallel,
+                          attribute_serial, combine_phases, expert_imbalance,
+                          imbalance_report, wait_split)
+from .views import (View, ViewRow, api_view, api_view_by_caller,
+                    component_view, flow_matrix, metric_view,
+                    render_flow_matrix)
+from .session import KNOWN_COMPONENTS, XFAReport, XFASession

@@ -1,0 +1,219 @@
+"""Device-side shadow table — in-graph Relation-Aware Data Folding.
+
+Inside an XLA program we cannot timestamp (no rdtsc on a systolic array) but
+we CAN fold: a fixed-shape f32 vector rides through the jitted step function
+and every instrumented site adds its metrics at a *statically resolved*
+offset.  This is the Universal Shadow Table transplanted into the dataflow
+graph:
+
+  shadow entry            ->  a [width] span of the fold vector at a static
+                              offset, resolved at TRACE time (= lazy PLT
+                              resolution happening at "link" time)
+  assembly in the entry   ->  one fused add per site: O(width) scalar work vs
+                              O(1e9) FLOP matmuls — overhead measured in
+                              benchmarks/overhead.py
+  per-thread tables       ->  the fold vector is part of the step carry; under
+                              scan-over-layers it lives in the carry; across
+                              devices it is replicated (values are global)
+  relation-awareness      ->  the slot key is (caller, component, api, metric)
+                              so the same metric emitted from two callers
+                              folds separately
+
+What the device layer folds is the *data-dependent* signal that static HLO
+analysis cannot see: MoE expert load/overflow, router entropy, token counts,
+capacity drops, gradient norms — the signals behind the paper's ferret
+(imbalance) and swaptions (misconfiguration) case studies.  Static per-step
+costs (FLOPs per scope) are registered at trace time via `annotate_cost` —
+they need no runtime representation at all, the trace IS the count.
+
+Counts are folded in f32: exact up to 2**24 per step-segment; DeviceFoldSpec
+validates declared maxima and the session accumulates cross-step sums in f64
+on the host after fetch.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .folding import EdgeStats, FoldedTable
+from .shadow import KIND_CALL, SlotKey
+
+DeviceSlotKey = Tuple[str, str, str, str]  # (caller, component, api, metric)
+
+
+@dataclass(frozen=True)
+class DeviceSlot:
+    key: DeviceSlotKey
+    offset: int
+    width: int
+
+
+class DeviceFoldSpec:
+    """Declared-upfront slot layout for one model family's device fold.
+
+    Model builders declare every metric they will emit (they know E, top_k,
+    n_stages... from the config), the spec freezes, and `init_table` returns
+    the zeroed vector.  Declaring after freeze or emitting an undeclared key
+    raises — an unresolved shadow entry is a bug, not a fallback.
+    """
+
+    def __init__(self) -> None:
+        self._slots: Dict[DeviceSlotKey, DeviceSlot] = {}
+        self._order: List[DeviceSlot] = []
+        self._size = 0
+        self._frozen = False
+        self._lock = threading.Lock()
+
+    def declare(self, caller: str, component: str, api: str, metric: str,
+                width: int = 1) -> DeviceSlot:
+        key = (caller, component, api, metric)
+        with self._lock:
+            if key in self._slots:
+                existing = self._slots[key]
+                if existing.width != width:
+                    raise ValueError(f"slot {key} re-declared with width "
+                                     f"{width} != {existing.width}")
+                return existing
+            if self._frozen:
+                raise RuntimeError(f"DeviceFoldSpec frozen; cannot declare {key}")
+            slot = DeviceSlot(key, self._size, width)
+            self._slots[key] = slot
+            self._order.append(slot)
+            self._size += width
+            return slot
+
+    def freeze(self) -> "DeviceFoldSpec":
+        self._frozen = True
+        return self
+
+    @property
+    def size(self) -> int:
+        return max(self._size, 1)
+
+    def slots(self) -> List[DeviceSlot]:
+        return list(self._order)
+
+    # -- in-graph ops -------------------------------------------------------
+    def init_table(self, dtype=jnp.float32) -> jnp.ndarray:
+        return jnp.zeros((self.size,), dtype=dtype)
+
+    def emit(self, table: jnp.ndarray, caller: str, component: str, api: str,
+             metric: str, value) -> jnp.ndarray:
+        """Fold `value` (scalar or [width] vector) into its slot. Trace-time
+        key resolution; runtime is one dynamic_update_slice-add."""
+        key = (caller, component, api, metric)
+        slot = self._slots.get(key)
+        if slot is None:
+            raise KeyError(f"device fold slot not declared: {key}")
+        v = jnp.asarray(value, dtype=table.dtype).reshape((-1,))
+        if v.shape[0] != slot.width:
+            raise ValueError(f"slot {key} width {slot.width}, got {v.shape[0]}")
+        seg = jax.lax.dynamic_slice(table, (slot.offset,), (slot.width,))
+        return jax.lax.dynamic_update_slice(table, seg + v, (slot.offset,))
+
+    def read(self, table: jnp.ndarray, caller: str, component: str, api: str,
+             metric: str) -> jnp.ndarray:
+        key = (caller, component, api, metric)
+        slot = self._slots[key]
+        return jax.lax.dynamic_slice(table, (slot.offset,), (slot.width,))
+
+    # -- host-side fold -----------------------------------------------------
+    def fold(self, table_np: np.ndarray, group: str = "device") -> FoldedTable:
+        """Convert a fetched fold vector into a FoldedTable whose edges carry
+        the metrics; vector slots expand to metric[i] entries."""
+        table_np = np.asarray(table_np, dtype=np.float64)
+        edges: Dict[SlotKey, EdgeStats] = {}
+        for slot in self._order:
+            caller, component, api, metric = slot.key
+            ekey: SlotKey = (caller, component, api)
+            e = edges.get(ekey)
+            if e is None:
+                e = edges[ekey] = EdgeStats(kind=KIND_CALL)
+            span = table_np[slot.offset: slot.offset + slot.width]
+            if slot.width == 1:
+                e.metrics[metric] = e.metrics.get(metric, 0.0) + float(span[0])
+            else:
+                for i, v in enumerate(span):
+                    k = f"{metric}[{i}]"
+                    e.metrics[k] = e.metrics.get(k, 0.0) + float(v)
+            if metric == "count":
+                e.count += int(round(float(span.sum())))
+        return FoldedTable(edges, group=group)
+
+
+# ---------------------------------------------------------------------------
+# Static trace-time costs: the zero-overhead fold. Model code calls
+# annotate_cost while being traced; the registry accumulates per-step analytic
+# FLOPs/bytes per edge. One trace == one step's worth of applications, so the
+# multiplicity is exact without any runtime representation.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StaticCostRegistry:
+    costs: Dict[SlotKey, Dict[str, float]] = field(default_factory=dict)
+    #: multiplier stack: inside scan-over-layers the body traces ONCE but
+    #: executes `length` times — scopes push the scan length so analytic
+    #: costs keep their true per-step multiplicity.
+    _mult_stack: List[float] = field(default_factory=lambda: [1.0])
+
+    def push_multiplier(self, m: float) -> None:
+        self._mult_stack.append(self._mult_stack[-1] * m)
+
+    def pop_multiplier(self) -> None:
+        self._mult_stack.pop()
+
+    @property
+    def multiplier(self) -> float:
+        return self._mult_stack[-1]
+
+    def annotate(self, caller: str, component: str, api: str,
+                 **metrics: float) -> None:
+        key = (caller, component, api)
+        d = self.costs.setdefault(key, {})
+        m = self.multiplier
+        for name, v in metrics.items():
+            d[name] = d.get(name, 0.0) + float(v) * m
+        d["count"] = d.get("count", 0.0) + m
+
+    def reset(self) -> None:
+        self.costs.clear()
+        self._mult_stack[:] = [1.0]
+
+    def as_folded(self, group: str = "static") -> FoldedTable:
+        edges: Dict[SlotKey, EdgeStats] = {}
+        for key, metrics in self.costs.items():
+            e = EdgeStats(kind=KIND_CALL, metrics=dict(metrics))
+            e.count = int(round(metrics.get("count", 0.0)))
+            edges[key] = e
+        return FoldedTable(edges, group=group)
+
+
+STATIC_COSTS = StaticCostRegistry()
+
+
+class scan_multiplier:
+    """Context manager: wrap the TRACING of a scanned body so static costs
+    registered inside are multiplied by the scan length."""
+
+    def __init__(self, length: float, registry: Optional[StaticCostRegistry] = None):
+        self.length = float(length)
+        self.registry = registry or STATIC_COSTS
+
+    def __enter__(self):
+        self.registry.push_multiplier(self.length)
+        return self
+
+    def __exit__(self, *exc):
+        self.registry.pop_multiplier()
+        return False
+
+
+def annotate_cost(caller: str, component: str, api: str, **metrics: float) -> None:
+    STATIC_COSTS.annotate(caller, component, api, **metrics)

@@ -1,0 +1,233 @@
+"""Relation-Aware Data Folding — the fold/merge algebra over shadow tables.
+
+Paper mapping (Scaler §3.4 "Online Data Folder"): events are never appended
+to a log; they are folded online into per-(caller → callee API) accumulators.
+Memory is O(#edges), not O(#events).  The fold keeps the *relation* — the same
+API invoked from two components stays two edges — so per-component accuracy
+survives the folding.
+
+This module provides the pure-data half: `EdgeStats` (one folded edge),
+`FoldedTable` (edge → stats mapping with a commutative, associative merge),
+and constructors from per-thread ShadowTables and from device fold vectors.
+The merge algebra is property-tested (tests/test_xfa_properties.py):
+
+    merge(a, merge(b, c)) == merge(merge(a, b), c)      (associativity)
+    merge(a, b) == merge(b, a)                          (commutativity)
+    merge(a, empty) == a                                (identity)
+    total_ns / count conservation under arbitrary splits of an event stream
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .shadow import (KIND_CALL, KIND_NAMES, KIND_WAIT, ShadowTable,
+                     ShadowTableSet, SlotInfo, SlotKey)
+
+_I64_MAX = np.iinfo(np.int64).max
+
+
+@dataclass
+class EdgeStats:
+    """Folded statistics of one cross-flow edge (caller → component.api)."""
+
+    count: int = 0
+    total_ns: int = 0
+    child_ns: int = 0
+    min_ns: int = _I64_MAX
+    max_ns: int = 0
+    kind: int = KIND_CALL
+    # extra folded metrics from the device layer (flops, bytes, tokens, ...)
+    metrics: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def self_ns(self) -> int:
+        """Time in the callee itself, excluding its own callees (paper 'Self')."""
+        return self.total_ns - self.child_ns
+
+    @property
+    def mean_ns(self) -> float:
+        return self.total_ns / self.count if self.count else 0.0
+
+    def merge(self, other: "EdgeStats") -> "EdgeStats":
+        metrics = dict(self.metrics)
+        for k, v in other.metrics.items():
+            metrics[k] = metrics.get(k, 0.0) + v
+        return EdgeStats(
+            count=self.count + other.count,
+            total_ns=self.total_ns + other.total_ns,
+            child_ns=self.child_ns + other.child_ns,
+            min_ns=min(self.min_ns, other.min_ns),
+            max_ns=max(self.max_ns, other.max_ns),
+            kind=self.kind if self.count else other.kind,
+            metrics=metrics,
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "count": int(self.count),
+            "total_ns": int(self.total_ns),
+            "child_ns": int(self.child_ns),
+            "min_ns": int(self.min_ns) if self.count else None,
+            "max_ns": int(self.max_ns),
+            "kind": KIND_NAMES[self.kind],
+            "metrics": self.metrics,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "EdgeStats":
+        kind = KIND_WAIT if d.get("kind") == "wait" else KIND_CALL
+        return EdgeStats(
+            count=d["count"],
+            total_ns=d["total_ns"],
+            child_ns=d["child_ns"],
+            min_ns=d["min_ns"] if d.get("min_ns") is not None else _I64_MAX,
+            max_ns=d["max_ns"],
+            kind=kind,
+            metrics=dict(d.get("metrics", {})),
+        )
+
+
+class FoldedTable:
+    """Edge → EdgeStats mapping; the offline-mergeable form of a shadow table.
+
+    `group` tags which thread-group / host / device shard the fold came from —
+    kept so attribution (serial vs parallel, imbalance) can run *before* the
+    final cross-group merge, exactly like the paper merges per-thread files in
+    the offline visualizer.
+    """
+
+    def __init__(self, edges: Optional[Dict[SlotKey, EdgeStats]] = None,
+                 group: str = "main") -> None:
+        self.edges: Dict[SlotKey, EdgeStats] = edges or {}
+        self.group = group
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def from_shadow(table: ShadowTable, infos: Iterable[SlotInfo]) -> "FoldedTable":
+        edges: Dict[SlotKey, EdgeStats] = {}
+        for info in infos:
+            s = info.slot
+            if s >= table.capacity or table.count[s] == 0:
+                continue
+            edges[info.key] = EdgeStats(
+                count=int(table.count[s]),
+                total_ns=int(table.total_ns[s]),
+                child_ns=int(table.child_ns[s]),
+                min_ns=int(table.min_ns[s]),
+                max_ns=int(table.max_ns[s]),
+                kind=info.kind,
+            )
+        return FoldedTable(edges, group=table.group)
+
+    @staticmethod
+    def from_set(tables: ShadowTableSet) -> List["FoldedTable"]:
+        infos = tables.registry.infos()
+        return [FoldedTable.from_shadow(t, infos) for t in tables.tables()]
+
+    # -- algebra --------------------------------------------------------------
+    def merge(self, other: "FoldedTable") -> "FoldedTable":
+        edges = {k: v for k, v in self.edges.items()}
+        for k, v in other.edges.items():
+            edges[k] = edges[k].merge(v) if k in edges else v
+        group = self.group if self.group == other.group else "merged"
+        return FoldedTable(edges, group=group)
+
+    @staticmethod
+    def merge_all(tables: Iterable["FoldedTable"]) -> "FoldedTable":
+        out = FoldedTable()
+        for t in tables:
+            out = out.merge(t)
+        return out
+
+    # -- queries --------------------------------------------------------------
+    def components(self) -> List[str]:
+        names = set()
+        for (caller, component, _api) in self.edges:
+            names.add(caller)
+            names.add(component)
+        return sorted(names)
+
+    def edges_from(self, caller: str) -> Dict[SlotKey, EdgeStats]:
+        return {k: v for k, v in self.edges.items() if k[0] == caller}
+
+    def edges_into(self, component: str) -> Dict[SlotKey, EdgeStats]:
+        return {k: v for k, v in self.edges.items() if k[1] == component}
+
+    def total_ns(self) -> int:
+        return sum(e.total_ns for e in self.edges.values())
+
+    def scale_time(self, factor: float) -> "FoldedTable":
+        """Scale all times (serial/parallel attribution divides by #threads)."""
+        edges = {
+            k: EdgeStats(
+                count=v.count,
+                total_ns=int(v.total_ns * factor),
+                child_ns=int(v.child_ns * factor),
+                min_ns=int(v.min_ns * factor) if v.count else v.min_ns,
+                max_ns=int(v.max_ns * factor),
+                kind=v.kind,
+                metrics=dict(v.metrics),
+            )
+            for k, v in self.edges.items()
+        }
+        return FoldedTable(edges, group=self.group)
+
+    # -- persistence ------------------------------------------------------
+    def to_json(self) -> dict:
+        return {
+            "group": self.group,
+            "edges": [
+                {"caller": k[0], "component": k[1], "api": k[2], **v.to_json()}
+                for k, v in sorted(self.edges.items())
+            ],
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "FoldedTable":
+        edges = {
+            (e["caller"], e["component"], e["api"]): EdgeStats.from_json(e)
+            for e in d["edges"]
+        }
+        return FoldedTable(edges, group=d.get("group", "main"))
+
+    def dump(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+
+    @staticmethod
+    def load(path: str) -> "FoldedTable":
+        with open(path) as f:
+            return FoldedTable.from_json(json.load(f))
+
+    def __len__(self) -> int:
+        return len(self.edges)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"FoldedTable(group={self.group!r}, edges={len(self.edges)})"
+
+
+def fold_event_log(events: Iterable[Tuple[str, str, str, int]],
+                   kinds: Optional[Mapping[SlotKey, int]] = None) -> FoldedTable:
+    """Fold an append-style event log [(caller, component, api, dur_ns), ...].
+
+    Exists for the paper's comparison (Table 5 / §4.3.2): benchmarks build the
+    same table from a raw log and from the online fold and assert equality,
+    then compare memory/time.  Not used on any hot path.
+    """
+    edges: Dict[SlotKey, EdgeStats] = {}
+    for caller, component, api, dur in events:
+        key = (caller, component, api)
+        e = edges.get(key)
+        if e is None:
+            kind = (kinds or {}).get(key, KIND_CALL)
+            e = edges[key] = EdgeStats(kind=kind)
+        e.count += 1
+        e.total_ns += dur
+        e.min_ns = min(e.min_ns, dur)
+        e.max_ns = max(e.max_ns, dur)
+    return FoldedTable(edges)

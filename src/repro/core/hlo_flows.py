@@ -1,0 +1,270 @@
+"""Static cross-flow analysis over compiled HLO — the TPU 'binary'.
+
+Paper mapping: Scaler's interceptor patches linkage tables found by reading
+the ELF binary — *selective* instrumentation of linkage boundaries only.  On
+TPU the compiled HLO module is the binary, and the inter-island links are the
+ICI/DCI collectives.  This module reads `compiled.as_text()` (post-SPMD
+optimized HLO, per-device view) and attributes every
+
+    all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+
+to the model component that issued it, via the `op_name` metadata that
+jax.named_scope threads through lowering.  Zero runtime overhead: the program
+is never touched, exactly like reading `.rela.plt` never executes the binary.
+
+Outputs feed three consumers:
+  * the component×component *collective flow matrix* (views.py),
+  * the roofline collective term (wire bytes / link bandwidth),
+  * redundancy detection for the perf loop (same tensor gathered twice).
+
+Wire-byte model (ring algorithm over a group of n):
+  all-gather       (n-1)/n × output_bytes   per participating device
+  reduce-scatter   (n-1)/n × input_bytes
+  all-reduce       2(n-1)/n × input_bytes   (reduce-scatter + all-gather)
+  all-to-all       (n-1)/n × input_bytes
+  collective-permute  input_bytes           (point-to-point)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=(?:\[[0-9,]+\])+(T\(([0-9,]+)\))?")
+_SOURCE_TARGET_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(dtype: str, dims_str: str) -> int:
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _parse_shapes(text: str) -> List[int]:
+    """All tensor byte-sizes appearing in `text` (a fragment of an HLO line)."""
+    return [_shape_bytes(m.group(1), m.group(2))
+            for m in _SHAPE_RE.finditer(text)]
+
+
+@dataclass
+class CollectiveFlow:
+    """One collective op in the compiled module (per-device view)."""
+
+    kind: str
+    hlo_name: str
+    input_bytes: int        # per-device operand bytes
+    output_bytes: int       # per-device result bytes
+    group_size: int         # participants per replica group
+    group_stride: int       # device-id stride inside a group (1 = innermost)
+    op_name: str            # full op_name metadata path
+    component: str          # resolved component (via known-component match)
+    axis: str               # best-effort mesh-axis name
+
+    @property
+    def wire_bytes(self) -> float:
+        """Bytes each participant puts on the interconnect (ring model)."""
+        n = max(self.group_size, 1)
+        if n == 1:
+            return 0.0
+        f = (n - 1) / n
+        if self.kind == "all-gather":
+            return f * self.output_bytes
+        if self.kind == "reduce-scatter":
+            return f * self.input_bytes
+        if self.kind == "all-reduce":
+            return 2.0 * f * self.input_bytes
+        if self.kind == "all-to-all":
+            return f * self.input_bytes
+        if self.kind == "collective-permute":
+            return float(self.input_bytes)
+        return float(self.input_bytes)
+
+
+def _resolve_component(op_name: str, known: Sequence[str]) -> str:
+    """Innermost known component mentioned in the op_name scope path."""
+    segments = re.split(r"[/()]", op_name)
+    for seg in reversed(segments):
+        seg = seg.strip()
+        for comp in known:
+            if seg == comp or seg.startswith(comp + ".") or seg.startswith(comp + "["):
+                return comp
+    # fall back: substring match, innermost first
+    for seg in reversed(segments):
+        for comp in known:
+            if comp in seg:
+                return comp
+    return "app"
+
+
+def _resolve_axis(group_size: int, group_stride: int,
+                  mesh_axes: Dict[str, int]) -> str:
+    """Best-effort mesh-axis attribution from (size, stride).
+
+    With mesh (pod, data, model) laid out row-major, device id =
+    ((pod*D)+data)*M + model.  A group over `model` has stride 1; over
+    `data` stride M; over `pod` stride D*M.  Size breaks ties first, stride
+    second; combined-axis groups report 'axis0+axis1'.
+    """
+    names = list(mesh_axes.keys())
+    sizes = list(mesh_axes.values())
+    # stride of each axis in row-major device numbering
+    strides = {}
+    acc = 1
+    for name in reversed(names):
+        strides[name] = acc
+        acc *= mesh_axes[name]
+    total = acc
+    candidates = [n for n in names if mesh_axes[n] == group_size]
+    if len(candidates) == 1:
+        return candidates[0]
+    for n in candidates:
+        if strides[n] == group_stride:
+            return n
+    # combined axes (e.g. pod+data gradient reduction)
+    for i in range(len(names)):
+        for j in range(i + 1, len(names) + 1):
+            size = 1
+            for n in names[i:j]:
+                size *= mesh_axes[n]
+            if size == group_size and (j == len(names) or
+                                       strides[names[j - 1]] == group_stride):
+                return "+".join(names[i:j])
+    if group_size == total:
+        return "+".join(names)
+    return candidates[0] if candidates else f"size{group_size}"
+
+
+def parse_collective_flows(hlo_text: str,
+                           known_components: Sequence[str] = (),
+                           mesh_axes: Optional[Dict[str, int]] = None,
+                           ) -> List[CollectiveFlow]:
+    """Scan optimized HLO text and extract every collective op."""
+    flows: List[CollectiveFlow] = []
+    mesh_axes = mesh_axes or {}
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line or "=" not in line:
+            continue
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            # match op name (e.g. ' = bf16[..] all-gather(' or 'all-gather-start(')
+            if re.search(rf"[\s)]({k})(-start)?\(", line):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if re.search(rf"{kind}-done", line.split("=")[1][:120]):
+            continue  # async completion — counted at -start
+        lhs, rhs = line.split("=", 1)
+        hlo_name = lhs.strip().lstrip("%")
+        # result shapes before the op name; operand shapes inside parens
+        opn = re.search(rf"({kind})(-start)?\(", rhs)
+        result_part = rhs[: opn.start()]
+        rest = rhs[opn.end():]
+        paren_depth = 1
+        i = 0
+        while i < len(rest) and paren_depth:
+            if rest[i] == "(":
+                paren_depth += 1
+            elif rest[i] == ")":
+                paren_depth -= 1
+            i += 1
+        operand_part = rest[: i - 1]
+        attr_part = rest[i:]
+
+        out_bytes = sum(_parse_shapes(result_part))
+        in_bytes = sum(_parse_shapes(operand_part))
+        if kind == "all-gather" and "-start" in rhs[: opn.end()]:
+            # all-gather-start result is a tuple (operand, result) — keep result
+            shapes = _parse_shapes(result_part)
+            if len(shapes) >= 2:
+                out_bytes = shapes[-1]
+
+        group_size, group_stride = 1, 1
+        m = _GROUPS_IOTA_RE.search(attr_part) or _GROUPS_IOTA_RE.search(rhs)
+        if m:
+            n_groups, g_size = int(m.group(1)), int(m.group(2))
+            group_size = g_size
+            # no transpose => contiguous ids => stride 1; transposed => outer
+            if m.group(3):
+                group_stride = n_groups
+            else:
+                group_stride = 1
+        else:
+            m2 = _GROUPS_EXPLICIT_RE.search(attr_part) or _GROUPS_EXPLICIT_RE.search(rhs)
+            if m2:
+                ids = [int(x) for x in m2.group(1).replace(" ", "").split(",") if x]
+                group_size = len(ids)
+                group_stride = (ids[1] - ids[0]) if len(ids) > 1 else 1
+        if kind == "collective-permute":
+            group_size = 2  # point-to-point; wire bytes = full operand
+
+        opname_m = _OPNAME_RE.search(raw)
+        op_name = opname_m.group(1) if opname_m else ""
+        component = _resolve_component(op_name, known_components)
+        axis = _resolve_axis(group_size, group_stride, mesh_axes) \
+            if mesh_axes else f"size{group_size}"
+        flows.append(CollectiveFlow(
+            kind=kind, hlo_name=hlo_name, input_bytes=in_bytes,
+            output_bytes=out_bytes, group_size=group_size,
+            group_stride=group_stride, op_name=op_name,
+            component=component, axis=axis))
+    return flows
+
+
+@dataclass
+class CollectiveSummary:
+    """Aggregated collective flows: per component, per kind, per axis."""
+
+    flows: List[CollectiveFlow]
+    by_component: Dict[str, float] = field(default_factory=dict)
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    by_axis: Dict[str, float] = field(default_factory=dict)
+    total_wire_bytes: float = 0.0
+
+    @staticmethod
+    def build(flows: List[CollectiveFlow]) -> "CollectiveSummary":
+        s = CollectiveSummary(flows)
+        for f in flows:
+            wb = f.wire_bytes
+            s.by_component[f.component] = s.by_component.get(f.component, 0.0) + wb
+            s.by_kind[f.kind] = s.by_kind.get(f.kind, 0.0) + wb
+            s.by_axis[f.axis] = s.by_axis.get(f.axis, 0.0) + wb
+            s.total_wire_bytes += wb
+        return s
+
+    def schedule(self) -> List[Tuple[str, str, str, float]]:
+        """(kind, component, axis, wire_bytes) in program order — the
+        'collective schedule' recorded in EXPERIMENTS.md §Dry-run."""
+        return [(f.kind, f.component, f.axis, f.wire_bytes) for f in self.flows]
+
+
+def find_redundant_gathers(flows: List[CollectiveFlow]) -> List[Tuple[str, int]]:
+    """Perf-loop helper: identical (kind, bytes, component, axis) collectives
+    appearing more than once may indicate a re-gathered tensor (the paper's
+    'same API invoked extensively' smell, XFA'd at the HLO level)."""
+    seen: Dict[Tuple[str, int, str, str], int] = {}
+    for f in flows:
+        key = (f.kind, f.input_bytes, f.component, f.axis)
+        seen[key] = seen.get(key, 0) + 1
+    return [(f"{k[0]} {k[1]}B {k[2]}@{k[3]}", n)
+            for k, n in sorted(seen.items()) if n > 1 and k[1] > 0]

@@ -1,0 +1,220 @@
+"""Universal Shadow Table — the host-side slot store for Cross Flow Analysis.
+
+Paper mapping (Scaler §3.2, Figure 2): every interceptable API, regardless of
+how it is linked (.rela.plt / .rela.dyn / dlsym), maps to ONE fixed-size
+*shadow entry* that carries everything the interceptor needs, so attribution
+is O(1), allocation-free and uniform across API kinds.
+
+TPU/JAX adaptation: the "APIs" are framework boundaries (host framework calls,
+in-graph module applications, HLO collectives).  A shadow entry is a row in a
+set of preallocated flat numpy arrays.  Slot resolution happens ONCE per
+(caller-component, callee-component, api) edge — the analogue of lazy PLT
+resolution — after which the hot path is two integer loads and a few adds,
+with no hashing and no allocation (the paper explicitly rejects hash tables on
+the hot path; we intern to dense ids instead).
+
+Relation-awareness (Scaler §3.4): the slot key *includes the caller
+component*, so the same callee API invoked from two different components folds
+into two distinct slots.  That is exactly the paper's Relation-Aware Data
+Folding invariant and is what keeps per-component views accurate.
+
+Threading (Scaler §3.3): every thread owns its own ShadowTable (lock-free hot
+path, no false sharing); the SlotRegistry is shared so slot ids agree across
+threads, and per-thread tables are merged offline (views.py / folding.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+# Slot kinds — 'wait' is separated per Scaler §3.5 ("Wait" pseudo-category:
+# condvar/barrier/lock time means the program is not doing useful work).
+KIND_CALL = 0
+KIND_WAIT = 1
+KIND_NAMES = {KIND_CALL: "call", KIND_WAIT: "wait"}
+
+#: the component attributed when nothing is on the caller stack — the paper's
+#: "application itself" island.
+APP_COMPONENT = "app"
+
+SlotKey = Tuple[str, str, str]  # (caller_component, callee_component, api)
+
+
+@dataclass(frozen=True)
+class SlotInfo:
+    """Static metadata of one shadow entry (the paper's per-API struct)."""
+
+    slot: int
+    caller: str
+    component: str
+    api: str
+    kind: int = KIND_CALL
+
+    @property
+    def key(self) -> SlotKey:
+        return (self.caller, self.component, self.api)
+
+
+class SlotRegistry:
+    """Interns (caller, component, api) edges to dense slot ids.
+
+    Shared across threads; the lock is taken only on FIRST resolution of an
+    edge (the slow path — mirroring the dynamic linker resolving a PLT entry
+    once).  Steady-state lookups go through a plain dict read, which is
+    GIL-atomic in CPython; the returned id is then cached by the call site so
+    even the dict read disappears from the hot path.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._by_key: Dict[SlotKey, SlotInfo] = {}
+        self._infos: List[SlotInfo] = []
+
+    def resolve(self, caller: str, component: str, api: str,
+                kind: int = KIND_CALL) -> SlotInfo:
+        key = (caller, component, api)
+        info = self._by_key.get(key)
+        if info is not None:
+            return info
+        with self._lock:
+            info = self._by_key.get(key)
+            if info is None:
+                info = SlotInfo(len(self._infos), caller, component, api, kind)
+                self._infos.append(info)
+                self._by_key[key] = info
+        return info
+
+    def __len__(self) -> int:
+        return len(self._infos)
+
+    def info(self, slot: int) -> SlotInfo:
+        return self._infos[slot]
+
+    def infos(self) -> List[SlotInfo]:
+        return list(self._infos)
+
+
+class ShadowTable:
+    """One thread's shadow entries: preallocated flat arrays, grown by doubling.
+
+    Per-slot stats (the fold): count, total_ns, child_ns (time spent inside
+    callees of this call — used to compute self time), min_ns, max_ns.
+    ``record`` is the entire hot path: bounds check + 5 array updates.
+    """
+
+    __slots__ = ("count", "total_ns", "child_ns", "min_ns", "max_ns",
+                 "_cap", "thread_name", "group")
+
+    INITIAL_CAPACITY = 256
+
+    def __init__(self, thread_name: str = "main", group: str = "main",
+                 capacity: int = INITIAL_CAPACITY) -> None:
+        self._cap = int(capacity)
+        self.thread_name = thread_name
+        #: thread *group* (e.g. pipeline stage name) for imbalance analysis
+        self.group = group
+        self.count = np.zeros(self._cap, dtype=np.int64)
+        self.total_ns = np.zeros(self._cap, dtype=np.int64)
+        self.child_ns = np.zeros(self._cap, dtype=np.int64)
+        self.min_ns = np.full(self._cap, np.iinfo(np.int64).max, dtype=np.int64)
+        self.max_ns = np.zeros(self._cap, dtype=np.int64)
+
+    # -- hot path ---------------------------------------------------------
+    def record(self, slot: int, dur_ns: int, child_ns: int = 0) -> None:
+        if slot >= self._cap:
+            self._grow(slot + 1)
+        self.count[slot] += 1
+        self.total_ns[slot] += dur_ns
+        self.child_ns[slot] += child_ns
+        if dur_ns < self.min_ns[slot]:
+            self.min_ns[slot] = dur_ns
+        if dur_ns > self.max_ns[slot]:
+            self.max_ns[slot] = dur_ns
+
+    def record_count(self, slot: int, n: int = 1) -> None:
+        """Count-only fold (paper: counting is always on; timing is optional)."""
+        if slot >= self._cap:
+            self._grow(slot + 1)
+        self.count[slot] += n
+
+    # -- slow paths -------------------------------------------------------
+    def _grow(self, needed: int) -> None:
+        new_cap = self._cap
+        while new_cap < needed:
+            new_cap *= 2
+        for name in ("count", "total_ns", "child_ns", "max_ns"):
+            arr = getattr(self, name)
+            new = np.zeros(new_cap, dtype=np.int64)
+            new[: self._cap] = arr
+            setattr(self, name, new)
+        new_min = np.full(new_cap, np.iinfo(np.int64).max, dtype=np.int64)
+        new_min[: self._cap] = self.min_ns
+        self.min_ns = new_min
+        self._cap = new_cap
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def nbytes(self) -> int:
+        """Memory footprint — O(#slots), never O(#events) (paper Table 5)."""
+        return sum(getattr(self, n).nbytes
+                   for n in ("count", "total_ns", "child_ns", "min_ns", "max_ns"))
+
+    def active_slots(self) -> np.ndarray:
+        return np.nonzero(self.count[: self._cap])[0]
+
+    def reset(self) -> None:
+        self.count[:] = 0
+        self.total_ns[:] = 0
+        self.child_ns[:] = 0
+        self.min_ns[:] = np.iinfo(np.int64).max
+        self.max_ns[:] = 0
+
+
+class ShadowTableSet:
+    """All per-thread tables of one process + the shared registry.
+
+    The paper persists each thread's data at thread exit and merges offline;
+    we keep tables addressable here and let folding.py do the merge.  Tables
+    for exited threads are retained (the paper's __cxa_thread_atexit handler
+    keeps the data alive until the main thread persists it).
+    """
+
+    def __init__(self) -> None:
+        self.registry = SlotRegistry()
+        self._tables: Dict[int, ShadowTable] = {}
+        self._lock = threading.Lock()
+        self._tls = threading.local()
+
+    def table(self, group: Optional[str] = None) -> ShadowTable:
+        t = getattr(self._tls, "table", None)
+        if t is None:
+            th = threading.current_thread()
+            t = ShadowTable(thread_name=th.name, group=group or th.name)
+            with self._lock:
+                self._tables[th.ident or id(th)] = t
+            self._tls.table = t
+        elif group is not None:
+            t.group = group
+        return t
+
+    def tables(self) -> List[ShadowTable]:
+        with self._lock:
+            return list(self._tables.values())
+
+    def iter_edges(self) -> Iterator[Tuple[SlotInfo, ShadowTable]]:
+        for t in self.tables():
+            for slot in t.active_slots():
+                yield self.registry.info(int(slot)), t
+
+    def nbytes(self) -> int:
+        return sum(t.nbytes() for t in self.tables())
+
+    def reset(self) -> None:
+        for t in self.tables():
+            t.reset()

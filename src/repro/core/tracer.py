@@ -1,0 +1,202 @@
+"""Interceptor + Tracer — host-level cross-flow interception.
+
+Paper mapping (Scaler §3.1–§3.3): the interceptor redirects every API
+invocation to the Universal Shadow Table; the tracer brackets the real call
+with two timestamps and folds (count, duration) into the callee's shadow
+entry, keyed by the *calling component*.
+
+TPU/JAX adaptation of the mechanisms:
+
+  .plt entry rewrite            ->  @xfa.api decorator on framework boundaries
+                                    (selective: only registered boundaries,
+                                    never whole-program instrumentation)
+  return-address inspection     ->  an explicit per-thread caller stack; the
+   (who called me?)                 top frame's component is the caller
+  lazy PLT address resolution   ->  slot id resolved on first invocation and
+                                    cached on the wrapper (no dict lookup on
+                                    the steady-state hot path)
+  rdtsc                         ->  time.perf_counter_ns (user-space, no
+                                    syscall on Linux vDSO)
+  initial-exec TLS              ->  threading.local with __slots__-style use
+  dlsym interposition           ->  xfa.wrap(fn, component=...) for callables
+                                    resolved at runtime (e.g. a jit'd step fn
+                                    chosen from a registry)
+  __noreturn handling           ->   'finally' blocks — Python exceptions are
+                                    the host analogue of abnormal control flow
+                                    and the frame is always popped
+
+Wait separation (Scaler §3.5): boundaries tagged kind='wait' (blocking joins,
+queue gets, device sync) fold into a separate Wait category so views can
+report not-useful time distinctly.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from contextlib import contextmanager
+from typing import Callable, Dict, List, Optional
+
+from .shadow import (APP_COMPONENT, KIND_CALL, KIND_WAIT, ShadowTableSet,
+                     SlotInfo)
+
+perf_ns = time.perf_counter_ns
+
+
+class _Frame:
+    __slots__ = ("component", "api", "start_ns", "child_ns")
+
+    def __init__(self, component: str, api: str, start_ns: int) -> None:
+        self.component = component
+        self.api = api
+        self.start_ns = start_ns
+        self.child_ns = 0
+
+
+class _Stack(threading.local):
+    def __init__(self) -> None:
+        self.frames: List[_Frame] = []
+
+
+class Tracer:
+    """Process-wide tracer: caller stack + shadow tables + enable switch.
+
+    ``enabled=False`` reduces every instrumented call to a single attribute
+    load + branch — the analogue of Scaler's "timing off, counting only"
+    configuration knob, except we also allow full off for baseline runs
+    (paper Table 3 measures against an uninstrumented baseline).
+    """
+
+    def __init__(self) -> None:
+        self.tables = ShadowTableSet()
+        self.enabled = True
+        self.timing = True  # paper: counting always on, timing configurable
+        self._stack = _Stack()
+
+    # -- caller identity ----------------------------------------------------
+    def current_component(self) -> str:
+        frames = self._stack.frames
+        return frames[-1].component if frames else APP_COMPONENT
+
+    def stack_depth(self) -> int:
+        return len(self._stack.frames)
+
+    # -- core bracket ---------------------------------------------------------
+    def enter(self, component: str, api: str) -> _Frame:
+        f = _Frame(component, api, perf_ns())
+        self._stack.frames.append(f)
+        return f
+
+    def exit(self, frame: _Frame, slot: SlotInfo) -> int:
+        end = perf_ns()
+        frames = self._stack.frames
+        frames.pop()
+        dur = end - frame.start_ns
+        if frames:
+            frames[-1].child_ns += dur
+        self.tables.table().record(slot.slot, dur, frame.child_ns)
+        return dur
+
+    # -- public API -----------------------------------------------------------
+    def api(self, component: str, name: Optional[str] = None,
+            kind: int = KIND_CALL) -> Callable:
+        """Decorator: declare `fn` a cross-flow boundary into `component`.
+
+        Slot resolution is per-(caller, callee) edge and cached in a tiny
+        dict on the wrapper; after the first call from a given caller the
+        hot path does no interning (lazy-PLT analogue).
+        """
+
+        def deco(fn: Callable) -> Callable:
+            api_name = name or fn.__name__
+            slot_cache: Dict[str, SlotInfo] = {}
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                if not self.enabled:
+                    return fn(*args, **kwargs)
+                caller = self.current_component()
+                slot = slot_cache.get(caller)
+                if slot is None:
+                    slot = self.tables.registry.resolve(
+                        caller, component, api_name, kind)
+                    slot_cache[caller] = slot
+                if not self.timing:
+                    self.tables.table().record_count(slot.slot)
+                    return fn(*args, **kwargs)
+                frame = self.enter(component, api_name)
+                try:
+                    return fn(*args, **kwargs)
+                finally:
+                    self.exit(frame, slot)
+
+            wrapper.__xfa__ = (component, api_name, kind)  # type: ignore
+            return wrapper
+
+        return deco
+
+    def wait(self, component: str, name: Optional[str] = None) -> Callable:
+        """Decorator for blocking boundaries (paper's Wait category)."""
+        return self.api(component, name, kind=KIND_WAIT)
+
+    def wrap(self, fn: Callable, component: str,
+             name: Optional[str] = None, kind: int = KIND_CALL) -> Callable:
+        """Interpose a callable obtained at runtime (the dlsym analogue)."""
+        return self.api(component, name or getattr(fn, "__name__", "anon"),
+                        kind)(fn)
+
+    @contextmanager
+    def scope(self, component: str, api: str = "scope", kind: int = KIND_CALL):
+        """Context-manager boundary for regions that are not function calls."""
+        if not self.enabled:
+            yield
+            return
+        caller = self.current_component()
+        slot = self.tables.registry.resolve(caller, component, api, kind)
+        frame = self.enter(component, api)
+        try:
+            yield
+        finally:
+            self.exit(frame, slot)
+
+    def count_event(self, component: str, api: str, n: int = 1,
+                    kind: int = KIND_CALL) -> None:
+        """Count-only event (no timing bracket)."""
+        if not self.enabled:
+            return
+        caller = self.current_component()
+        slot = self.tables.registry.resolve(caller, component, api, kind)
+        self.tables.table().record_count(slot.slot, n)
+
+    # -- lifecycle ----------------------------------------------------------
+    def reset(self) -> None:
+        self.tables = ShadowTableSet()
+
+    def set_thread_group(self, group: str) -> None:
+        """Tag this thread's table with a group (pipeline stage, pool name)."""
+        self.tables.table(group=group)
+
+
+#: process-global tracer — mirrors Scaler being LD_PRELOADed process-wide.
+TRACER = Tracer()
+
+api = TRACER.api
+wait = TRACER.wait
+wrap = TRACER.wrap
+scope = TRACER.scope
+count_event = TRACER.count_event
+current_component = TRACER.current_component
+set_thread_group = TRACER.set_thread_group
+
+
+def set_enabled(on: bool) -> None:
+    TRACER.enabled = on
+
+
+def set_timing(on: bool) -> None:
+    TRACER.timing = on
+
+
+def reset() -> None:
+    TRACER.reset()

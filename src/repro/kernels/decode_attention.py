@@ -1,0 +1,141 @@
+"""Flash-decode (split-K) attention — Pallas TPU kernel for 1-token decode.
+
+Decode attention is memory-bound: one query row vs a [S, D] KV cache. The
+kernel streams KV blocks through VMEM with the online-softmax carried in
+scratch (grid kv dim 'arbitrary'), never materializing the [S] score row in
+HBM. The q "row" is padded to 8 sublanes to satisfy TPU tiling; all q-heads
+of one kv-head are processed together so GQA reuses each KV block g times
+from VMEM (arithmetic intensity ×g).
+
+Distributed split-K happens ABOVE the kernel: parallel/context.py shards S
+across the mesh, each shard runs this kernel with return-style (o, m, l)
+residuals computed from its local range, and the partials merge with
+ref.combine_decode_partials after one small all-gather.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   sm_scale: float, block_k: int, num_kv_blocks: int,
+                   with_residuals: bool):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[0]  # [1]-blocked per batch row (SMEM scalar)
+
+    @pl.when(ik * block_k < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, BK]
+        cols = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+        if with_residuals:
+            m_out_ref[0, 0] = m_ref[...].astype(m_out_ref.dtype)
+            l_out_ref[0, 0] = l_ref[...].astype(l_out_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     kv_len: Optional[jax.Array] = None,
+                     sm_scale: Optional[float] = None,
+                     block_k: int = 512, interpret: bool = False,
+                     return_residuals: bool = False):
+    """q: [B, Hq, D]; k, v: [B, Hkv, S, D] -> [B, Hq, D].
+
+    kv_len: [B] int32 valid lengths (None = full S). return_residuals=True
+    additionally returns (m, l): [B, Hq] for distributed split-K merge."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    if kv_len is None:
+        kv_len = jnp.full((B,), S, jnp.int32)
+
+    # group q heads by kv head: [B, Hkv, G, D]
+    qg = q.reshape(B, Hkv, g, D)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=scale, block_k=block_k, num_kv_blocks=nk,
+        with_residuals=return_residuals)
+
+    out_shapes = [
+        jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        jax.ShapeDtypeStruct((B, Hkv, g, LANES), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hkv, g, LANES), jnp.float32),
+    ]
+    out_specs = [
+        pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, g, LANES), lambda b, h, ik: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, g, LANES), lambda b, h, ik: (b, h, 0, 0)),
+    ]
+
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((g, D), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="xfa_decode_attention",
+    )(kv_len, qg, k, v)
+
+    o = o.reshape(B, Hq, D)
+    if return_residuals:
+        return o, (m[..., 0].reshape(B, Hq), l[..., 0].reshape(B, Hq))
+    return o

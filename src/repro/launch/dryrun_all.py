@@ -1,0 +1,120 @@
+"""Run the full dry-run matrix: every (arch × shape) × {single-pod, multi-pod}.
+
+Each cell runs in a FRESH subprocess (the 512-device XLA flag must be set
+before jax initializes, and XLA leaks compile-cache memory across big
+modules). Failures are logged and the sweep continues; completed cells are
+skipped on re-run (idempotent — restart-friendly like everything else here).
+
+Usage: python -m repro.launch.dryrun_all [--multi-pod-only|--single-pod-only]
+       [--arch A] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "tinyllama_1_1b", "internvl2_1b", "seamless_m4t_large_v2",
+    "deepseek_v2_lite_16b", "zamba2_2_7b", "xlstm_1_3b",
+    "starcoder2_7b", "qwen3_14b", "phi3_5_moe_42b", "granite_20b",
+]
+SHAPES = ["train_4k", "decode_32k", "prefill_32k", "long_500k"]
+
+#: per-arch gradient-accumulation microbatches for train_4k: chosen so saved
+#: layer activations (~L x B_dev x S x d_model x 2B / micro) fit ~4 GiB HBM
+MICRO = {
+    "granite_20b": 16, "starcoder2_7b": 8, "qwen3_14b": 8,
+    "tinyllama_1_1b": 2, "zamba2_2_7b": 8, "deepseek_v2_lite_16b": 4,
+    "phi3_5_moe_42b": 8, "xlstm_1_3b": 8, "internvl2_1b": 1,
+    "seamless_m4t_large_v2": 4,
+}
+
+OUT = "artifacts/dryrun"
+
+
+def cell_done(arch: str, shape: str, multi_pod: bool) -> bool:
+    suffix = "multipod" if multi_pod else "pod"
+    path = os.path.join(OUT, f"{arch}_{shape}_{suffix}.json")
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            json.load(f)
+        return True
+    except Exception:
+        return False
+
+
+def run_one(arch: str, shape: str, multi_pod: bool,
+            timeout: int = 1500) -> str:
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape]
+    if shape == "train_4k":
+        micro = MICRO.get(arch, 4)
+        # microbatches must keep global_batch/micro divisible by the DP
+        # extent (pod x data = 32 on the multi-pod mesh): 256/(16x32) is
+        # uneven and GSPMD pads+gathers — measured 16x collective blowup on
+        # granite multi-pod (EXPERIMENTS.md §Perf granite iteration 1)
+        if multi_pod:
+            micro = min(micro, 8)
+        cmd += ["--microbatches", str(micro)]
+    if multi_pod:
+        cmd += ["--multi-pod"]
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+    except subprocess.TimeoutExpired:
+        return f"TIMEOUT after {timeout}s"
+    dt = time.time() - t0
+    if proc.returncode != 0:
+        tail = (proc.stderr or proc.stdout).strip().splitlines()[-12:]
+        return f"FAIL ({dt:.0f}s): " + " | ".join(tail)
+    out = [ln for ln in proc.stdout.splitlines() if ln.startswith(("OK", "SKIP"))]
+    return f"{out[0] if out else 'OK'} [{dt:.0f}s]"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True]
+    if args.multi_pod_only:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+    archs = [args.arch] if args.arch else ARCHS
+
+    os.makedirs(OUT, exist_ok=True)
+    log_path = os.path.join(OUT, "sweep_log.txt")
+    failures = 0
+    with open(log_path, "a") as log:
+        for multi_pod in meshes:
+            for shape in SHAPES:
+                for arch in archs:
+                    tag = f"{arch}:{shape}:{'multipod' if multi_pod else 'pod'}"
+                    if not args.force and cell_done(arch, shape, multi_pod):
+                        continue
+                    msg = run_one(arch, shape, multi_pod)
+                    line = f"{time.strftime('%H:%M:%S')} {tag:60s} {msg}"
+                    print(line, flush=True)
+                    log.write(line + "\n")
+                    log.flush()
+                    if msg.startswith(("FAIL", "TIMEOUT")):
+                        failures += 1
+    print(f"sweep finished, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

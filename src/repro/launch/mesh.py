@@ -1,0 +1,30 @@
+"""Production meshes. A FUNCTION, not a module constant — importing this
+module never touches jax device state (required: the dry-run sets
+XLA_FLAGS before any jax init; tests must see 1 device)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# v5e-class hardware constants for the roofline (per chip / per link)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link

@@ -1,0 +1,208 @@
+"""Per-cell jittable + input-spec construction for the dry-run and benches.
+
+A *cell* is (architecture × input shape × mesh). For each cell this module
+builds, WITHOUT allocating anything:
+  * the step callable to lower (train_step / prefill_step / serve_step),
+  * ShapeDtypeStruct stand-ins for every input,
+  * in/out shardings (params by rule table; serve caches by the per-family
+    leaf rules below).
+
+Shape semantics per the assignment: decode_* / long_* lower `serve_step`
+(ONE new token against a seq_len KV cache), not train_step. long_500k runs
+only for the sub-quadratic archs (zamba2 hybrid, xlstm ssm) — skips recorded
+in DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES, TrainConfig)
+from repro.models.api import Model, build_model
+from repro.parallel.axes import resolve_spec
+from repro.parallel.sharding import sharding_tree
+from repro.runtime.trainer import (init_train_state, make_train_step,
+                                   state_shardings)
+
+PURE_ATTENTION = {"granite-20b", "starcoder2-7b", "qwen3-14b",
+                  "tinyllama-1.1b", "deepseek-v2-lite-16b", "phi3.5-moe-42b",
+                  "internvl2-1b", "seamless-m4t-large-v2"}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    if shape.kind == "long_decode":
+        return cfg.family in ("hybrid", "ssm")   # sub-quadratic state archs
+    return True
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    from repro.parallel.axes import get_rules
+    return tuple(a for a in get_rules().get("batch", ("pod", "data"))
+                 if a in mesh.axis_names)
+
+
+def _div(n: int, axes: Tuple[str, ...], sizes: Dict[str, int]) -> bool:
+    prod = 1
+    for a in axes:
+        prod *= sizes[a]
+    return prod > 1 and n % prod == 0
+
+
+def cache_leaf_spec(path_names: Tuple[str, ...], shape: Tuple[int, ...],
+                    cfg: ModelConfig, mesh: Mesh) -> P:
+    """Sharding for one serving-cache leaf. Greedy, family-aware:
+    batch dim -> (pod, data); heads -> model when divisible; else the cache
+    sequence dim takes whichever axes remain (context sharding)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b_axes = _batch_axes(mesh)
+    name = path_names[-1] if path_names else ""
+    parts: list = [None] * len(shape)
+    used: set = set()
+
+    def place(dim: int, axes: Tuple[str, ...]) -> bool:
+        free = tuple(a for a in axes if a not in used)
+        if free and _div(shape[dim], free, sizes):
+            parts[dim] = free[0] if len(free) == 1 else free
+            used.update(free)
+            return True
+        return False
+
+    if name in ("k", "v", "xk", "xv", "attn_k", "attn_v"):
+        # [L, B, H, S, hd]
+        place(1, b_axes)
+        if not place(2, ("model",)):
+            place(3, ("model",))
+        place(3, b_axes)           # remaining batch axes onto sequence
+    elif name in ("ckv", "krope"):
+        # [L, B, S, r] — MLA latent cache has no head dim
+        place(1, b_axes)
+        place(2, ("model",))
+        place(2, b_axes)
+    elif name == "conv":
+        # [L, B, K-1, ch]
+        place(1, b_axes)
+        place(3, ("model",))
+    elif name == "h":
+        # [L, B, H, N, ph] ssd state
+        place(1, b_axes)
+        place(2, ("model",))
+    elif "mlstm" in path_names:
+        # tuple state (C [ns,nm,B,H,ph,ph], n [ns,nm,B,H,ph], m [ns,nm,B,H])
+        if len(shape) >= 3:
+            place(2, b_axes)
+        if len(shape) >= 5:
+            place(len(shape) - 1, ("model",))
+    elif "slstm" in path_names:
+        # [ns, B, d]
+        if len(shape) >= 2:
+            place(1, b_axes)
+        if len(shape) >= 3:
+            place(2, ("model",))
+    else:
+        if len(shape) >= 2:
+            place(1, b_axes)
+    return P(*parts)
+
+
+def cache_shardings(cache_like, cfg: ModelConfig, mesh: Mesh):
+    def leaf(path, x):
+        names = tuple(str(getattr(p, "key", getattr(p, "name", p)))
+                      for p in path)
+        return NamedSharding(mesh, cache_leaf_spec(names, x.shape, cfg, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, cache_like)
+
+
+@dataclasses.dataclass
+class Cell:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    name: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    fn: Callable
+    args: Tuple[Any, ...]              # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...] = ()
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tcfg: Optional[TrainConfig] = None,
+               impl: str = "chunked") -> Cell:
+    """impl='chunked' lowers flash-PATTERN jnp kernels (Mosaic cannot lower
+    on the CPU backend); on a real TPU pass impl='pallas'."""
+    model = build_model(cfg, impl=impl)
+    tcfg = tcfg or TrainConfig()
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        step = make_train_step(model, tcfg)
+        state_like = jax.eval_shape(
+            lambda k: init_train_state(model, k, tcfg), jax.random.key(0))
+        batch_like = model.batch_spec(shape)
+        table_like = jax.ShapeDtypeStruct((model.fold_spec.size,),
+                                          jnp.float32)
+        ss = state_shardings(state_like, mesh, tcfg.zero1)
+        bs = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(_batch_axes(mesh)) if len(x.shape) == 1 else
+                P(_batch_axes(mesh), *([None] * (len(x.shape) - 1)))),
+            batch_like)
+        return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg, shape=shape,
+                    fn=step, args=(state_like, batch_like, table_like),
+                    in_shardings=(ss, bs, rep),
+                    out_shardings=(ss, None, rep), donate=(0,))
+
+    params_like = jax.eval_shape(model.init, jax.random.key(0))
+    ps = sharding_tree(params_like, mesh)
+    table_like = jax.ShapeDtypeStruct((model.fold_spec.size,), jnp.float32)
+    B, S = shape.global_batch, shape.seq_len
+    b_axes = _batch_axes(mesh)
+
+    if shape.kind == "prefill":
+        batch_like = model.batch_spec(shape)
+        batch_like.pop("labels", None)
+        batch_like.pop("mask", None)
+        cache_like = jax.eval_shape(
+            lambda: model.init_cache(B, S,
+                                     **({"src_len": S} if
+                                        cfg.family == "audio" else {})))
+        cs = cache_shardings(cache_like, cfg, mesh)
+        bs = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(b_axes,
+                                            *([None] * (len(x.shape) - 1)))),
+            batch_like)
+
+        def prefill_step(params, batch, table, cache):
+            return model.prefill(params, batch, table, cache)
+
+        return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg, shape=shape,
+                    fn=prefill_step,
+                    args=(params_like, batch_like, table_like, cache_like),
+                    in_shardings=(ps, bs, rep, cs),
+                    out_shardings=(None, cs, rep), donate=(3,))
+
+    # decode / long_decode: one token against a seq_len cache
+    cache_like = jax.eval_shape(
+        lambda: model.init_cache(B, S,
+                                 **({"src_len": S} if cfg.family == "audio"
+                                    else {})))
+    cs = cache_shardings(cache_like, cfg, mesh)
+    tok_like = jax.ShapeDtypeStruct((B,), jnp.int32)
+    ts = NamedSharding(mesh, P(b_axes) if _div(
+        B, b_axes, dict(zip(mesh.axis_names, mesh.devices.shape))) else P())
+
+    def serve_step(params, token, table, cache, pos):
+        return model.decode_step(params, token, table, cache, pos)
+
+    pos_like = jax.ShapeDtypeStruct((), jnp.int32)
+    return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg, shape=shape,
+                fn=serve_step,
+                args=(params_like, tok_like, table_like, cache_like,
+                      pos_like),
+                in_shardings=(ps, ts, rep, cs, rep),
+                out_shardings=(None, cs, rep), donate=(3,))

@@ -1,0 +1,66 @@
+"""Training launcher: the production entry point.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama_1_1b \
+        --smoke --steps 50 [--mesh 4x2] [--resume]
+
+On a real pod: omit --smoke, pass --mesh 16x16 (the process count must
+match); this box runs the same code path on the smoke configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import get_config, get_smoke
+from repro.configs.base import TrainConfig
+from repro.core.session import XFASession
+from repro.data.pipeline import SyntheticLMData
+from repro.models import build_model
+from repro.parallel.axes import runtime_mesh
+from repro.runtime.trainer import Trainer
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="", help="e.g. 16x16 or 2x16x16")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="artifacts/train")
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(shape)]
+        mesh = jax.make_mesh(shape, axes)
+
+    model = build_model(cfg, impl="auto")
+    tcfg = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
+                       warmup_steps=max(args.steps // 10, 1),
+                       microbatches=args.microbatches,
+                       ckpt_interval=args.ckpt_interval)
+    trainer = Trainer(model, tcfg,
+                      CheckpointManager(args.ckpt_dir, async_save=True),
+                      session=XFASession(device_spec=model.fold_spec))
+    data = SyntheticLMData(cfg, args.batch, args.seq)
+    with runtime_mesh(mesh):
+        state, metrics = trainer.run(jax.random.key(0), data, args.steps,
+                                     resume=args.resume)
+    print(f"done: {metrics}")
+    print(trainer.session.report().render(components=("app",)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

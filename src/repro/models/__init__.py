@@ -1,0 +1,3 @@
+"""Model zoo: pure-functional JAX model families behind api.build_model."""
+from .api import Model, build_model
+from .layers import Runtime

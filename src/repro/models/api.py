@@ -1,0 +1,118 @@
+"""build_model(cfg) — one uniform handle over every architecture family.
+
+A Model bundles the family's pure functions behind a stable signature so the
+launcher, trainer, server, dry-run and benchmarks never dispatch on family:
+
+    model.init(key)                          -> params
+    model.loss_fn(params, batch, table)      -> (loss, (metrics, table))
+    model.init_cache(batch, max_len)         -> cache pytree
+    model.prefill(params, batch, table, cache) -> (logits, cache, table)
+    model.decode_step(params, tok, table, cache, pos) -> (logits, cache, table)
+    model.batch_spec(shape)                  -> ShapeDtypeStruct pytree
+    model.fold_spec                          -> frozen DeviceFoldSpec
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.device_fold import DeviceFoldSpec
+
+from . import encdec, mamba, transformer, xlstm
+from .layers import Runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    rt: Runtime
+    fold_spec: DeviceFoldSpec
+    init: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def batch_spec(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for a training batch (dry-run safe)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        text_s = S - cfg.n_patches if cfg.family == "vlm" else S
+        spec = {
+            "tokens": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, text_s), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, text_s), jnp.float32),
+        }
+        if cfg.family == "vlm":
+            spec["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.frontend_dim), jnp.float32)
+        if cfg.family == "audio":
+            spec["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.frontend_dim), jnp.float32)
+        return spec
+
+    def cache_spec(self, batch: int, max_len: int) -> Any:
+        """ShapeDtypeStructs for the serving cache (no allocation)."""
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+    def table(self):
+        return self.fold_spec.init_table()
+
+
+def _fold_spec(cfg: ModelConfig, declare) -> DeviceFoldSpec:
+    spec = DeviceFoldSpec()
+    declare(spec, cfg)
+    return spec.freeze()
+
+
+def build_model(cfg: ModelConfig, impl: str = "auto") -> Model:
+    cfg = cfg.validate()
+    if cfg.family in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif cfg.family == "hybrid":
+        mod = mamba
+    elif cfg.family == "ssm":
+        mod = xlstm
+    elif cfg.family == "audio":
+        mod = encdec
+    else:
+        raise ValueError(cfg.family)
+
+    spec = _fold_spec(cfg, mod.declare_fold_slots)
+    rt = Runtime(cfg=cfg, impl=impl, fold_spec=spec)
+
+    def init(key):
+        return mod.init_params(key, cfg)
+
+    def loss_fn(params, batch, table):
+        return mod.loss_fn(params, batch, rt, table)
+
+    def init_cache(batch, max_len, src_len: int = 0):
+        if cfg.family == "audio":
+            return encdec.init_cache(cfg, batch, max_len, src_len=src_len)
+        if cfg.family == "ssm":
+            return xlstm.init_cache(cfg, batch, max_len)
+        if cfg.family == "hybrid":
+            return mamba.init_cache(cfg, batch, max_len)
+        return transformer.init_cache(cfg, batch, max_len)
+
+    def prefill(params, batch, table, cache):
+        extra = {}
+        if cfg.family == "audio":
+            extra["frames"] = batch["frames"]
+        elif cfg.family == "vlm":
+            extra["prefix_embeds"] = transformer._project_patches(
+                params, batch["patches"], rt)
+        return mod.prefill(params, batch["tokens"], rt, table, cache, **extra)
+
+    def decode_step(params, token, table, cache, pos):
+        return mod.decode_step(params, token, rt, table, cache, pos)
+
+    return Model(cfg=cfg, rt=rt, fold_spec=spec, init=init, loss_fn=loss_fn,
+                 init_cache=init_cache, prefill=prefill,
+                 decode_step=decode_step)

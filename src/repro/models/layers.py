@@ -1,0 +1,397 @@
+"""Shared model building blocks — pure-functional JAX, params as dicts.
+
+Conventions:
+  * init_* (key, cfg) -> param dict; leaf names match parallel/sharding.RULES.
+  * apply functions are pure; dtype policy: params in cfg.param_dtype,
+    compute in cfg.compute_dtype, reductions/softmax in f32.
+  * every block wraps itself in jax.named_scope(<component>) — that is the
+    XFA L3 hook: compiled-HLO collectives inherit the scope via op_name.
+  * kernel hot-spots route through repro.kernels.ops (Pallas on TPU, oracle
+    on CPU), which also registers analytic FLOPs with the XFA static layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.device_fold import annotate_cost
+from repro.kernels import ops
+from repro.parallel.axes import axis_size, shard
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Per-call runtime knobs threaded alongside the config."""
+    cfg: ModelConfig
+    impl: str = "auto"            # kernel impl: auto | ref | pallas
+    fold_spec: Any = None         # DeviceFoldSpec or None
+    decode: bool = False
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.cfg.compute_dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ------------------------------------------------------------------ misc ----
+def linear(p: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.einsum("...i,io->...o", x, p.astype(x.dtype))
+
+
+@jax.custom_vjp
+def _bf16_grad_barrier(x):
+    """Identity whose COTANGENT is forced to bf16.
+
+    f32 casts inside blocks (rope, silu, softmax) leak f32 cotangents back
+    to the TP dx all-reduces (measured: every [B,S,d] backward all-reduce in
+    the train HLO was f32 — EXPERIMENTS.md §Perf). Placing this barrier on
+    block outputs halves that wire traffic; bf16 gradient reduction is
+    standard practice at scale."""
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, ct):
+    return (ct.astype(jnp.bfloat16).astype(ct.dtype)
+            if ct.dtype == jnp.float32 else ct,)
+
+
+_bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+def grad_barrier(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if getattr(cfg, "bf16_grad_reduce", False):
+        return _bf16_grad_barrier(x)
+    return x
+
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Params:
+    return {"scale": jnp.ones((d or cfg.d_model,), pdtype(cfg))}
+
+
+def norm(p: Params, x: jax.Array, rt: Runtime) -> jax.Array:
+    with jax.named_scope("norm"):
+        return ops.rmsnorm(x, p["scale"], eps=rt.cfg.norm_eps, impl=rt.impl)
+
+
+# ------------------------------------------------------------------ rope ----
+def rope_tables(cfg: ModelConfig, positions: jax.Array, dim: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """positions [S] (or [B,S]) -> cos/sin [..., S, dim//2], f32."""
+    half = dim // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x [..., S, D]; cos/sin broadcastable to [..., S, D//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ----
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, h = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    if cfg.mla:
+        qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wq": _init(ks[0], (d, cfg.n_heads * qd), dt),
+            "wkv_a": _init(ks[1], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), dt),
+            "wkv_b": _init(ks[2], (cfg.kv_lora_rank,
+                                   cfg.n_heads * (cfg.qk_nope_dim
+                                                  + cfg.v_head_dim)), dt),
+            "wo": _init(ks[3], (cfg.n_heads * cfg.v_head_dim, d), dt),
+        }
+        return {"attn": p}
+    p = {
+        "wq": _init(ks[0], (d, cfg.n_heads * h), dt),
+        "wk": _init(ks[1], (d, cfg.n_kv_heads * h), dt),
+        "wv": _init(ks[2], (d, cfg.n_kv_heads * h), dt),
+        "wo": _init(ks[3], (cfg.n_heads * h, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((h,), dt)
+        p["k_norm"] = jnp.ones((h,), dt)
+    return {"attn": p}
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int, dtype) -> Params:
+    """Stacked (scan-compatible) KV cache for n_layers layers."""
+    h = cfg.head_dim_
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank),
+                             dtype),
+            "krope": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim),
+                               dtype),
+        }
+    return {
+        "k": jnp.zeros((n_layers, batch, cfg.n_kv_heads, max_len, h), dtype),
+        "v": jnp.zeros((n_layers, batch, cfg.n_kv_heads, max_len, h), dtype),
+    }
+
+
+def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
+              cache: Optional[Params] = None, pos: Optional[jax.Array] = None,
+              kv: Optional[jax.Array] = None, causal: bool = True,
+              return_kv: bool = False
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA/MQA (optionally qk-norm) attention.
+
+    x: [B, S, d]; kv: cross-attention source [B, Sk, d] (None = self-attn);
+    cache+pos: single-layer KV cache for decode (S == 1);
+    return_kv: return this call's post-rope K/V (prefill cache building).
+    Returns (y [B, S, d], cache-or-kv).
+    """
+    if rt.cfg.mla:
+        return mla_attention(p, x, rt, positions, cache, pos,
+                             return_kv=return_kv)
+    cfg = rt.cfg
+    ap = p["attn"]
+    B, S, d = x.shape
+    h = cfg.head_dim_
+    with jax.named_scope("attention"):
+        q = linear(ap["wq"], x).reshape(B, S, cfg.n_heads, h)
+        src = x if kv is None else kv
+        Sk = src.shape[1]
+        k = linear(ap["wk"], src).reshape(B, Sk, cfg.n_kv_heads, h)
+        v = linear(ap["wv"], src).reshape(B, Sk, cfg.n_kv_heads, h)
+        annotate_cost("attention", "attention", "qkv_proj",
+                      flops=2.0 * B * S * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * h)
+        if cfg.qk_norm:
+            q = ops.rmsnorm(q, ap["q_norm"], eps=cfg.norm_eps, impl=rt.impl)
+            k = ops.rmsnorm(k, ap["k_norm"], eps=cfg.norm_eps, impl=rt.impl)
+        if kv is None:  # RoPE on self-attention only
+            with jax.named_scope("rope"):
+                cos, sin = rope_tables(cfg, positions, h)
+                q = apply_rope(q.swapaxes(1, 2), cos, sin)       # [B,H,S,h]
+                k = apply_rope(k.swapaxes(1, 2), cos, sin)
+        else:
+            q = q.swapaxes(1, 2)
+            k = k.swapaxes(1, 2)
+        v = v.swapaxes(1, 2)
+        q = shard(q, "batch", "model", None, None)
+        k = shard(k, "batch", "model" if cfg.n_kv_heads > 1 else None,
+                  None, None)
+
+        if cache is not None:
+            # decode: append this step's k/v at `pos`, attend to the prefix
+            assert S == 1
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+            kv_len = jnp.full((B,), pos + 1, jnp.int32)
+            o = ops.decode_attention(q[:, :, 0], ck, cv, kv_len=kv_len,
+                                     impl=rt.impl)
+            o = o[:, None] if o.ndim == 3 else o   # [B,1,Hq,h] fmt below
+            o = o.reshape(B, 1, cfg.n_heads, h)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            o = ops.attention(q, k, v, causal=causal and kv is None,
+                              impl=rt.impl)
+            o = o.swapaxes(1, 2)                                 # [B,S,Hq,h]
+            new_cache = {"k": k, "v": v} if return_kv else None
+        y = linear(ap["wo"], o.reshape(B, S, cfg.n_heads * h))
+        annotate_cost("attention", "attention", "o_proj",
+                      flops=2.0 * B * S * cfg.n_heads * h * d)
+        return shard(y, "batch", "seq", None), new_cache
+
+
+def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
+                  cache: Optional[Params] = None,
+                  pos: Optional[jax.Array] = None,
+                  return_kv: bool = False
+                  ) -> Tuple[jax.Array, Optional[Params]]:
+    """Multi-head Latent Attention (DeepSeek-V2).
+
+    Prefill/train: expand the latent into full per-head K/V.
+    Decode: matrix-absorbed latent attention — the cache stores ONLY
+    (c_kv [B,S,r], k_rope [B,S,dr]); queries are projected into the latent
+    space, and the decode kernel runs with a single latent 'kv head'."""
+    cfg = rt.cfg
+    ap = p["attn"]
+    B, S, d = x.shape
+    nh, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    with jax.named_scope("attention"):
+        q = linear(ap["wq"], x).reshape(B, S, nh, dn + dr)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        kv_a = linear(ap["wkv_a"], x)                      # [B,S,r+dr]
+        c_kv, k_rope = kv_a[..., :r], kv_a[..., r:]
+        with jax.named_scope("rope"):
+            cos, sin = rope_tables(cfg, positions, dr)
+            q_rope = apply_rope(q_rope.swapaxes(1, 2), cos, sin)  # [B,nh,S,dr]
+            k_rope = apply_rope(k_rope[:, None], cos, sin)        # [B,1,S,dr]
+        annotate_cost("attention", "attention", "mla_proj",
+                      flops=2.0 * B * S * d * (nh * (dn + dr) + r + dr))
+
+        wkv_b = ap["wkv_b"].reshape(r, nh, dn + dv)
+        wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]      # [r,nh,dn],[r,nh,dv]
+
+        if cache is not None:
+            assert S == 1
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype),
+                (0, pos, 0))
+            # absorb: q_latent = q_nope @ wk_b^T  -> [B,nh,r]
+            q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                               wk_b.astype(jnp.float32)).astype(x.dtype)
+            q_full = jnp.concatenate([q_lat, q_rope[:, :, 0]], -1)  # [B,nh,r+dr]
+            k_full = jnp.concatenate([cc, cr], -1)[:, None]         # [B,1,S,r+dr]
+            # v = c_kv (latent); pad to r+dr so k/v share a kernel shape
+            v_lat = jnp.pad(cc, ((0, 0), (0, 0), (0, dr)))[:, None]
+            kv_len = jnp.full((B,), pos + 1, jnp.int32)
+            scale = (dn + dr) ** -0.5
+            o_lat = ops.decode_attention(q_full, k_full, v_lat, kv_len=kv_len,
+                                         sm_scale=scale, impl=rt.impl)
+            o_lat = o_lat[..., :r]                                  # [B,nh,r]
+            o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(jnp.float32),
+                           wv_b.astype(jnp.float32)).astype(x.dtype)
+            o = o[:, None]                                          # [B,1,nh,dv]
+            new_cache = {"ckv": cc, "krope": cr}
+        else:
+            from repro.parallel.axes import shard_dims
+            _ch = lambda t: shard_dims(t, {0: "batch", 1: "model"})
+            # expand the latent in COMPUTE dtype with heads pinned to the TP
+            # axis: the f32-staged version produced a 2.1 GB f32 all-gather
+            # per layer (220 GB/step on deepseek train_4k — EXPERIMENTS.md
+            # §Perf deepseek iteration 2)
+            k_nope = _ch(jnp.einsum("bsr,rhd->bhsd", c_kv,
+                                    wk_b.astype(c_kv.dtype)))
+            v = _ch(jnp.einsum("bsr,rhd->bhsd", c_kv,
+                               wv_b.astype(c_kv.dtype)))
+            k = _ch(jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope, (B, nh, S, dr))], -1))
+            qq = _ch(jnp.concatenate([q_nope.swapaxes(1, 2), q_rope], -1))
+            # pad v (dv) up to qk dim so the flash kernel sees equal D
+            dq = dn + dr
+            v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dq - dv)))
+            o = ops.attention(qq, k, v_p, causal=True, sm_scale=dq ** -0.5,
+                              impl=rt.impl)[..., :dv]
+            o = o.swapaxes(1, 2)                                    # [B,S,nh,dv]
+            new_cache = ({"ckv": c_kv, "krope": k_rope[:, 0]}
+                         if return_kv else None)
+        y = linear(ap["wo"], o.reshape(B, S, nh * dv))
+        return shard(y, "batch", "seq", None), new_cache
+
+
+# ------------------------------------------------------------------- mlp ----
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    p = {"w_up": _init(ks[1], (d, f), dt), "w_down": _init(ks[2], (f, d), dt)}
+    if cfg.mlp_gated:
+        p["w_gate"] = _init(ks[0], (d, f), dt)
+    return {"mlp": p}
+
+
+def mlp(p: Params, x: jax.Array, rt: Runtime) -> jax.Array:
+    mp = p["mlp"]
+    cfg = rt.cfg
+    with jax.named_scope("mlp"):
+        if getattr(cfg, "manual_tp", False):
+            from repro.parallel.tp import col_row_mlp, manual_tp_available
+            f = mp["w_up"].shape[1]
+            if manual_tp_available(f):
+                nmat = 3 if cfg.mlp_gated else 2
+                annotate_cost("mlp", "mlp", "ffn",
+                              flops=2.0 * x.shape[0] * x.shape[1]
+                              * cfg.d_model * f * nmat)
+                y = col_row_mlp(x, mp["w_up"], mp["w_down"],
+                                mp.get("w_gate"), cfg.mlp_gated)
+                return shard(y, "batch", "seq", None)
+        up = linear(mp["w_up"], x)
+        if cfg.mlp_gated:
+            act = jax.nn.silu(linear(mp["w_gate"], x).astype(jnp.float32))
+            hidden = (act * up.astype(jnp.float32)).astype(x.dtype)
+        else:
+            hidden = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+        hidden = shard(hidden, "batch", "seq", "model")
+        y = linear(mp["w_down"], hidden)
+        f = mp["w_up"].shape[1]
+        nmat = 3 if cfg.mlp_gated else 2
+        annotate_cost("mlp", "mlp", "ffn",
+                      flops=2.0 * x.shape[0] * x.shape[1] * cfg.d_model * f * nmat)
+        return shard(y, "batch", "seq", None)
+
+
+# ----------------------------------------------------------------- embed ----
+def init_embed(key, cfg: ModelConfig) -> Params:
+    return {"embed": {"table": _init(key, (cfg.vocab, cfg.d_model),
+                                     pdtype(cfg), scale=1.0)}}
+
+
+def embed(p: Params, tokens: jax.Array, rt: Runtime) -> jax.Array:
+    with jax.named_scope("embed"):
+        x = jnp.take(p["embed"]["table"], tokens, axis=0).astype(rt.cdtype)
+        annotate_cost("embed", "embed", "lookup", bytes=float(x.size * 2))
+        return shard(x, "batch", "seq", None)
+
+
+def init_lm_head(key, cfg: ModelConfig) -> Params:
+    if cfg.tie_embeddings:
+        return {}
+    return {"lm_head": {"w": _init(key, (cfg.d_model, cfg.vocab), pdtype(cfg))}}
+
+
+def lm_head(p: Params, x: jax.Array, rt: Runtime) -> jax.Array:
+    with jax.named_scope("lm_head"):
+        w = (p["embed"]["table"].T if rt.cfg.tie_embeddings
+             else p["lm_head"]["w"])
+        logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+        annotate_cost("lm_head", "lm_head", "proj",
+                      flops=2.0 * x.shape[0] * x.shape[1] * rt.cfg.d_model
+                      * rt.cfg.vocab)
+        return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL in f32; mask: [B, S] 1=count.
+
+    Vocab-sharding safe: the gold logit is extracted by a one-hot
+    CONTRACTION over the vocab dim (fuses to iota+select+reduce and keeps
+    the vocab dim sharded under SPMD), never a take_along_axis gather that
+    would force an all-gather of [B, S, V] logits."""
+    with jax.named_scope("loss"):
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        onehot = jax.nn.one_hot(labels, lf.shape[-1], dtype=lf.dtype)
+        gold = jnp.einsum("bsv,bsv->bs", lf, onehot)
+        nll = lse - gold
+        if mask is None:
+            return jnp.mean(nll)
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,343 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid backbone.
+
+Mamba2 block [arXiv:2405.21060]: in_proj -> (z, x, B, C, dt); causal
+depthwise conv over (x, B, C); silu; SSD scan (Pallas kernel on TPU, chunked
+jnp oracle on CPU — kernels/ops.ssd_scan); D skip; silu(z) gate; group
+RMSNorm; out_proj.
+
+Zamba2 [arXiv:2411.15242]: a stack of Mamba2 layers with ONE weight-tied
+attention(+MLP) block applied every `attn_every` layers. The shared block's
+params are closed over (not scanned); the Mamba stack is scanned as
+[n_super, attn_every, ...]. DESIGN.md records the simplification vs the
+published model (single shared block, per-invocation LoRA omitted).
+
+Decode state is O(1) in sequence length: conv tail [B, K-1, ch] + SSD state
+h [B, H, N, P] per layer; the shared attention block keeps a standard KV
+cache per invocation ([n_super, B, Hkv, S, hd]) — for long_500k that cache is
+what gets sequence-sharded (context parallelism).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.device_fold import DeviceFoldSpec, annotate_cost, scan_multiplier
+from repro.kernels import ops
+from repro.parallel.axes import shard
+
+from .layers import (Params, Runtime, _init, attention, cross_entropy, embed,
+                     init_attention, init_embed, init_lm_head, init_mlp,
+                     init_norm, lm_head, linear, mlp, norm, pdtype)
+
+
+# ------------------------------------------------------------ mamba block ----
+def init_mamba_block(key, cfg: ModelConfig) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner_, cfg.ssm_state
+    heads = cfg.n_ssm_heads
+    ks = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    conv_ch = di + 2 * n
+    p = {
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + heads), dt),
+        "conv_w": _init(ks[1], (cfg.conv_kernel, conv_ch), dt,
+                        scale=cfg.conv_kernel ** -0.5),
+        "out_proj": _init(ks[2], (di, d), dt),
+        "a_log": jnp.zeros((heads,), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.full((heads,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+    }
+    return {"norm1": init_norm(cfg), "ssm": p}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [B, L, ch], w: [K, ch].
+    state: [B, K-1, ch] tail of previous tokens (decode). Returns (y, new
+    state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # [B, L+K-1, ch]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return y, new_state
+
+
+def mamba_block(p: Params, x: jax.Array, rt: Runtime,
+                state: Optional[Params] = None, return_state: bool = False):
+    """x: [B, L, d] -> (y, new_state).
+
+    state None = full-sequence mode (training/prefill); return_state=True
+    additionally materializes the post-sequence (conv tail, SSD h) state so
+    prefill can hand off to decode."""
+    cfg = rt.cfg
+    sp = p["ssm"]
+    B, L, d = x.shape
+    di, n, heads = cfg.d_inner_, cfg.ssm_state, cfg.n_ssm_heads
+    ph = cfg.ssm_head_dim
+    with jax.named_scope("ssm"):
+        h = norm(p["norm1"], x, rt)
+        proj = linear(sp["in_proj"], h)
+        z = proj[..., :di]
+        xbc = proj[..., di:di + di + 2 * n]
+        dt_raw = proj[..., -heads:]
+        annotate_cost("ssm", "ssm", "in_proj",
+                      flops=2.0 * B * L * d * (2 * di + 2 * n + heads))
+
+        conv_state = state["conv"] if state is not None else None
+        xbc, new_conv = _causal_conv(xbc, sp["conv_w"].astype(x.dtype),
+                                     conv_state)
+        xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+        xs = xbc[..., :di].reshape(B, L, heads, ph)
+        b_mat = xbc[..., di:di + n]
+        c_mat = xbc[..., di + n:]
+
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + sp["dt_bias"][None, None])
+        a = -jnp.exp(sp["a_log"])
+
+        if state is None:
+            y, h_final = ops.ssd_scan(xs, dt, a, b_mat, c_mat,
+                                      chunk=min(cfg.ssm_chunk, L),
+                                      impl=rt.impl)
+            new_ssm = h_final
+            if return_state:
+                # conv tail must be the PRE-silu raw conv inputs
+                raw_tail = proj[..., di:di + di + 2 * n][:, -(cfg.conv_kernel - 1):]
+                conv_tail = raw_tail
+        else:
+            # single-step recurrence (decode): L == 1
+            h_prev = state["h"]                           # [B, H, N, P] f32
+            dt1 = dt[:, 0]                                # [B, H]
+            decay = jnp.exp(a[None] * dt1)                # [B, H]
+            dbx = jnp.einsum("bh,bn,bhp->bhnp", dt1,
+                             b_mat[:, 0].astype(jnp.float32),
+                             xs[:, 0].astype(jnp.float32))
+            h_new = decay[..., None, None] * h_prev + dbx
+            y = jnp.einsum("bn,bhnp->bhp", c_mat[:, 0].astype(jnp.float32),
+                           h_new)[:, None].astype(x.dtype)
+            new_ssm = h_new
+            y = y.reshape(B, 1, heads, ph)
+
+        y = y.astype(jnp.float32) + sp["d_skip"][None, None, :, None] \
+            * xs.astype(jnp.float32)
+        y = y.reshape(B, L, di)
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = ops.rmsnorm(y.astype(x.dtype), sp["norm"], eps=cfg.norm_eps,
+                        impl=rt.impl)
+        out = linear(sp["out_proj"], y)
+        annotate_cost("ssm", "ssm", "out_proj", flops=2.0 * B * L * di * d)
+        if state is not None:
+            new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                         "h": new_ssm}
+        elif return_state:
+            new_state = {"conv": conv_tail, "h": new_ssm}
+        else:
+            new_state = None
+        return shard(out, "batch", "seq", None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, n_layers: int,
+                     dtype=jnp.float32) -> Params:
+    di, n = cfg.d_inner_, cfg.ssm_state
+    heads, ph = cfg.n_ssm_heads, cfg.ssm_head_dim
+    conv_ch = di + 2 * n
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.conv_kernel - 1, conv_ch),
+                          dtype),
+        "h": jnp.zeros((n_layers, batch, heads, n, ph), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------- zamba2 hybrid ----
+def init_params(key, cfg: ModelConfig) -> Params:
+    """Zamba2: scanned mamba stack [n_super, attn_every, ...] + ONE shared
+    attention/MLP block."""
+    assert cfg.attn_every > 0
+    n_super = cfg.n_layers // cfg.attn_every
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    p.update(init_embed(ks[0], cfg))
+    p.update(init_lm_head(ks[1], cfg))
+    p["final_norm"] = init_norm(cfg)
+    lkeys = jax.random.split(ks[2], cfg.n_layers).reshape(
+        n_super, cfg.attn_every)
+    stack = jax.vmap(jax.vmap(
+        functools.partial(init_mamba_block, cfg=cfg)))(lkeys)
+    p["stack"] = {"stack": stack}
+    shared: Dict[str, Any] = {"norm1": init_norm(cfg), "norm2": init_norm(cfg)}
+    shared.update(init_attention(ks[3], cfg))
+    shared.update(init_mlp(ks[4], cfg))
+    p["shared_attn"] = shared
+    return p
+
+
+def _shared_block(shared: Params, x: jax.Array, rt: Runtime,
+                  positions: jax.Array, cache=None, pos=None):
+    h = norm(shared["norm1"], x, rt)
+    a, new_cache = attention(shared, h, rt, positions, cache=cache, pos=pos)
+    x = x + a
+    h = norm(shared["norm2"], x, rt)
+    x = x + mlp(shared, h, rt)
+    return x, new_cache
+
+
+def forward(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            prefix_embeds=None):
+    cfg = rt.cfg
+    n_super = cfg.n_layers // cfg.attn_every
+    x = embed(p, tokens, rt)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    shared = p["shared_attn"]
+
+    def super_body(carry, super_p):
+        x, table = carry
+
+        def inner(carry2, layer_p):
+            x2, = carry2
+            y, _ = mamba_block(layer_p, x2, rt)
+            return (x2 + y,), None
+
+        with scan_multiplier(cfg.attn_every):
+            (x,), _ = jax.lax.scan(inner, (x,), super_p)
+        x, _ = _shared_block(shared, x, rt, positions)
+        return (x, table), None
+
+    if cfg.remat != "none":
+        super_body = jax.checkpoint(
+            super_body, policy=jax.checkpoint_policies.dots_saveable
+            if cfg.remat == "dots_saveable" else None)
+    with scan_multiplier(n_super):
+        (x, table), _ = jax.lax.scan(super_body, (x, table),
+                                     p["stack"]["stack"])
+    x = norm(p["final_norm"], x, rt)
+    return x, table, jnp.float32(0.0)
+
+
+def loss_fn(p: Params, batch, rt: Runtime, table: jax.Array):
+    x, table, aux = forward(p, batch["tokens"], rt, table)
+    logits = lm_head(p, x, rt)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, ({"loss": loss, "aux_loss": aux}, table)
+
+
+# -------------------------------------------------------------- serving ----
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    n_super = cfg.n_layers // cfg.attn_every
+    hd = cfg.head_dim_
+    return {
+        "ssm": init_mamba_state(cfg, batch, cfg.n_layers, dtype),
+        "attn_k": jnp.zeros((n_super, batch, cfg.n_kv_heads, max_len, hd),
+                            dtype),
+        "attn_v": jnp.zeros((n_super, batch, cfg.n_kv_heads, max_len, hd),
+                            dtype),
+    }
+
+
+def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            cache: Params, prefix_embeds=None):
+    cfg = rt.cfg
+    n_super = cfg.n_layers // cfg.attn_every
+    k = cfg.attn_every
+    x = embed(p, tokens, rt)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    shared = p["shared_attn"]
+    ssm0 = jax.tree.map(
+        lambda a: a.reshape((n_super, k) + a.shape[1:]), cache["ssm"])
+
+    def super_body(carry, inp):
+        x, table = carry
+        super_p, ssm_seg = inp
+
+        def inner(carry2, inp2):
+            x2, = carry2
+            layer_p, st = inp2
+            y, new_st = mamba_block(layer_p, x2, rt, return_state=True)
+            new_st = {"conv": new_st["conv"].astype(st["conv"].dtype),
+                      "h": new_st["h"]}
+            return (x2 + y,), new_st
+
+        with scan_multiplier(k):
+            (x,), new_seg = jax.lax.scan(inner, (x,), (super_p, ssm_seg))
+        h2 = norm(shared["norm1"], x, rt)
+        a, kv = attention(shared, h2, rt, positions, return_kv=True)
+        x = x + a
+        h2 = norm(shared["norm2"], x, rt)
+        x = x + mlp(shared, h2, rt)
+        return (x, table), (new_seg, kv)
+
+    with scan_multiplier(n_super):
+        (x, table), (new_ssm, kvs) = jax.lax.scan(
+            super_body, (x, table), (p["stack"]["stack"], ssm0))
+
+    x = norm(p["final_norm"], x, rt)
+    logits = lm_head(p, x[:, -1:], rt)[:, 0]
+    ck = jax.lax.dynamic_update_slice(
+        cache["attn_k"], kvs["k"].astype(cache["attn_k"].dtype),
+        (0, 0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["attn_v"], kvs["v"].astype(cache["attn_v"].dtype),
+        (0, 0, 0, 0, 0))
+    new_cache = {
+        "ssm": jax.tree.map(
+            lambda a: a.reshape((n_super * k,) + a.shape[2:]), new_ssm),
+        "attn_k": ck, "attn_v": cv,
+    }
+    return logits, new_cache, table
+
+
+def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
+                cache: Params, pos: jax.Array):
+    cfg = rt.cfg
+    n_super = cfg.n_layers // cfg.attn_every
+    k = cfg.attn_every
+    x = embed(p, token[:, None], rt)
+    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    shared = p["shared_attn"]
+    ssm0 = jax.tree.map(
+        lambda a: a.reshape((n_super, k) + a.shape[1:]), cache["ssm"])
+
+    def super_body(carry, inp):
+        x, table = carry
+        super_p, ssm_seg, kc, vc = inp
+
+        def inner(carry2, inp2):
+            x2, = carry2
+            layer_p, st = inp2
+            y, new_st = mamba_block(layer_p, x2, rt, state=st)
+            return (x2 + y,), new_st
+
+        with scan_multiplier(k):
+            (x,), new_seg = jax.lax.scan(inner, (x,), (super_p, ssm_seg))
+        x, new_kv = _shared_block(shared, x, rt, positions,
+                                  cache={"k": kc, "v": vc}, pos=pos)
+        return (x, table), (new_seg, new_kv["k"], new_kv["v"])
+
+    with scan_multiplier(n_super):
+        (x, table), (new_ssm, nk, nv) = jax.lax.scan(
+            super_body, (x, table),
+            (p["stack"]["stack"], ssm0, cache["attn_k"], cache["attn_v"]))
+
+    x = norm(p["final_norm"], x, rt)
+    logits = lm_head(p, x, rt)[:, 0]
+    new_cache = {
+        "ssm": jax.tree.map(
+            lambda a: a.reshape((n_super * k,) + a.shape[2:]), new_ssm),
+        "attn_k": nk, "attn_v": nv,
+    }
+    return logits, new_cache, table
+
+
+def declare_fold_slots(spec: DeviceFoldSpec, cfg: ModelConfig) -> None:
+    spec.declare("app", "loss", "train_step", "count")

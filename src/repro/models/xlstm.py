@@ -1,0 +1,446 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, inherently sequential).
+
+mLSTM cell per head:   C_t = f_t C_{t-1} + i_t v_t k_t^T      (matrix memory)
+                       n_t = f_t n_{t-1} + i_t k_t            (normalizer)
+                       h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with f_t = sigmoid(f̃) and i_t = exp(ĩ) stabilized by the running max
+m_t = max(log f_t + m_{t-1}, ĩ_t): effective gates carry exp(·−m_t).
+
+Training runs the CHUNKWISE-parallel form (quadratic within chunks, O(1)
+state across chunks — the same blocking as the Mamba2 SSD kernel, plus
+normalizer + stabilizer carries), validated against the sequential oracle in
+tests. Decode is the O(1) per-token recurrence.
+
+sLSTM is sequential by construction (hidden-to-hidden recurrence, block-
+diagonal per head) — lax.scan over time; its FLOPs are tiny (d^2 per token).
+
+Block layout (xLSTM[7:1]-style): super-blocks of (slstm_every-1 mLSTM +
+1 sLSTM), scanned; d_ff=0 — projection factors live inside the blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.device_fold import DeviceFoldSpec, annotate_cost, scan_multiplier
+from repro.kernels import ops
+from repro.parallel.axes import shard
+
+from .layers import (Params, Runtime, _init, cross_entropy, embed,
+                     init_embed, init_lm_head, init_norm, lm_head, linear,
+                     norm, pdtype)
+
+
+# --------------------------------------------------------------- mLSTM ----
+def init_mlstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    h = cfg.n_heads
+    ph = di // h
+    ks = jax.random.split(key, 6)
+    dt = pdtype(cfg)
+    p = {
+        "w_up": _init(ks[0], (d, 2 * di), dt),
+        "w_q": _init(ks[1], (h, ph, ph), dt, scale=ph ** -0.5),
+        "w_k": _init(ks[2], (h, ph, ph), dt, scale=ph ** -0.5),
+        "w_v": _init(ks[3], (h, ph, ph), dt, scale=ph ** -0.5),
+        "w_gates": _init(ks[4], (d, 2 * h), dt, scale=d ** -0.5),
+        "w_down": _init(ks[5], (di, d), dt),
+        "skip": jnp.ones((di,), dt),
+    }
+    return {"norm1": init_norm(cfg), "mlstm": p}
+
+
+def _mlstm_cell_seq(q, k, v, logf, logi):
+    """Sequential stabilized oracle. q/k/v: [B,H,L,ph]; logf/logi: [B,H,L].
+    Returns (y [B,H,L,ph], state (C, n, m))."""
+    B, H, L, ph = q.shape
+    C0 = jnp.zeros((B, H, ph, ph), jnp.float32)
+    n0 = jnp.zeros((B, H, ph), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, lf, li = inp
+        m_new = jnp.maximum(lf + m, li)
+        f_eff = jnp.exp(lf + m - m_new)
+        i_eff = jnp.exp(li - m_new)
+        C = f_eff[..., None, None] * C \
+            + i_eff[..., None, None] * (v_t[..., :, None] * k_t[..., None, :])
+        n = f_eff[..., None] * n + i_eff[..., None] * k_t
+        num = jnp.einsum("bhvk,bhk->bhv", C, q_t)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+               for a in (q, k, v, logf, logi))
+    (C, n, m), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(ys, 0, 2), (C, n, m)
+
+
+def _mlstm_cell_chunked(q, k, v, logf, logi, chunk: int,
+                        state=None, constrain: bool = False):
+    """Chunkwise-parallel stabilized mLSTM. Shapes as _mlstm_cell_seq.
+
+    Per chunk (length T): with cum = inclusive cumsum(logf),
+      intra:  w[t,s] = exp(cum[t]-cum[s]+li[s] - m_t)·(q_t.k_s), s<=t
+      inter:  C contribution exp(cum[t]+m_prev - m_t)·(C_prev q_t)
+      m_t   = max(m_prev + cum[t], runmax_t(li - cum_exclusive))  (stabilizer)
+    Carries (C, n, m) across chunks.
+    """
+    B, H, L, ph = q.shape
+    pad = (-L) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, [(0, 0), (0, 0), (0, pad)]
+                               + [(0, 0)] * (a.ndim - 3))
+        q, k, v = zp(q), zp(k), zp(v)
+        logf = jnp.pad(logf, [(0, 0), (0, 0), (0, pad)])
+        logi = jnp.pad(logi, [(0, 0), (0, 0), (0, pad)],
+                       constant_values=-1e30)
+    Lp = L + pad
+    nc = Lp // chunk
+    # pin scan operands/carries: H=4 cannot shard over model=16, so shard
+    # the head-feature dim instead — unconstrained carries replicate and
+    # re-gather q/k/v per chunk (measured 503 GB/step on xlstm prefill_32k,
+    # EXPERIMENTS.md §Perf)
+    from repro.parallel.axes import shard_dims
+    # feature-sharded (ph over model): costs a small per-chunk score psum
+    # (~9 MB) but beats both alternatives MEASURED on xlstm prefill_32k:
+    # unconstrained carries -> 503 GB/step of per-chunk re-gathers; batch-
+    # only replication -> 823 GB/step of projection-output all-gathers.
+    # TRAIN is the opposite (the bwd chunk scan pays extra dC psums:
+    # 19.3 -> 31.7 s measured) so constraints apply to the serving paths
+    # only (EXPERIMENTS.md §Perf xlstm iterations 1-4)
+    if constrain:
+        _cb = lambda t: shard_dims(t, {0: "batch"})
+        _cf = lambda t: shard_dims(t, {0: "batch", t.ndim - 1: "model"})
+    else:
+        _cb = _cf = lambda t: t
+    rs = lambda a: a.reshape(B, H, nc, chunk, *a.shape[3:])
+    qc, kc, vc = (_cf(rs(a.astype(jnp.float32))) for a in (q, k, v))
+    lfc, lic = rs(logf.astype(jnp.float32)), rs(logi.astype(jnp.float32))
+
+    cum = jnp.cumsum(lfc, axis=3)                          # inclusive [...,T]
+    # stabilizer basis: m_t = cum_t + max(m_prev, runmax_t(li_s - cum_s))
+    u = lic - cum                                          # [B,H,nc,T]
+    runmax_u = jax.lax.associative_scan(jnp.maximum, u, axis=3)
+    csum = cum[..., -1]                                    # chunk log-decay
+
+    if state is None:
+        C0 = jnp.zeros((B, H, ph, ph), jnp.float32)
+        n0 = jnp.zeros((B, H, ph), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        C, n, m = carry
+        C, n, m = _cf(C), _cf(n), _cb(m)
+        q_k, k_k, v_k, cum_k, u_k, rmu_k, li_k, cs_k = inp
+        q_k, k_k, v_k = _cf(q_k), _cf(k_k), _cf(v_k)
+        # m_t = cum_t + max(m_prev, runmax(li - cum)_t)  [B,H,T]
+        m_t = cum_k + jnp.maximum(m[..., None], rmu_k)
+        # intra-chunk weights: exp(cum_t - cum_s + li_s - m_t) causal
+        T = q_k.shape[2]
+        a = cum_k[..., :, None] + (li_k - cum_k)[..., None, :]  # [B,H,T,T]
+        w = jnp.exp(a - m_t[..., :, None])
+        tri = jnp.tril(jnp.ones((T, T), bool))
+        w = jnp.where(tri[None, None], w, 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", q_k, k_k)
+        num = jnp.einsum("bhts,bhts,bhsd->bhtd", scores, w, v_k)
+        den_l = jnp.einsum("bhts,bhts->bht", scores, w)
+        # inter-chunk
+        dec_t = jnp.exp(cum_k + m[..., None] - m_t)        # [B,H,T]
+        num = num + dec_t[..., None] * jnp.einsum("bhvk,bhtk->bhtv", C, q_k)
+        den_i = dec_t * jnp.einsum("bhk,bhtk->bht", n, q_k)
+        den = jnp.abs(den_l + den_i)
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        y = num / den[..., None]
+        # carry update at chunk end
+        m_end = m_t[..., -1]
+        w_in = jnp.exp(cum_k[..., -1:] - cum_k + li_k - m_end[..., None])
+        C = jnp.exp(cs_k + m - m_end)[..., None, None] * C \
+            + jnp.einsum("bht,bhtv,bhtk->bhvk", w_in, v_k, k_k)
+        n = jnp.exp(cs_k + m - m_end)[..., None] * n \
+            + jnp.einsum("bht,bhtk->bhk", w_in, k_k)
+        return (_cf(C), _cf(n), _cb(m_end)), y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in
+               (qc, kc, vc, cum, u, runmax_u, lic, csum))
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, Lp, ph)
+    if pad:
+        y = y[:, :, :L]
+    return y, (C, n, m)
+
+
+def _mlstm_cell_step(q, k, v, logf, logi, state):
+    """Single-token decode. q/k/v: [B,H,ph]; logf/logi: [B,H]."""
+    C, n, m = state
+    m_new = jnp.maximum(logf + m, logi)
+    f_eff = jnp.exp(logf + m - m_new)
+    i_eff = jnp.exp(logi - m_new)
+    C = f_eff[..., None, None] * C \
+        + i_eff[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    return num / den[..., None], (C, n, m_new)
+
+
+def mlstm_block(p: Params, x: jax.Array, rt: Runtime,
+                state=None, return_state: bool = False):
+    """x: [B, L, d] -> (y, new_state)."""
+    cfg = rt.cfg
+    mp = p["mlstm"]
+    B, L, d = x.shape
+    di = int(d * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    ph = di // H
+    with jax.named_scope("mlstm"):
+        h = norm(p["norm1"], x, rt)
+        up = linear(mp["w_up"], h)
+        xin, z = up[..., :di], up[..., di:]
+        gates = linear(mp["w_gates"], h).astype(jnp.float32)  # [B,L,2H]
+        logf = jax.nn.log_sigmoid(gates[..., :H]).swapaxes(1, 2)  # [B,H,L]
+        logi = gates[..., H:].swapaxes(1, 2)
+        xh = xin.reshape(B, L, H, ph).transpose(0, 2, 1, 3)   # [B,H,L,ph]
+        q = jnp.einsum("bhld,hde->bhle", xh, mp["w_q"].astype(xh.dtype))
+        k = jnp.einsum("bhld,hde->bhle", xh, mp["w_k"].astype(xh.dtype)) \
+            * ph ** -0.5
+        v = jnp.einsum("bhld,hde->bhle", xh, mp["w_v"].astype(xh.dtype))
+        annotate_cost("mlstm", "mlstm", "proj",
+                      flops=2.0 * B * L * (d * 2 * di + 3 * di * ph
+                                           + d * 2 * H + di * d))
+        if state is None or L > 1:
+            y, new_state = _mlstm_cell_chunked(
+                q, k, v, logf, logi, chunk=min(cfg.ssm_chunk, max(L, 1)),
+                state=state,
+                constrain=(state is not None or return_state))
+        else:
+            y, new_state = _mlstm_cell_step(
+                q[:, :, 0], k[:, :, 0], v[:, :, 0], logf[:, :, 0],
+                logi[:, :, 0], state)
+            y = y[:, :, None]
+        y = y.transpose(0, 2, 1, 3).reshape(B, L, di).astype(x.dtype)
+        y = y + mp["skip"].astype(x.dtype) * xin
+        y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+        out = linear(mp["w_down"], y)
+        if not (return_state or state is not None):
+            new_state = None
+        return shard(out, "batch", "seq", None), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    di = int(cfg.d_model * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    ph = di // H
+    return (jnp.zeros((batch, H, ph, ph), jnp.float32),
+            jnp.zeros((batch, H, ph), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+# --------------------------------------------------------------- sLSTM ----
+def init_slstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    ph = d // H
+    ks = jax.random.split(key, 11)
+    dt = pdtype(cfg)
+    p = {}
+    for i, g in enumerate("ifzo"):
+        p[f"w_{g}"] = _init(ks[i], (d, d), dt)
+        p[f"r_{g}"] = _init(ks[4 + i], (H, ph, ph), dt, scale=ph ** -0.5)
+    f_ffn = int(d * 4 / 3)
+    p["ffn_gate"] = _init(ks[8], (d, f_ffn), dt)
+    p["ffn_up"] = _init(ks[9], (d, f_ffn), dt)
+    p["ffn_down"] = _init(ks[10], (f_ffn, d), dt)
+    return {"norm1": init_norm(cfg), "norm2": init_norm(cfg), "slstm": p}
+
+
+def _slstm_scan(sp: Params, x: jax.Array, cfg: ModelConfig, state):
+    """x: [B, L, d]; sequential stabilized sLSTM. Returns (y, state)."""
+    B, L, d = x.shape
+    H = cfg.n_heads
+    ph = d // H
+    wi = jnp.stack([sp["w_i"], sp["w_f"], sp["w_z"], sp["w_o"]])  # [4,d,d]
+    ri = jnp.stack([sp["r_i"], sp["r_f"], sp["r_z"], sp["r_o"]])  # [4,H,p,p]
+    pre = jnp.einsum("bld,gde->bgle", x.astype(jnp.float32),
+                     wi.astype(jnp.float32))                      # [B,4,L,d]
+
+    def step(carry, t):
+        c, n, m, hprev = carry
+        hp = hprev.reshape(B, H, ph)
+        rec = jnp.einsum("bhp,ghpe->bghe", hp, ri.astype(jnp.float32))
+        gi = pre[:, :, t] + rec.reshape(B, 4, d)
+        it, ft, zt, ot = gi[:, 0], gi[:, 1], gi[:, 2], gi[:, 3]
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_eff = jnp.exp(it - m_new)
+        f_eff = jnp.exp(lf + m - m_new)
+        c = f_eff * c + i_eff * jnp.tanh(zt)
+        n = f_eff * n + i_eff
+        hnew = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, hnew), hnew
+
+    (c, n, m, hlast), ys = jax.lax.scan(step, state, jnp.arange(L))
+    return jnp.moveaxis(ys, 0, 1), (c, n, m, hlast)
+
+
+def slstm_block(p: Params, x: jax.Array, rt: Runtime,
+                state=None, return_state: bool = False):
+    cfg = rt.cfg
+    sp = p["slstm"]
+    B, L, d = x.shape
+    with jax.named_scope("slstm"):
+        h = norm(p["norm1"], x, rt)
+        st = state if state is not None else init_slstm_state(cfg, B)
+        y, new_state = _slstm_scan(sp, h, cfg, st)
+        annotate_cost("slstm", "slstm", "cell",
+                      flops=2.0 * B * L * (4 * d * d + 4 * d * d
+                                           / max(cfg.n_heads, 1)))
+        x = x + y.astype(x.dtype)
+        h2 = norm(p["norm2"], x, rt)
+        g = jax.nn.silu(linear(sp["ffn_gate"], h2).astype(jnp.float32))
+        u = linear(sp["ffn_up"], h2).astype(jnp.float32)
+        x = x + linear(sp["ffn_down"], (g * u).astype(x.dtype))
+        if not (return_state or state is not None):
+            new_state = None
+        return shard(x, "batch", "seq", None), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), jnp.float32),
+            jnp.zeros((batch, d), jnp.float32),
+            jnp.full((batch, d), -1e30, jnp.float32),
+            jnp.zeros((batch, d), jnp.float32))
+
+
+# ----------------------------------------------------------- full model ----
+def init_params(key, cfg: ModelConfig) -> Params:
+    assert cfg.slstm_every > 0
+    n_super = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {}
+    p.update(init_embed(ks[0], cfg))
+    p.update(init_lm_head(ks[1], cfg))
+    p["final_norm"] = init_norm(cfg)
+    mkeys = jax.random.split(ks[2], n_super * n_m).reshape(n_super, n_m)
+    skeys = jax.random.split(ks[3], n_super)
+    p["stack_mlstm"] = {"stack": jax.vmap(jax.vmap(
+        functools.partial(init_mlstm_block, cfg=cfg)))(mkeys)}
+    p["stack_slstm"] = {"stack": jax.vmap(
+        functools.partial(init_slstm_block, cfg=cfg))(skeys)}
+    return p
+
+
+def forward(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            prefix_embeds=None):
+    cfg = rt.cfg
+    n_super = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    x = embed(p, tokens, rt)
+
+    def super_body(carry, inp):
+        x, table = carry
+        m_stack, s_p = inp
+
+        def inner(c2, layer_p):
+            x2, = c2
+            y, _ = mlstm_block(layer_p, x2, rt)
+            return (x2 + y,), None
+
+        with scan_multiplier(n_m):
+            (x,), _ = jax.lax.scan(inner, (x,), m_stack)
+        x, _ = slstm_block(s_p, x, rt)
+        return (x, table), None
+
+    if cfg.remat != "none":
+        super_body = jax.checkpoint(
+            super_body, policy=jax.checkpoint_policies.dots_saveable
+            if cfg.remat == "dots_saveable" else None)
+    with scan_multiplier(n_super):
+        (x, table), _ = jax.lax.scan(
+            super_body, (x, table),
+            (p["stack_mlstm"]["stack"], p["stack_slstm"]["stack"]))
+    x = norm(p["final_norm"], x, rt)
+    return x, table, jnp.float32(0.0)
+
+
+def loss_fn(p: Params, batch, rt: Runtime, table: jax.Array):
+    x, table, aux = forward(p, batch["tokens"], rt, table)
+    logits = lm_head(p, x, rt)
+    loss = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, ({"loss": loss, "aux_loss": aux}, table)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None):
+    """xLSTM state is O(1) in sequence length — max_len is ignored."""
+    n_super = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+    stackm = lambda leaves: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super, n_m) + a.shape), leaves)
+    stacks = lambda leaves: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), leaves)
+    return {"mlstm": stackm(init_mlstm_state(cfg, batch)),
+            "slstm": stacks(init_slstm_state(cfg, batch))}
+
+
+def _run_with_state(p, x, rt, cache, table, single_step: bool):
+    cfg = rt.cfg
+    n_super = cfg.n_layers // cfg.slstm_every
+    n_m = cfg.slstm_every - 1
+
+    def super_body(carry, inp):
+        x, table = carry
+        m_stack, s_p, m_state, s_state = inp
+
+        def inner(c2, inp2):
+            x2, = c2
+            layer_p, st = inp2
+            y, new_st = mlstm_block(layer_p, x2, rt, state=st)
+            return (x2 + y,), new_st
+
+        with scan_multiplier(n_m):
+            (x,), new_m = jax.lax.scan(inner, (x,), (m_stack, m_state))
+        x, new_s = slstm_block(s_p, x, rt, state=s_state)
+        return (x, table), (new_m, new_s)
+
+    with scan_multiplier(n_super):
+        (x, table), (new_m, new_s) = jax.lax.scan(
+            super_body, (x, table),
+            (p["stack_mlstm"]["stack"], p["stack_slstm"]["stack"],
+             cache["mlstm"], cache["slstm"]))
+    return x, table, {"mlstm": new_m, "slstm": new_s}
+
+
+def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            cache, prefix_embeds=None):
+    x = embed(p, tokens, rt)
+    x, table, new_cache = _run_with_state(p, x, rt, cache, table, False)
+    x = norm(p["final_norm"], x, rt)
+    logits = lm_head(p, x[:, -1:], rt)[:, 0]
+    return logits, new_cache, table
+
+
+def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
+                cache, pos: jax.Array):
+    x = embed(p, token[:, None], rt)
+    x, table, new_cache = _run_with_state(p, x, rt, cache, table, True)
+    x = norm(p["final_norm"], x, rt)
+    logits = lm_head(p, x, rt)[:, 0]
+    return logits, new_cache, table
+
+
+def declare_fold_slots(spec: DeviceFoldSpec, cfg: ModelConfig) -> None:
+    spec.declare("app", "loss", "train_step", "count")

@@ -1,0 +1,3 @@
+from .adamw import (apply_updates, compress_grads_with_feedback,
+                    dequantize_int8, global_norm, init_error_state,
+                    init_state, quantize_int8, warmup_cosine)

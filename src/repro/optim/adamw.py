@@ -1,0 +1,151 @@
+"""AdamW with mixed-precision master weights, global-norm clipping, decay
+masking, warmup-cosine schedule — pure JAX (no optax on this box).
+
+State layout (all pytrees mirroring params):
+  master  f32 master copy of the (possibly bf16) params
+  mu, nu  f32 first/second moments
+  step    i32 scalar
+
+ZeRO-1: the optimizer is purely elementwise, so sharding the state over the
+data axis is a *layout* decision — parallel/zero.py produces the state
+sharding specs (params' spec + largest replicated dim sharded over 'data'),
+and pjit's out_shardings do the rest. No optimizer code changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.device_fold import annotate_cost
+
+
+def warmup_cosine(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(cfg.warmup_steps, 1)
+        prog = (step - cfg.warmup_steps) / jnp.maximum(
+            cfg.total_steps - cfg.warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        lr = jnp.where(step < cfg.warmup_steps, warm, 0.1 + 0.9 * cos)
+        return cfg.learning_rate * lr
+    return schedule
+
+
+def _decay_mask(path: str) -> float:
+    """No weight decay on norms / scalars / biases (1-D leaves)."""
+    for token in ("norm", "scale", "bias", "a_log", "dt_bias", "d_skip",
+                  "skip"):
+        if token in path:
+            return 0.0
+    return 1.0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "name", p)))
+                    for p in path)
+
+
+def init_state(params) -> Dict[str, Any]:
+    # master must be a DISTINCT buffer even when params are already f32
+    # (astype is a no-op alias; donating aliased state buffers is an error)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jnp.array(x, dtype=jnp.float32, copy=True), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"master": f32(params), "mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params, state, grads, cfg: TrainConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    with jax.named_scope("optimizer"):
+        step = state["step"] + 1
+        lr = warmup_cosine(cfg)(step)
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+            if cfg.grad_clip > 0 else 1.0
+
+        b1, b2, eps = cfg.b1, cfg.b2, cfg.eps
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        masks = jax.tree_util.tree_map_with_path(
+            lambda path, x: _decay_mask(_path_str(path)), params)
+
+        def upd(g, mu, nu, master, mask):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mu_hat = mu / bc1
+            nu_hat = nu / bc2
+            delta = mu_hat / (jnp.sqrt(nu_hat) + eps) \
+                + cfg.weight_decay * mask * master
+            master = master - lr * delta
+            return mu, nu, master
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"],
+                            state["master"], masks)
+        mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        master = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), master, params)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        annotate_cost("optimizer", "optimizer", "adamw",
+                      flops=12.0 * n_params, bytes=16.0 * n_params)
+        new_state = {"master": master, "mu": mu, "nu": nu, "step": step}
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 with error feedback) — the distributed-
+# optimization knob for collective-bound cells. quantize/dequantize are used
+# two ways: (a) in-graph QDQ before the (implicit pjit) gradient reduction to
+# bound compression error, (b) inside parallel/compress.py's shard_map
+# all-reduce where the WIRE format is genuinely int8.
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_feedback(grads, error_state):
+    """Error-feedback int8 compression: g' = Q(g + e); e' = (g + e) - g'."""
+    def comp(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat = jax.tree.map(comp, grads, error_state)
+    new_grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return new_grads, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)

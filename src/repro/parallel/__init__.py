@@ -1,0 +1,4 @@
+from .axes import (axis_size, get_runtime_mesh, named_sharding, resolve_spec,
+                   runtime_mesh, set_runtime_mesh, shard)
+from .sharding import (logical_axes_for, sharding_tree, spec_tree,
+                       validate_rules)

@@ -1,0 +1,187 @@
+"""Parameter/state sharding rules: path-pattern -> logical axes -> PartitionSpec.
+
+Every parameter leaf is matched by exactly one rule (tests enforce this).
+Scanned stacks carry a leading layer axis -> None is prepended automatically
+(detected via the '/stack' marker the model builders put in the path).
+
+The rules implement Megatron-style TP over 'model', batch DP over
+('pod','data'), EP over 'model' for experts, plus optional FSDP (params over
+'data') and ZeRO-1 (optimizer state over 'data') applied as *transforms* on
+top of the base spec — so the paper-faithful baseline and the optimized
+variants share one rule table and differ only in declared transforms.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .axes import get_rules
+
+# (regex over 'a/b/c' param path, logical axes per trailing dim of the leaf)
+# Leading scan axis handled separately. Order matters: first match wins.
+RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    # embeddings / unembedding: vocab sharded over model axis
+    (r".*/embed/table$", ("vocab", None)),
+    (r".*/lm_head/w$", (None, "vocab")),
+    # MLA projections (deepseek)
+    (r".*/attn/wq$", (None, "model")),
+    (r".*/attn/wkv_a$", (None, None)),
+    (r".*/attn/wkv_b$", (None, "model")),
+    # attention
+    (r".*/attn/w[kv]$", (None, "model")),
+    (r".*/attn/wo$", ("model", None)),
+    (r".*/attn/(q_norm|k_norm)$", (None,)),
+    # MoE expert stacks: EP over the model axis; d_ff per expert unsharded
+    # (the expert dim and d_ff cannot both map to 'model')
+    (r".*/moe/(w_gate|w_up)$", ("expert", None, None)),
+    (r".*/moe/w_down$", ("expert", None, None)),
+    (r".*/moe/router$", (None, None)),
+    (r".*/moe/shared/(w_gate|w_up)$", (None, "model")),
+    (r".*/moe/shared/w_down$", ("model", None)),
+    # dense MLP
+    (r".*/mlp/(w_gate|w_up)$", (None, "model")),
+    (r".*/mlp/w_down$", ("model", None)),
+    # mamba2
+    (r".*/ssm/in_proj$", (None, "model")),
+    (r".*/ssm/out_proj$", ("model", None)),
+    (r".*/ssm/conv_w$", (None, "model")),
+    (r".*/ssm/(a_log|dt_bias|d_skip)$", ("model",)),
+    (r".*/ssm/norm$", ("model",)),
+    # xlstm
+    (r".*/mlstm/w_up$", (None, "model")),
+    (r".*/mlstm/w_(q|k|v)$", ("model", None)),
+    (r".*/mlstm/w_gates$", (None, None)),
+    (r".*/mlstm/w_down$", ("model", None)),
+    (r".*/mlstm/skip$", ("model",)),
+    (r".*/slstm/w_(i|f|z|o)$", (None, "model")),
+    (r".*/slstm/r_(i|f|z|o)$", ("model", None)),
+    (r".*/slstm/(ffn_gate|ffn_up)$", (None, "model")),
+    (r".*/slstm/ffn_down$", ("model", None)),
+    # norms and other vectors/scalars: replicated
+    (r".*/[\w]*norm[\w]*/scale$", (None,)),
+    (r".*/bias$", (None,)),
+    # frontend stubs project precomputed embeddings into d_model
+    (r".*/frontend/w$", (None, "model")),
+]
+
+_COMPILED = [(re.compile(pat), axes) for pat, axes in RULES]
+
+
+def logical_axes_for(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    stacked = "/stack/" in path
+    base = path.replace("/stack/", "/")
+    for rx, axes in _COMPILED:
+        if rx.match(base):
+            out: Tuple[Optional[str], ...] = axes
+            if stacked:
+                out = (None,) + tuple(axes)
+            if len(out) < ndim:   # broadcast leading None (extra stack dims)
+                out = (None,) * (ndim - len(out)) + tuple(out)
+            if len(out) != ndim:
+                raise ValueError(
+                    f"rule for {path} gives {len(out)} axes, leaf has {ndim}")
+            return out
+    raise KeyError(f"no sharding rule matches param path: {path}")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/" + "/".join(parts)
+
+
+def _to_mesh_axes(logical: Tuple[Optional[str], ...], mesh: Optional[Mesh],
+                  shape: Optional[Sequence[int]] = None) -> P:
+    """Translate logical axes to mesh axes, dropping any that do not EVENLY
+    divide the dim (pjit argument shardings require divisibility; vocab
+    151655 or d_ff 2730 fall back to replicated)."""
+    rules = get_rules()
+    mesh_axes = set(mesh.axis_names) if mesh is not None else set()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    parts = []
+    for i, ax in enumerate(logical):
+        if ax is None:
+            parts.append(None)
+            continue
+        mapped = tuple(m for m in rules.get(ax, (ax,)) if m in mesh_axes)
+        if mapped and shape is not None:
+            extent = 1
+            for m in mapped:
+                extent *= sizes.get(m, 1)
+            if extent == 0 or shape[i] % extent != 0:
+                mapped = ()
+        parts.append(None if not mapped else
+                     (mapped[0] if len(mapped) == 1 else mapped))
+    return P(*parts)
+
+
+def spec_tree(params: Any, mesh: Optional[Mesh],
+              fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching `params` (arrays or ShapeDtypeStructs).
+
+    fsdp=True additionally shards the largest still-replicated dim over
+    'data' when divisible — the ZeRO-3-style transform used in perf variants.
+    """
+    dsize = 1
+    if mesh is not None:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dsize = sizes.get("data", 1)
+
+    def leaf_spec(path, leaf):
+        pstr = _path_str(path)
+        logical = logical_axes_for(pstr, len(leaf.shape))
+        spec = _to_mesh_axes(logical, mesh, leaf.shape)
+        if fsdp and mesh is not None and dsize > 1:
+            spec = _apply_fsdp(spec, leaf.shape, dsize)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def _apply_fsdp(spec: P, shape: Sequence[int], dsize: int) -> P:
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest dim not already sharded, divisible by data size
+    best, best_dim = -1, -1
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % dsize == 0 and s > best:
+            best, best_dim = s, i
+    if best_dim >= 0:
+        parts[best_dim] = "data"
+    return P(*parts)
+
+
+def sharding_tree(params: Any, mesh: Optional[Mesh], fsdp: bool = False):
+    specs = spec_tree(params, mesh, fsdp)
+    if mesh is None:
+        return specs
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_rules(params: Any) -> List[str]:
+    """Return list of param paths with no matching rule (tests assert [])."""
+    bad = []
+
+    def check(path, leaf):
+        p = _path_str(path)
+        try:
+            logical_axes_for(p, len(leaf.shape))
+        except KeyError:
+            bad.append(p)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(check, params)
+    return bad

@@ -1,0 +1,179 @@
+"""Fault tolerance: heartbeats, failure simulation, elastic re-mesh,
+straggler mitigation. Host-level logic, simulated multi-host (this box has
+one process; at 1000+ nodes the same objects run per-host with the heartbeat
+store backed by the cluster's kv-store, as documented in DESIGN.md).
+
+Design points for 1000+ nodes:
+  * HeartbeatMonitor is O(#hosts) memory and O(1) per beat (a slot write in
+    a preallocated array — the Universal Shadow Table pattern applied to
+    liveness; XFA and FT share the fold-don't-log philosophy).
+  * Elastic re-mesh: on failure, survivors re-form the largest mesh that
+    preserves the model axis (TP cannot shrink without resharding weights
+    across a different factorization) and shrink the data axis; training
+    resumes from the last checkpoint with per-leaf device_put against the
+    new sharding (ckpt.manager.restore(shardings=...)).
+  * Straggler mitigation reads per-host step-time folds (XFA host layer) and
+    flags hosts whose median step exceeds k x fleet median; the driver can
+    then drop them from the mesh proactively (same path as a failure).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import tracer as xfa
+
+
+class HeartbeatMonitor:
+    """Preallocated last-beat slots per host; misses -> declared dead."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 5.0) -> None:
+        self.n_hosts = n_hosts
+        self.timeout_s = timeout_s
+        self._last = np.full(n_hosts, time.monotonic(), dtype=np.float64)
+        self._failed = np.zeros(n_hosts, dtype=bool)
+
+    def beat(self, host: int, at: Optional[float] = None) -> None:
+        self._last[host] = time.monotonic() if at is None else at
+
+    def inject_failure(self, host: int) -> None:
+        """Test/chaos hook: host stops beating AND is marked immediately."""
+        self._failed[host] = True
+
+    def check(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        late = (now - self._last) > self.timeout_s
+        self._failed |= late
+        return [int(i) for i in np.nonzero(self._failed)[0]]
+
+    def alive(self) -> List[int]:
+        dead = set(self.check())
+        return [i for i in range(self.n_hosts) if i not in dead]
+
+
+@dataclass
+class MeshPlan:
+    """A (possibly shrunk) mesh proposal after failures."""
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    hosts: List[int]
+    lost_fraction: float
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def elastic_remesh(alive_hosts: Sequence[int], devices_per_host: int,
+                   model_axis: int, axes: Tuple[str, ...] = ("data", "model"),
+                   pod_axis: int = 1) -> MeshPlan:
+    """Largest mesh over survivors that preserves the model (TP) axis.
+
+    The data axis absorbs the shrink (DP is stateless across replicas given
+    ZeRO-1 state is re-sharded at restore). With a pod axis, whole pods are
+    dropped if partially dead (ICI within a pod is all-or-nothing)."""
+    total = len(alive_hosts) * devices_per_host
+    if total < model_axis:
+        raise RuntimeError(
+            f"cannot preserve model axis {model_axis} with {total} devices")
+    data_axis = total // model_axis
+    used_hosts = list(alive_hosts)
+    shape: Tuple[int, ...]
+    if "pod" in axes:
+        data_axis = data_axis // pod_axis
+        shape = (pod_axis, data_axis, model_axis)
+    else:
+        shape = (data_axis, model_axis)
+    lost = 1.0 - (data_axis * model_axis * (pod_axis if "pod" in axes else 1)
+                  ) / max(total, 1)
+    return MeshPlan(shape=shape, axes=axes, hosts=used_hosts,
+                    lost_fraction=max(lost, 0.0))
+
+
+@dataclass
+class StragglerReport:
+    per_host_ms: Dict[int, float]
+    median_ms: float
+    stragglers: List[int]
+    threshold: float
+
+
+class StragglerDetector:
+    """Folds per-host step times (no log — a [hosts] running summary)."""
+
+    def __init__(self, n_hosts: int, window: int = 32,
+                 threshold: float = 1.5) -> None:
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self._sums = np.zeros(n_hosts)
+        self._counts = np.zeros(n_hosts)
+
+    def observe(self, host: int, step_ms: float) -> None:
+        self._sums[host] += step_ms
+        self._counts[host] += 1
+
+    def report(self) -> StragglerReport:
+        means = np.divide(self._sums, np.maximum(self._counts, 1))
+        active = means[self._counts > 0]
+        med = float(np.median(active)) if active.size else 0.0
+        stragglers = [int(i) for i in range(self.n_hosts)
+                      if self._counts[i] > 0
+                      and means[i] > self.threshold * med > 0]
+        return StragglerReport(
+            per_host_ms={int(i): float(means[i]) for i in
+                         range(self.n_hosts) if self._counts[i] > 0},
+            median_ms=med, stragglers=stragglers,
+            threshold=self.threshold)
+
+
+class SimulatedCluster:
+    """N simulated hosts driving one shared step function — the test double
+    for the multi-host runtime. Each host is a thread: beats, steps (with an
+    injectable delay = straggler), and can be killed (= failure)."""
+
+    def __init__(self, n_hosts: int, monitor: HeartbeatMonitor,
+                 step_fn: Callable[[int, int], None],
+                 delays_s: Optional[Dict[int, float]] = None) -> None:
+        self.monitor = monitor
+        self.step_fn = step_fn
+        self.delays = delays_s or {}
+        self.n_hosts = n_hosts
+        self._kill = [threading.Event() for _ in range(n_hosts)]
+        self._threads: List[threading.Thread] = []
+        self.detector = StragglerDetector(n_hosts)
+
+    def _run(self, host: int, n_steps: int) -> None:
+        xfa.set_thread_group(f"host{host}")
+        for step in range(n_steps):
+            if self._kill[host].is_set():
+                return
+            t0 = time.monotonic()
+            if host in self.delays:
+                time.sleep(self.delays[host])
+            self.step_fn(host, step)
+            self.monitor.beat(host)
+            self.detector.observe(host, (time.monotonic() - t0) * 1e3)
+
+    def start(self, n_steps: int) -> None:
+        self._threads = [
+            threading.Thread(target=self._run, args=(h, n_steps),
+                             daemon=True, name=f"host-{h}")
+            for h in range(self.n_hosts)]
+        for t in self._threads:
+            t.start()
+
+    def kill(self, host: int) -> None:
+        self._kill[host].set()
+        self.monitor.inject_failure(host)
+
+    def join(self, timeout: float = 30.0) -> None:
+        for t in self._threads:
+            t.join(timeout=timeout)

@@ -1,0 +1,231 @@
+"""Training driver: step construction + the fault-tolerant run loop.
+
+make_train_step builds the single jitted SPMD step used by the trainer, the
+dry-run and the benchmarks — ONE code path from smoke test to 512 chips:
+
+  (train_state, batch, fold_table) -> (train_state, metrics, fold_table)
+
+with gradient microbatching (accumulation), optional int8 error-feedback
+gradient compression, AdamW, and the XFA device fold threaded through.
+
+Trainer.run is the production loop: prefetching data, dispatch, periodic
+(async) checkpointing, heartbeats, straggler folds, and crash-restart
+(resume_from_latest). Failures are injected/simulated in tests via
+runtime.fault_tolerance.SimulatedCluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.core import tracer as xfa
+from repro.core.session import XFASession
+from repro.data.pipeline import SyntheticLMData
+from repro.models.api import Model
+from repro.optim import adamw
+from repro.parallel.axes import get_runtime_mesh, named_sharding
+from repro.parallel.sharding import sharding_tree, spec_tree
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig) -> Dict[str, Any]:
+    params = model.init(key)
+    state: Dict[str, Any] = {"params": params,
+                             "opt": adamw.init_state(params)}
+    if tcfg.grad_compression == "int8":
+        state["grad_err"] = adamw.init_error_state(params)
+    return state
+
+
+def make_train_step(model: Model, tcfg: TrainConfig) -> Callable:
+    """Build the jittable step. Microbatching splits the batch on axis 0 and
+    accumulates grads in f32 (a scan, so the HLO stays small)."""
+
+    def loss_wrapper(params, batch, table):
+        return model.loss_fn(params, batch, table)
+
+    def step(state, batch, table):
+        params = state["params"]
+        n_micro = tcfg.microbatches
+
+        def split(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        if n_micro <= 1:
+            (loss, (metrics, table)), grads = jax.value_and_grad(
+                loss_wrapper, has_aux=True)(params, batch, table)
+        elif tcfg.deferred_grad_reduce:
+            # OPTIMIZED accumulation: differentiate THROUGH the microbatch
+            # scan. The backward scan accumulates weight grads in its carry
+            # as device-local partials, so the data-axis gradient all-reduce
+            # is emitted ONCE after the loop instead of once per microbatch
+            # (pjit otherwise reduces inside every iteration) — wire bytes
+            # / n_micro. The body is rematted so activations stay per-micro.
+            micro = jax.tree.map(split, batch)
+
+            def mean_loss(params, micro, table):
+                def body(carry, mb):
+                    loss_acc, table = carry
+                    l, (m, table) = model.loss_fn(params, mb, table)
+                    return (loss_acc + l / n_micro, table), m
+
+                body = jax.checkpoint(body)
+                with jax.named_scope("grads"):
+                    (loss, table), ms = jax.lax.scan(
+                        body, (jnp.float32(0.0), table), micro)
+                return loss, (jax.tree.map(lambda x: x[-1], ms), table)
+
+            (loss, (metrics, table)), grads = jax.value_and_grad(
+                mean_loss, has_aux=True)(params, micro, table)
+            metrics["loss"] = loss
+        else:
+            # paper-faithful baseline: grad-per-microbatch, reduced each time
+            micro = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_body(carry, mb):
+                g_acc, table, loss_acc = carry
+                (loss, (m, table)), g = jax.value_and_grad(
+                    loss_wrapper, has_aux=True)(params, mb, table)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro,
+                    g_acc, g)
+                return (g_acc, table, loss_acc + loss / n_micro), m
+
+            with jax.named_scope("grads"):
+                (grads, table, loss), ms = jax.lax.scan(
+                    acc_body, (zero_g, table, jnp.float32(0.0)), micro)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+            metrics["loss"] = loss
+
+        # pin grads to the PARAMS' natural sharding: without this, GSPMD
+        # folds the ZeRO-1 (data-axis) resharding INTO the dw dots and
+        # all-gathers the full f32 activations instead (measured: 220 GB/step
+        # of [B,S,d] gathers on deepseek train_4k — EXPERIMENTS.md §Perf).
+        # The explicit boundary reshards only the (much smaller) grads.
+        from repro.parallel.axes import get_runtime_mesh
+        from repro.parallel.sharding import sharding_tree
+        mesh = get_runtime_mesh()
+        if mesh is not None and tcfg.zero1:
+            nat = sharding_tree(params, mesh, fsdp=False)
+            with jax.named_scope("grads"):
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, nat)
+
+        new_state = dict(state)
+        if tcfg.grad_compression == "int8":
+            with jax.named_scope("grads"):
+                grads, new_err = adamw.compress_grads_with_feedback(
+                    grads, state["grad_err"])
+                new_state["grad_err"] = new_err
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, state["opt"], grads, tcfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        if model.fold_spec is not None:
+            table = model.fold_spec.emit(table, "app", "loss", "train_step",
+                                         "count", 1.0)
+        return new_state, metrics, table
+
+    return step
+
+
+def state_shardings(state_like, mesh, zero1: bool = True):
+    """NamedShardings for the train state: params by rule table; optimizer
+    master/moments additionally sharded over 'data' (ZeRO-1)."""
+    if mesh is None:
+        return None
+    out = {}
+    out["params"] = sharding_tree(state_like["params"], mesh, fsdp=False)
+    zshard = lambda t: sharding_tree(t, mesh, fsdp=zero1)
+    out["opt"] = {
+        "master": zshard(state_like["opt"]["master"]),
+        "mu": zshard(state_like["opt"]["mu"]),
+        "nu": zshard(state_like["opt"]["nu"]),
+        "step": named_sharding(),
+    }
+    if "grad_err" in state_like:
+        out["grad_err"] = zshard(state_like["grad_err"])
+    return out
+
+
+def batch_shardings(batch_like, mesh):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda _: named_sharding("batch"), batch_like)
+
+
+@dataclasses.dataclass
+class Trainer:
+    model: Model
+    tcfg: TrainConfig
+    ckpt: CheckpointManager
+    session: Optional[XFASession] = None
+
+    def __post_init__(self):
+        if self.session is None:
+            self.session = XFASession(device_spec=self.model.fold_spec)
+
+    @xfa.api("runtime", "compile_step")
+    def _compile(self, step_fn, state, batch, table):
+        mesh = get_runtime_mesh()
+        if mesh is None:
+            return jax.jit(step_fn, donate_argnums=(0,))
+        ss = state_shardings(state, mesh, self.tcfg.zero1)
+        bs = batch_shardings(batch, mesh)
+        ts = named_sharding()
+        return jax.jit(step_fn, in_shardings=(ss, bs, ts),
+                       out_shardings=(ss, None, ts), donate_argnums=(0,))
+
+    def run(self, key, data: SyntheticLMData, n_steps: int,
+            resume: bool = True, state: Optional[Dict] = None
+            ) -> Tuple[Dict, Dict[str, float]]:
+        """The loop: data -> dispatch -> fold -> ckpt -> heartbeat."""
+        model, tcfg = self.model, self.tcfg
+        step_fn = make_train_step(model, tcfg)
+        start_step = 0
+
+        if state is None:
+            with xfa.scope("runtime", "init_state"):
+                state = init_train_state(model, key, tcfg)
+            if resume:
+                latest = self.ckpt.latest_step()
+                if latest is not None:
+                    state, extra = self.ckpt.restore(state)
+                    start_step = int(extra.get("next_step", latest + 1))
+
+        table = model.table()
+        compiled = self._compile(step_fn, state, data.generate(0), table)
+        data.start(at_step=start_step)
+        last_metrics: Dict[str, float] = {}
+
+        for step in range(start_step, n_steps):
+            batch = next(data)
+            t0 = time.perf_counter_ns()
+            with xfa.scope("runtime", "dispatch_step"):
+                state, metrics, table = compiled(state, batch, table)
+            with xfa.scope("runtime", "device_sync", xfa.KIND_WAIT):
+                jax.block_until_ready(metrics["loss"])
+            self.session.observe_step(time.perf_counter_ns() - t0)
+
+            if tcfg.ckpt_interval and (step + 1) % tcfg.ckpt_interval == 0:
+                self.ckpt.save(step, state, extra={"next_step": step + 1})
+
+            last_metrics = {k: float(v) for k, v in metrics.items()}
+
+        data.stop()
+        self.ckpt.wait()
+        self.session.finish_device(table)
+        return state, last_metrics

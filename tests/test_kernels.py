@@ -1,0 +1,200 @@
+"""Per-kernel validation: Pallas (interpret mode) and chunked-jnp variants
+against the pure-jnp oracles, swept over shapes and dtypes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def arr(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# --------------------------------------------------------- flash attention --
+ATTN_SHAPES = [
+    # B, Hq, Hkv, Sq, Sk, D
+    (1, 1, 1, 128, 128, 32),
+    (2, 4, 2, 128, 128, 64),
+    (2, 8, 1, 256, 256, 32),    # MQA
+    (1, 6, 2, 128, 256, 32),    # cross/decode-ish Sq < Sk
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_pallas(shape, dtype, causal):
+    B, Hq, Hkv, Sq, Sk, D = shape
+    if causal and Sq != Sk:
+        pytest.skip("causal offset covered separately")
+    q, k, v = arr(B, Hq, Sq, D, dtype=dtype), arr(B, Hkv, Sk, D, dtype=dtype), \
+        arr(B, Hkv, Sk, D, dtype=dtype)
+    got = ops.attention(q, k, v, causal=causal, impl="pallas", interpret=True)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("block_k", [32, 64, 128])
+def test_attention_chunked_blocks(block_k):
+    q, k, v = arr(2, 4, 128, 32), arr(2, 2, 128, 32), arr(2, 2, 128, 32)
+    got = ref.attention_chunked(q, k, v, causal=True, block_k=block_k)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_chunked_flash_backward():
+    q, k, v = arr(2, 4, 128, 16), arr(2, 2, 128, 16), arr(2, 2, 128, 16)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention(q, k, v, causal=True)))
+
+    def loss_chunk(q, k, v):
+        return jnp.sum(jnp.sin(
+            ref.attention_chunked(q, k, v, causal=True, block_k=32)))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_chk = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_chk):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-4)
+
+
+def test_attention_softcap():
+    q, k, v = arr(1, 2, 64, 16), arr(1, 2, 64, 16), arr(1, 2, 64, 16)
+    got = ops.attention(q, k, v, causal=True, logit_softcap=30.0,
+                        impl="pallas", interpret=True)
+    want = ref.attention(q, k, v, causal=True, logit_softcap=30.0)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+# --------------------------------------------------------- decode attention --
+DEC_SHAPES = [(1, 1, 1, 128, 32), (2, 4, 2, 256, 64), (2, 8, 1, 512, 32)]
+
+
+@pytest.mark.parametrize("shape", DEC_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_pallas(shape, dtype):
+    B, Hq, Hkv, S, D = shape
+    q = arr(B, Hq, D, dtype=dtype)
+    k, v = arr(B, Hkv, S, D, dtype=dtype), arr(B, Hkv, S, D, dtype=dtype)
+    kv_len = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+    got = ops.decode_attention(q, k, v, kv_len=kv_len, impl="pallas",
+                               interpret=True)
+    want = ref.decode_attention(q, k, v, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_decode_attention_residuals_combine():
+    """Split-K: shard the KV, merge partials == unsharded decode."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 256, 32
+    q = arr(B, Hq, D)
+    k, v = arr(B, Hkv, S, D), arr(B, Hkv, S, D)
+    full = ref.decode_attention(q, k, v)
+    n_shards = 4
+    o_parts, m_parts, l_parts = [], [], []
+    for i in range(n_shards):
+        sl = slice(i * S // n_shards, (i + 1) * S // n_shards)
+        o, (m, l) = ref.decode_attention(q, k[:, :, sl], v[:, :, sl],
+                                         return_residuals=True)
+        o_parts.append(o)
+        m_parts.append(m)
+        l_parts.append(l)
+    merged = ref.combine_decode_partials(
+        jnp.stack(o_parts), jnp.stack(m_parts), jnp.stack(l_parts))
+    np.testing.assert_allclose(merged, full, atol=2e-5, rtol=2e-5)
+
+
+# ----------------------------------------------------------------- rmsnorm --
+@pytest.mark.parametrize("rows,d", [(1, 64), (37, 128), (256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas(rows, d, dtype):
+    x, w = arr(rows, d, dtype=dtype), arr(d, dtype=dtype)
+    got = ops.rmsnorm(x, w, impl="pallas", interpret=True)
+    want = ref.rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_rmsnorm_add_pallas():
+    x, r, w = arr(64, 128), arr(64, 128), arr(128)
+    y1, s1 = ops.rmsnorm_add(x, r, w, impl="pallas", interpret=True)
+    y2, s2 = ops.rmsnorm_add(x, r, w, impl="ref")
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(s1, s2, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- ssd scan --
+SSD_SHAPES = [(1, 64, 1, 16, 8, 32), (2, 128, 3, 32, 16, 32),
+              (1, 96, 2, 16, 8, 32)]  # B, L, H, P, N, chunk
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_chunked_vs_naive(shape):
+    B, L, H, P, N, chunk = shape
+    x = arr(B, L, H, P)
+    dt = jnp.abs(arr(B, L, H)) * 0.1
+    a = -jnp.abs(arr(H))
+    b, c = arr(B, L, N), arr(B, L, N)
+    y1, h1 = ref.ssd_naive(x, dt, a, b, c)
+    y2, h2 = ref.ssd_chunked(x, dt, a, b, c, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(h1, h2, atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES[:2])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_pallas(shape, dtype):
+    B, L, H, P, N, chunk = shape
+    x = arr(B, L, H, P, dtype=dtype)
+    dt = jnp.abs(arr(B, L, H)) * 0.1
+    a = -jnp.abs(arr(H))
+    b, c = arr(B, L, N, dtype=dtype), arr(B, L, N, dtype=dtype)
+    y1, h1 = ref.ssd_naive(x, dt, a, b, c)
+    y2, h2 = ops.ssd_scan(x, dt, a, b, c, chunk=chunk, impl="pallas",
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               atol=tol(dtype), rtol=20 * tol(dtype))
+    np.testing.assert_allclose(h1, h2, atol=tol(dtype), rtol=20 * tol(dtype))
+
+
+def test_ssd_pad_to_chunk():
+    """ops.ssd_scan pads L to a chunk multiple without changing results."""
+    B, L, H, P, N = 1, 50, 2, 8, 4
+    x = arr(B, L, H, P)
+    dt = jnp.abs(arr(B, L, H)) * 0.1
+    a = -jnp.abs(arr(H))
+    b, c = arr(B, L, N), arr(B, L, N)
+    y1, h1 = ref.ssd_naive(x, dt, a, b, c)
+    y2, h2 = ops.ssd_scan(x, dt, a, b, c, chunk=16, impl="ref")
+    np.testing.assert_allclose(y1, y2, atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(h1, h2, atol=2e-5, rtol=2e-4)
+
+
+def test_ssd_state_handoff():
+    """Final state from a prefix + ssd_naive(h0=...) == full run."""
+    B, L, H, P, N = 1, 64, 2, 8, 4
+    x = arr(B, L, H, P)
+    dt = jnp.abs(arr(B, L, H)) * 0.1
+    a = -jnp.abs(arr(H))
+    b, c = arr(B, L, N), arr(B, L, N)
+    y_full, h_full = ref.ssd_naive(x, dt, a, b, c)
+    _, h_half = ref.ssd_chunked(x[:, :32], dt[:, :32], a, b[:, :32],
+                                c[:, :32], chunk=16)
+    y2, h2 = ref.ssd_naive(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
+                           h0=h_half)
+    np.testing.assert_allclose(y_full[:, 32:], y2, atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(h_full, h2, atol=2e-5, rtol=2e-4)

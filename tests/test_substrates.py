@@ -1,0 +1,218 @@
+"""Substrate tests: data pipeline, checkpointing, optimizer, fault tolerance,
+sharding rules."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.manager import CheckpointManager
+from repro.configs import get_smoke, list_archs
+from repro.configs.base import TrainConfig
+from repro.data.pipeline import SyntheticLMData
+from repro.models import build_model
+from repro.optim import adamw
+from repro.parallel.sharding import spec_tree, validate_rules
+from repro.runtime.fault_tolerance import (HeartbeatMonitor, SimulatedCluster,
+                                           StragglerDetector, elastic_remesh)
+
+
+# ------------------------------------------------------------------ data ----
+class TestData:
+    def test_deterministic(self):
+        cfg = get_smoke("tinyllama_1_1b")
+        d1 = SyntheticLMData(cfg, 4, 32, seed=7)
+        d2 = SyntheticLMData(cfg, 4, 32, seed=7)
+        b1, b2 = d1.generate(5), d2.generate(5)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+    def test_steps_and_shards_differ(self):
+        cfg = get_smoke("tinyllama_1_1b")
+        d = SyntheticLMData(cfg, 4, 32)
+        assert not np.array_equal(d.generate(0)["tokens"],
+                                  d.generate(1)["tokens"])
+        d2 = SyntheticLMData(cfg, 4, 32, shard=1)
+        assert not np.array_equal(d.generate(0)["tokens"],
+                                  d2.generate(0)["tokens"])
+
+    def test_labels_are_shifted_tokens(self):
+        cfg = get_smoke("tinyllama_1_1b")
+        b = SyntheticLMData(cfg, 2, 16).generate(0)
+        assert b["tokens"].shape == b["labels"].shape
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_prefetch_iterator(self):
+        cfg = get_smoke("tinyllama_1_1b")
+        d = SyntheticLMData(cfg, 2, 16).start(at_step=3)
+        batches = [next(d) for _ in range(3)]
+        d.stop()
+        ref = SyntheticLMData(cfg, 2, 16)
+        np.testing.assert_array_equal(batches[0]["tokens"],
+                                      ref.generate(3)["tokens"])
+
+    def test_multimodal_fields(self):
+        for arch, field in (("internvl2_1b", "patches"),
+                            ("seamless_m4t_large_v2", "frames")):
+            cfg = get_smoke(arch)
+            b = SyntheticLMData(cfg, 2, 32).generate(0)
+            assert field in b and np.isfinite(b[field]).all()
+
+
+# ------------------------------------------------------------------ ckpt ----
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        k = jax.random.key(seed)
+        return {"params": {"w": jax.random.normal(k, (8, 8)),
+                           "b": jnp.zeros((8,))},
+                "opt": {"step": jnp.int32(7)}}
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = self._tree()
+        mgr.save(10, tree, extra={"next_step": 11})
+        restored, extra = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+        assert extra["next_step"] == 11
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_last_prunes(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep_last=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(s))
+        assert mgr.list_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=True)
+        mgr.save(1, self._tree())
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            mgr.restore({"w": jnp.zeros((5,))})
+
+    def test_no_tmp_dir_left_behind(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._tree())
+        assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+# ----------------------------------------------------------------- optim ----
+class TestOptim:
+    def test_adamw_converges_on_quadratic(self):
+        cfg = TrainConfig(learning_rate=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, grad_clip=0)
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        params = {"w": jnp.zeros((3,))}
+        state = adamw.init_state(params)
+        for _ in range(150):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+            params, state, _ = adamw.apply_updates(params, state, g, cfg)
+        np.testing.assert_allclose(params["w"], target, atol=0.05)
+
+    def test_grad_clip_caps_update(self):
+        cfg = TrainConfig(grad_clip=1.0, warmup_steps=0, learning_rate=1.0,
+                          weight_decay=0.0)
+        params = {"w": jnp.zeros((4,))}
+        state = adamw.init_state(params)
+        g = {"w": jnp.full((4,), 1e6)}
+        _, _, metrics = adamw.apply_updates(params, state, g, cfg)
+        assert metrics["grad_norm"] > 1e5  # reported raw
+
+    def test_decay_mask_skips_norms(self):
+        from repro.optim.adamw import _decay_mask
+        assert _decay_mask("layers/norm1/scale") == 0.0
+        assert _decay_mask("attn/wq") == 1.0
+        assert _decay_mask("ssm/a_log") == 0.0
+
+    def test_int8_error_feedback_reduces_bias(self):
+        """With error feedback the quantization error must not accumulate:
+        sum of compressed grads ~ sum of raw grads."""
+        rng = np.random.default_rng(0)
+        g_raw = [jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)
+                 for _ in range(50)]
+        err = adamw.init_error_state({"w": g_raw[0]})
+        acc_c = np.zeros(64)
+        for g in g_raw:
+            cg, err = adamw.compress_grads_with_feedback({"w": g}, err)
+            acc_c += np.asarray(cg["w"])
+        acc_raw = sum(np.asarray(g) for g in g_raw)
+        # relative error of the running sum stays small thanks to feedback
+        denom = np.linalg.norm(acc_raw) + 1e-9
+        assert np.linalg.norm(acc_c - acc_raw) / denom < 0.05
+
+    def test_quantize_roundtrip(self):
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(256),
+                        jnp.float32)
+        q, s = adamw.quantize_int8(x)
+        assert q.dtype == jnp.int8
+        err = np.abs(np.asarray(adamw.dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+# -------------------------------------------------------------- sharding ----
+class TestSharding:
+    @pytest.mark.parametrize("arch", list_archs())
+    def test_every_param_has_a_rule(self, arch):
+        model = build_model(get_smoke(arch), impl="ref")
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        assert validate_rules(params) == []
+
+    def test_spec_tree_no_mesh_is_unconstrained(self):
+        model = build_model(get_smoke("tinyllama_1_1b"), impl="ref")
+        params = jax.eval_shape(model.init, jax.random.key(0))
+        specs = jax.tree.leaves(
+            spec_tree(params, None),
+            is_leaf=lambda x: hasattr(x, "__iter__") or x is None)
+        assert specs  # resolvable without a mesh
+
+
+# --------------------------------------------------------- fault tolerance --
+class TestFaultTolerance:
+    def test_heartbeat_detects_silence(self):
+        mon = HeartbeatMonitor(4, timeout_s=0.5)
+        t0 = time.monotonic()
+        for h in range(3):
+            mon.beat(h, at=t0 + 1.0)
+        # host 3 never beat after t0: 1.1s of silence > 0.5s timeout;
+        # hosts 0-2 beat 0.1s ago -> alive
+        assert mon.check(now=t0 + 1.1) == [3]
+
+    def test_injected_failure_immediate(self):
+        mon = HeartbeatMonitor(4, timeout_s=60)
+        mon.inject_failure(2)
+        assert 2 in mon.check()
+
+    def test_elastic_remesh_preserves_model_axis(self):
+        plan = elastic_remesh(alive_hosts=list(range(7)), devices_per_host=32,
+                              model_axis=16)
+        assert plan.shape[-1] == 16
+        assert plan.shape[0] * 16 <= 7 * 32
+        with pytest.raises(RuntimeError):
+            elastic_remesh(alive_hosts=[0], devices_per_host=8, model_axis=16)
+
+    def test_straggler_detection(self):
+        det = StragglerDetector(4, threshold=1.5)
+        for step in range(10):
+            for h in range(4):
+                det.observe(h, 100.0 if h != 2 else 400.0)
+        rep = det.report()
+        assert rep.stragglers == [2]
+
+    def test_simulated_cluster_failure_and_recovery(self):
+        mon = HeartbeatMonitor(4, timeout_s=10)
+        done = []
+        cluster = SimulatedCluster(4, mon, lambda h, s: done.append((h, s)))
+        cluster.start(n_steps=50)
+        cluster.kill(1)
+        cluster.join()
+        dead = mon.check()
+        assert 1 in dead
+        plan = elastic_remesh([h for h in range(4) if h not in dead],
+                              devices_per_host=64, model_axis=16)
+        assert plan.n_devices == 192  # 3 hosts x 64, model axis intact

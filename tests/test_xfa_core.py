@@ -1,0 +1,253 @@
+"""Unit tests for the XFA core: shadow table, tracer, folding, views."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (FoldedTable, KIND_WAIT, ShadowTable, ShadowTableSet,
+                        Tracer, api_view, api_view_by_caller, component_view,
+                        fold_event_log, render_flow_matrix, wait_split)
+from repro.core.attribution import (attribute_parallel, expert_imbalance,
+                                    imbalance_report)
+
+
+def make_tracer():
+    return Tracer()
+
+
+# ---------------------------------------------------------------- shadow ----
+class TestShadowTable:
+    def test_slot_interning_is_stable(self):
+        t = make_tracer()
+        a = t.tables.registry.resolve("app", "ckpt", "save")
+        b = t.tables.registry.resolve("app", "ckpt", "save")
+        c = t.tables.registry.resolve("optimizer", "ckpt", "save")
+        assert a.slot == b.slot
+        assert c.slot != a.slot  # relation-aware: caller is part of the key
+
+    def test_growth_preserves_stats(self):
+        st = ShadowTable(capacity=2)
+        st.record(0, 100)
+        st.record(5, 7)  # forces growth past initial capacity
+        assert st.count[0] == 1 and st.total_ns[0] == 100
+        assert st.count[5] == 1 and st.total_ns[5] == 7
+        assert st.capacity >= 6
+
+    def test_memory_is_o_slots_not_o_events(self):
+        st = ShadowTable()
+        before = st.nbytes()
+        for _ in range(100_000):
+            st.record(3, 10)
+        assert st.nbytes() == before  # folding: no growth with event count
+
+    def test_min_max(self):
+        st = ShadowTable()
+        for d in (5, 1, 9):
+            st.record(0, d)
+        assert st.min_ns[0] == 1 and st.max_ns[0] == 9 and st.total_ns[0] == 15
+
+
+# ---------------------------------------------------------------- tracer ----
+class TestTracer:
+    def test_caller_attribution(self):
+        t = make_tracer()
+
+        @t.api("liba")
+        def inner():
+            time.sleep(0.001)
+
+        @t.api("libb")
+        def outer():
+            inner()
+
+        outer()
+        inner()  # direct call from app
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert ("libb", "liba", "inner") in folds.edges
+        assert ("app", "liba", "inner") in folds.edges
+        assert ("app", "libb", "outer") in folds.edges
+        assert folds.edges[("libb", "liba", "inner")].count == 1
+        assert folds.edges[("app", "liba", "inner")].count == 1
+
+    def test_self_time_excludes_children(self):
+        t = make_tracer()
+
+        @t.api("liba")
+        def child():
+            time.sleep(0.005)
+
+        @t.api("libb")
+        def parent():
+            child()
+
+        parent()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        p = folds.edges[("app", "libb", "parent")]
+        c = folds.edges[("libb", "liba", "child")]
+        assert p.child_ns >= c.total_ns * 0.5
+        assert p.self_ns < p.total_ns
+
+    def test_disabled_tracer_records_nothing(self):
+        t = make_tracer()
+        t.enabled = False
+
+        @t.api("liba")
+        def f():
+            return 42
+
+        assert f() == 42
+        assert len(FoldedTable.merge_all(FoldedTable.from_set(t.tables))) == 0
+
+    def test_counting_only_mode(self):
+        t = make_tracer()
+        t.timing = False
+
+        @t.api("liba")
+        def f():
+            return 1
+
+        for _ in range(10):
+            f()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        e = folds.edges[("app", "liba", "f")]
+        assert e.count == 10 and e.total_ns == 0
+
+    def test_wait_kind(self):
+        t = make_tracer()
+
+        @t.wait("runtime", "join")
+        def block():
+            time.sleep(0.001)
+
+        block()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        useful, wait = wait_split(folds)
+        assert len(wait) == 1 and len(useful) == 0
+        assert folds.edges[("app", "runtime", "join")].kind == KIND_WAIT
+
+    def test_scope_and_wrap(self):
+        t = make_tracer()
+        with t.scope("data", "load"):
+            pass
+        g = t.wrap(lambda: 3, component="serve", name="dispatched")
+        assert g() == 3
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert ("app", "data", "load") in folds.edges
+        assert ("app", "serve", "dispatched") in folds.edges
+
+    def test_exception_pops_frame(self):
+        t = make_tracer()
+
+        @t.api("liba")
+        def boom():
+            raise ValueError("x")
+
+        with pytest.raises(ValueError):
+            boom()
+        assert t.stack_depth() == 0
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert folds.edges[("app", "liba", "boom")].count == 1
+
+    def test_per_thread_tables(self):
+        t = make_tracer()
+
+        @t.api("liba")
+        def f():
+            pass
+
+        def worker():
+            t.set_thread_group("workers")
+            for _ in range(5):
+                f()
+
+        threads = [threading.Thread(target=worker) for _ in range(3)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        f()  # main thread
+        tables = t.tables.tables()
+        assert len(tables) == 4  # 3 workers + main
+        merged = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert merged.edges[("app", "liba", "f")].count == 16
+
+
+# --------------------------------------------------------------- folding ----
+class TestFolding:
+    def test_fold_matches_event_log(self):
+        events = [("app", "liba", "x", 10), ("app", "liba", "x", 20),
+                  ("libb", "liba", "x", 5)]
+        folded = fold_event_log(events)
+        assert folded.edges[("app", "liba", "x")].count == 2
+        assert folded.edges[("app", "liba", "x")].total_ns == 30
+        assert folded.edges[("libb", "liba", "x")].count == 1
+
+    def test_merge_identity_and_commutativity(self):
+        a = fold_event_log([("app", "l", "x", 10)])
+        b = fold_event_log([("app", "l", "x", 5), ("app", "l", "y", 1)])
+        ab = a.merge(b)
+        ba = b.merge(a)
+        assert ab.edges.keys() == ba.edges.keys()
+        for k in ab.edges:
+            assert ab.edges[k].total_ns == ba.edges[k].total_ns
+        empty = FoldedTable()
+        ae = a.merge(empty)
+        assert ae.edges[("app", "l", "x")].total_ns == 10
+
+    def test_json_roundtrip(self):
+        a = fold_event_log([("app", "l", "x", 10), ("m", "l", "x", 3)])
+        b = FoldedTable.from_json(a.to_json())
+        assert b.edges.keys() == a.edges.keys()
+        assert b.edges[("m", "l", "x")].total_ns == 3
+
+
+# ----------------------------------------------------------- attribution ----
+class TestAttribution:
+    def test_parallel_division(self):
+        f = fold_event_log([("app", "l", "x", 1600)])
+        p = attribute_parallel(f, 16)
+        assert p.folded.edges[("app", "l", "x")].total_ns == 100
+
+    def test_imbalance_detection(self):
+        heavy = fold_event_log([("app", "l", "work", 16_000_000)])
+        light = fold_event_log([("app", "l", "work", 1_000_000)])
+        heavy.group, light.group = "rank", "seg"
+        rep = imbalance_report({"rank": [heavy], "seg": [light]}, threshold=4.0)
+        assert rep.imbalanced and rep.max_exec_ratio == pytest.approx(16.0)
+
+    def test_expert_imbalance(self):
+        bad, ratio = expert_imbalance([100, 1, 1, 1], threshold=3.0)
+        assert bad and ratio > 3
+        ok, _ = expert_imbalance([10, 11, 9, 10], threshold=3.0)
+        assert not ok
+
+
+# ----------------------------------------------------------------- views ----
+class TestViews:
+    def _fold(self):
+        return fold_event_log([
+            ("app", "glibc", "read", 18), ("app", "glibc", "write", 35),
+            ("app", "alloc", "malloc", 10), ("glibc", "alloc", "malloc", 2),
+        ])
+
+    def test_component_view_of_app(self):
+        v = component_view(self._fold(), "app", total_ns=100)
+        glibc = v.find("glibc")
+        assert glibc is not None and glibc.time_ns == 53
+        assert v.find("Self").time_ns == pytest.approx(100 - 63)
+
+    def test_api_view(self):
+        v = api_view(self._fold(), "glibc")
+        assert v.top().label == "write"
+        assert v.top().pct == pytest.approx(100 * 35 / 53)
+
+    def test_api_view_by_caller_keeps_relation(self):
+        v = api_view_by_caller(self._fold(), "alloc")
+        labels = {r.label for r in v.rows}
+        assert labels == {"app -> malloc", "glibc -> malloc"}
+
+    def test_flow_matrix_renders(self):
+        s = render_flow_matrix(self._fold())
+        assert "glibc" in s and "alloc" in s

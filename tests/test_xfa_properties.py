@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis) on the XFA invariants.
+
+The fold algebra is the paper's correctness core: Relation-Aware Data
+Folding must lose nothing that the views need, no matter how the event
+stream is split across threads/devices/time.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (FoldedTable, fold_event_log)
+from repro.core.attribution import attribute_parallel
+from repro.core.device_fold import DeviceFoldSpec
+from repro.core.views import api_view, component_view
+
+CALLERS = ("app", "moe", "optimizer")
+COMPONENTS = ("glibc", "alloc", "pthread")
+APIS = ("read", "write", "malloc", "lock")
+
+event = st.tuples(st.sampled_from(CALLERS), st.sampled_from(COMPONENTS),
+                  st.sampled_from(APIS), st.integers(1, 10_000))
+events = st.lists(event, max_size=200)
+
+
+def total_ns(t: FoldedTable) -> int:
+    return sum(e.total_ns for e in t.edges.values())
+
+
+def total_count(t: FoldedTable) -> int:
+    return sum(e.count for e in t.edges.values())
+
+
+@settings(max_examples=60, deadline=None)
+@given(events, st.integers(0, 200))
+def test_fold_is_split_invariant(evs, cut):
+    """Folding a stream == merging folds of any split of it (the property
+    that makes per-thread tables + offline merge exact)."""
+    cut = min(cut, len(evs))
+    whole = fold_event_log(evs)
+    parts = fold_event_log(evs[:cut]).merge(fold_event_log(evs[cut:]))
+    assert whole.edges.keys() == parts.edges.keys()
+    for k in whole.edges:
+        w, p = whole.edges[k], parts.edges[k]
+        assert (w.count, w.total_ns, w.min_ns, w.max_ns) == \
+            (p.count, p.total_ns, p.min_ns, p.max_ns)
+
+
+@settings(max_examples=40, deadline=None)
+@given(events, events, events)
+def test_merge_associative_commutative(e1, e2, e3):
+    a, b, c = map(fold_event_log, (e1, e2, e3))
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    flipped = c.merge(b).merge(a)
+    for other in (right, flipped):
+        assert left.edges.keys() == other.edges.keys()
+        for k in left.edges:
+            assert left.edges[k].total_ns == other.edges[k].total_ns
+            assert left.edges[k].count == other.edges[k].count
+
+
+@settings(max_examples=40, deadline=None)
+@given(events)
+def test_fold_conserves_totals(evs):
+    folded = fold_event_log(evs)
+    assert total_ns(folded) == sum(e[3] for e in evs)
+    assert total_count(folded) == len(evs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(events)
+def test_relation_awareness(evs):
+    """Same API from different callers must stay distinguishable (the
+    paper's defining property vs naive aggregation)."""
+    folded = fold_event_log(evs)
+    for (caller, comp, api), e in folded.edges.items():
+        expected = [d for c2, m2, a2, d in evs
+                    if (c2, m2, a2) == (caller, comp, api)]
+        assert e.count == len(expected)
+        assert e.total_ns == sum(expected)
+
+
+@settings(max_examples=30, deadline=None)
+@given(events, st.integers(1, 64))
+def test_parallel_attribution_scales_linearly(evs, lanes):
+    folded = fold_event_log(evs)
+    scaled = attribute_parallel(folded, lanes).folded
+    for k in folded.edges:
+        assert scaled.edges[k].total_ns == int(
+            folded.edges[k].total_ns * (1.0 / lanes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(events)
+def test_views_conserve_api_time(evs):
+    """API view percentages sum to ~100 and times to the component total."""
+    folded = fold_event_log(evs)
+    for comp in COMPONENTS:
+        inbound = sum(e.total_ns for (c, m, a), e in folded.edges.items()
+                      if m == comp)
+        if inbound == 0:
+            continue
+        view = api_view(folded, comp)
+        assert sum(r.time_ns for r in view.rows) == inbound
+        assert abs(sum(r.pct for r in view.rows) - 100.0) < 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(("a", "b")),
+                          st.floats(0, 1e6)), max_size=50))
+def test_device_fold_accumulates_exactly(emissions):
+    """The in-graph shadow table is an exact sum, slot by slot."""
+    spec = DeviceFoldSpec()
+    spec.declare("app", "moe", "dispatch", "a")
+    spec.declare("app", "moe", "dispatch", "b")
+    spec.freeze()
+    table = spec.init_table()
+    want = {"a": 0.0, "b": 0.0}
+    for metric, v in emissions:
+        table = spec.emit(table, "app", "moe", "dispatch", metric, v)
+        want[metric] += np.float32(v)
+    folded = spec.fold(np.asarray(table))
+    got = folded.edges[("app", "moe", "dispatch")].metrics
+    for m in ("a", "b"):
+        np.testing.assert_allclose(got.get(m, 0.0), want[m], rtol=1e-4,
+                                   atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=16))
+def test_device_fold_vector_slots(loads):
+    spec = DeviceFoldSpec()
+    spec.declare("app", "moe", "dispatch", "expert_load", width=4)
+    spec.freeze()
+    table = spec.init_table()
+    acc = np.zeros(4)
+    for e in loads:
+        onehot = np.zeros(4)
+        onehot[e] = 1
+        table = spec.emit(table, "app", "moe", "dispatch", "expert_load",
+                          jnp.asarray(onehot))
+        acc += onehot
+    folded = spec.fold(np.asarray(table))
+    m = folded.edges[("app", "moe", "dispatch")].metrics
+    for i in range(4):
+        assert m[f"expert_load[{i}]"] == acc[i]
