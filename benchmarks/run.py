@@ -6,6 +6,7 @@
   effectiveness  Table 2    six injected bugs found from XFA views
   sampling       Table 6    sampling cannot close the gap
   offline        §4.3.2     offline analysis speed
+  merge          (ours)     columnar shard-reduce vs per-edge loop merge
   roofline       §Roofline  (separate: python -m benchmarks.roofline)
 
 Prints ``name,value,note`` CSV. Each module is also runnable standalone.
@@ -19,10 +20,12 @@ import traceback
 
 
 def main() -> None:
-    from . import effectiveness, events, memory, offline, overhead, sampling
+    from . import (effectiveness, events, memory, merge, offline, overhead,
+                   sampling)
     modules = [("overhead", overhead), ("events", events),
                ("memory", memory), ("effectiveness", effectiveness),
-               ("sampling", sampling), ("offline", offline)]
+               ("sampling", sampling), ("offline", offline),
+               ("merge", merge)]
     failures = 0
     print("name,value,note")
     for name, mod in modules:

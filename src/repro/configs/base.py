@@ -290,6 +290,14 @@ class ServeConfig:
     max_seq_len: int = 2_048
     prefill_chunk: int = 512
     eos_token: int = 2
+    #: when set, the engine writes one XFA profile shard per process under
+    #: this directory (refreshed every `profile_interval_ticks` decode ticks
+    #: and at drain); fleet replicas reduce via `python -m repro.profile`.
+    profile_dir: str = ""
+    profile_interval_ticks: int = 256
+    #: shard label; give replicas sharing a host+dir distinct labels (e.g.
+    #: serve-0, serve-1) so the reducer can tell them from stale shards
+    profile_label: str = "serve"
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

@@ -139,10 +139,31 @@ class FoldedTable:
 
     @staticmethod
     def merge_all(tables: Iterable["FoldedTable"]) -> "FoldedTable":
+        """Pairwise per-edge merge: right for a handful of small in-memory
+        tables (per-thread host folds).  Bulk N-way aggregation of already
+        -columnar shards goes through merge_columns instead — the snapshot
+        reducer (repro.profile) never boxes per-edge EdgeStats at all."""
         out = FoldedTable()
         for t in tables:
             out = out.merge(t)
         return out
+
+    @staticmethod
+    def merge_all_columnar(tables: Iterable["FoldedTable"]) -> "FoldedTable":
+        """N-way merge via the column algebra; same per-edge stats as
+        merge_all (property-tested — the `group` label can differ:
+        merge_all's left fold starts from an empty 'main' table), faster
+        once tables are large AND already columnar — from FoldedTable
+        inputs the conversion cost eats the win, which is exactly why
+        snapshots *store* columns (benchmarks/merge.py)."""
+        tables = list(tables)
+        if not tables:
+            return FoldedTable()
+        cols = merge_columns([EdgeColumns.from_folded(t) for t in tables])
+        return cols.to_folded()
+
+    def to_columns(self) -> "EdgeColumns":
+        return EdgeColumns.from_folded(self)
 
     # -- queries --------------------------------------------------------------
     def components(self) -> List[str]:
@@ -209,6 +230,149 @@ class FoldedTable:
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"FoldedTable(group={self.group!r}, edges={len(self.edges)})"
+
+
+@dataclass
+class EdgeColumns:
+    """Struct-of-arrays form of a FoldedTable: one aligned column per stat.
+
+    This is both the merge hot path (whole-column numpy sums/min/max after
+    re-interning keys into a union index — no per-edge EdgeStats allocation)
+    and the shape the profile snapshot format (repro.profile.snapshot)
+    serializes.  `metric_mask` preserves metric *presence*: an edge that
+    never emitted metric m stays absent after a round-trip, it does not
+    become m=0.0.
+    """
+
+    keys: List[SlotKey]
+    count: np.ndarray                  # int64 [N]
+    total_ns: np.ndarray               # int64 [N]
+    child_ns: np.ndarray               # int64 [N]
+    min_ns: np.ndarray                 # int64 [N] (_I64_MAX when count == 0)
+    max_ns: np.ndarray                 # int64 [N]
+    kind: np.ndarray                   # int8  [N]
+    metric_names: List[str]
+    metric_values: np.ndarray          # float64 [M, N]
+    metric_mask: np.ndarray            # bool    [M, N]
+    group: str = "main"
+
+    @staticmethod
+    def empty(group: str = "main") -> "EdgeColumns":
+        z = np.zeros(0, dtype=np.int64)
+        return EdgeColumns([], z, z.copy(), z.copy(), z.copy(), z.copy(),
+                           np.zeros(0, dtype=np.int8), [],
+                           np.zeros((0, 0), dtype=np.float64),
+                           np.zeros((0, 0), dtype=bool), group=group)
+
+    @staticmethod
+    def from_folded(table: "FoldedTable") -> "EdgeColumns":
+        keys = sorted(table.edges)
+        n = len(keys)
+        count = np.empty(n, dtype=np.int64)
+        total_ns = np.empty(n, dtype=np.int64)
+        child_ns = np.empty(n, dtype=np.int64)
+        min_ns = np.empty(n, dtype=np.int64)
+        max_ns = np.empty(n, dtype=np.int64)
+        kind = np.empty(n, dtype=np.int8)
+        mnames: Dict[str, int] = {}
+        for k in keys:
+            for m in table.edges[k].metrics:
+                mnames.setdefault(m, len(mnames))
+        mvals = np.zeros((len(mnames), n), dtype=np.float64)
+        mmask = np.zeros((len(mnames), n), dtype=bool)
+        for j, k in enumerate(keys):
+            e = table.edges[k]
+            count[j] = e.count
+            total_ns[j] = e.total_ns
+            child_ns[j] = e.child_ns
+            min_ns[j] = e.min_ns
+            max_ns[j] = e.max_ns
+            kind[j] = e.kind
+            for m, v in e.metrics.items():
+                i = mnames[m]
+                mvals[i, j] = v
+                mmask[i, j] = True
+        return EdgeColumns(keys, count, total_ns, child_ns, min_ns, max_ns,
+                           kind, list(mnames), mvals, mmask, group=table.group)
+
+    def to_folded(self) -> "FoldedTable":
+        n = len(self.keys)
+        metrics: List[Dict[str, float]] = [{} for _ in range(n)]
+        for i, name in enumerate(self.metric_names):
+            for j in np.nonzero(self.metric_mask[i])[0]:
+                metrics[j][name] = float(self.metric_values[i, j])
+        edges: Dict[SlotKey, EdgeStats] = {}
+        for j, k in enumerate(self.keys):
+            edges[k] = EdgeStats(
+                count=int(self.count[j]),
+                total_ns=int(self.total_ns[j]),
+                child_ns=int(self.child_ns[j]),
+                min_ns=int(self.min_ns[j]),
+                max_ns=int(self.max_ns[j]),
+                kind=int(self.kind[j]),
+                metrics=metrics[j],
+            )
+        return FoldedTable(edges, group=self.group)
+
+    def __len__(self) -> int:
+        return len(self.keys)
+
+
+def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
+    """Commutative/associative N-way merge over aligned columns.
+
+    Keys are re-interned into one union index (the only per-edge python
+    loop); every statistic then merges as one whole-column numpy scatter
+    (add/min/max `.at`), matching EdgeStats.merge semantics exactly:
+    sums for count/total/child/metrics, min/max for the extrema, and the
+    kind of the first part that actually observed the edge (count > 0).
+    """
+    # group label from ALL parts (empty shards still carry provenance)
+    groups = {p.group for p in parts}
+    group = "main" if not groups else \
+        (groups.pop() if len(groups) == 1 else "merged")
+    parts = [p for p in parts if len(p)]
+    if not parts:
+        return EdgeColumns.empty(group=group)
+    index: Dict[SlotKey, int] = {}
+    for p in parts:
+        for k in p.keys:
+            if k not in index:
+                index[k] = len(index)
+    u = len(index)
+    count = np.zeros(u, dtype=np.int64)
+    total_ns = np.zeros(u, dtype=np.int64)
+    child_ns = np.zeros(u, dtype=np.int64)
+    min_ns = np.full(u, _I64_MAX, dtype=np.int64)
+    max_ns = np.zeros(u, dtype=np.int64)
+    kind = np.zeros(u, dtype=np.int8)
+    decided = np.zeros(u, dtype=bool)
+    mnames: Dict[str, int] = {}
+    for p in parts:
+        for m in p.metric_names:
+            mnames.setdefault(m, len(mnames))
+    mvals = np.zeros((len(mnames), u), dtype=np.float64)
+    mmask = np.zeros((len(mnames), u), dtype=bool)
+    for p in parts:
+        inv = np.fromiter((index[k] for k in p.keys), dtype=np.int64,
+                          count=len(p.keys))
+        np.add.at(count, inv, p.count)
+        np.add.at(total_ns, inv, p.total_ns)
+        np.add.at(child_ns, inv, p.child_ns)
+        np.minimum.at(min_ns, inv, p.min_ns)
+        np.maximum.at(max_ns, inv, p.max_ns)
+        und = ~decided[inv]
+        kind[inv[und]] = p.kind[und]
+        decided[inv] = decided[inv] | (p.count > 0)
+        for i, name in enumerate(p.metric_names):
+            g = mnames[name]
+            present = p.metric_mask[i]
+            if present.any():
+                tgt = inv[present]
+                np.add.at(mvals[g], tgt, p.metric_values[i][present])
+                mmask[g][tgt] = True
+    return EdgeColumns(list(index), count, total_ns, child_ns, min_ns,
+                       max_ns, kind, list(mnames), mvals, mmask, group=group)
 
 
 def fold_event_log(events: Iterable[Tuple[str, str, str, int]],

@@ -152,6 +152,39 @@ class XFASession:
     def host_folds(self) -> List[FoldedTable]:
         return FoldedTable.from_set(self.tracer.tables)
 
+    def folded_all(self, include_replicated: bool = True) -> FoldedTable:
+        """Raw merge of host + device + static folds — no attribution, no
+        step scaling.  This is what persists to profile shards: host totals
+        stay additive, so shards from N processes reduce to exactly the
+        profile one process doing all the work would have written.
+
+        The device and static folds hold *replicated* (globally identical)
+        values in SPMD: every rank traces the same program and fetches the
+        same fold vector.  In a multi-process run only one rank should shard
+        them (`include_replicated=False` on the others), or the cross-rank
+        reduce would count them once per rank."""
+        merged = FoldedTable.merge_all(self.host_folds())
+        if not include_replicated:
+            return merged
+        if self._device_fold is not None:
+            merged = merged.merge(self._device_fold)
+        static = self._static_snapshot
+        if static is None:
+            static = STATIC_COSTS.as_folded()
+        if len(static):
+            merged = merged.merge(static)
+        return merged
+
+    def snapshot(self, path: str, meta: Optional[Dict[str, Any]] = None,
+                 include_replicated: bool = True) -> str:
+        """Persist the current raw profile as one snapshot shard (atomic)."""
+        from repro.profile import ProfileSnapshot  # avoid import cycle
+        snap_meta: Dict[str, Any] = {"n_steps": self.n_steps,
+                                     "wall_ns": self.wall_ns}
+        snap_meta.update(meta or {})
+        return ProfileSnapshot.from_folded(
+            self.folded_all(include_replicated), meta=snap_meta).save(path)
+
     def report(self, parallel_groups: Optional[Dict[str, int]] = None
                ) -> XFAReport:
         """Merge host (per-thread), device, and static folds.

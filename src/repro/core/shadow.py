@@ -26,6 +26,7 @@ threads, and per-thread tables are merged offline (views.py / folding.py).
 from __future__ import annotations
 
 import threading
+import weakref
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -107,7 +108,7 @@ class ShadowTable:
     """
 
     __slots__ = ("count", "total_ns", "child_ns", "min_ns", "max_ns",
-                 "_cap", "thread_name", "group")
+                 "_cap", "thread_name", "group", "group_explicit")
 
     INITIAL_CAPACITY = 256
 
@@ -117,6 +118,9 @@ class ShadowTable:
         self.thread_name = thread_name
         #: thread *group* (e.g. pipeline stage name) for imbalance analysis
         self.group = group
+        #: True once the group was set deliberately (vs the thread-name
+        #: default) — retired accumulators key on explicit groups only
+        self.group_explicit = False
         self.count = np.zeros(self._cap, dtype=np.int64)
         self.total_ns = np.zeros(self._cap, dtype=np.int64)
         self.child_ns = np.zeros(self._cap, dtype=np.int64)
@@ -168,6 +172,31 @@ class ShadowTable:
     def active_slots(self) -> np.ndarray:
         return np.nonzero(self.count[: self._cap])[0]
 
+    def snapshot_copy(self) -> "ShadowTable":
+        """Deep copy of the stats arrays (taken under the set's lock so a
+        concurrent retire-sweep can't mutate data already handed out)."""
+        t = ShadowTable(self.thread_name, self.group, capacity=self._cap)
+        t.group_explicit = self.group_explicit
+        t.count[:] = self.count
+        t.total_ns[:] = self.total_ns
+        t.child_ns[:] = self.child_ns
+        t.min_ns[:] = self.min_ns
+        t.max_ns[:] = self.max_ns
+        return t
+
+    def absorb(self, other: "ShadowTable") -> None:
+        """Fold another table's slots into this one (sums + extrema).  Used
+        to retire dead threads' tables: slot ids are registry-global, so the
+        columns align and the merge is exact."""
+        if other.capacity > self._cap:
+            self._grow(other.capacity)
+        n = other.capacity
+        self.count[:n] += other.count
+        self.total_ns[:n] += other.total_ns
+        self.child_ns[:n] += other.child_ns
+        np.minimum(self.min_ns[:n], other.min_ns, out=self.min_ns[:n])
+        np.maximum(self.max_ns[:n], other.max_ns, out=self.max_ns[:n])
+
     def reset(self) -> None:
         self.count[:] = 0
         self.total_ns[:] = 0
@@ -185,9 +214,19 @@ class ShadowTableSet:
     keeps the data alive until the main thread persists it).
     """
 
+    #: dead tables tolerated before a sweep folds them into the per-group
+    #: retired accumulators (keeps short-lived-thread churn — e.g. one ckpt
+    #: writer thread per save — from growing the table list without bound,
+    #: while preserving per-thread granularity for small thread counts).
+    RETIRE_SWEEP_THRESHOLD = 32
+
     def __init__(self) -> None:
         self.registry = SlotRegistry()
-        self._tables: Dict[int, ShadowTable] = {}
+        # list, NOT a dict keyed on thread ident: CPython recycles `th.ident`
+        # once a thread exits, so an ident-keyed map silently overwrites a
+        # dead thread's table — losing its folds before the offline merge.
+        self._live: List[Tuple[weakref.ref, ShadowTable]] = []
+        self._retired: Dict[str, ShadowTable] = {}
         self._lock = threading.Lock()
         self._tls = threading.local()
 
@@ -196,16 +235,43 @@ class ShadowTableSet:
         if t is None:
             th = threading.current_thread()
             t = ShadowTable(thread_name=th.name, group=group or th.name)
+            t.group_explicit = group is not None
             with self._lock:
-                self._tables[th.ident or id(th)] = t
+                self._live.append((weakref.ref(th), t))
+                if len(self._live) > self.RETIRE_SWEEP_THRESHOLD:
+                    self._sweep_locked()
             self._tls.table = t
         elif group is not None:
             t.group = group
+            t.group_explicit = True
         return t
 
+    def _sweep_locked(self) -> None:
+        """Fold dead threads' tables into per-group accumulators (the
+        paper's persist-at-thread-exit, done lazily under the lock)."""
+        live = []
+        for ref, t in self._live:
+            th = ref()
+            if th is not None and th.is_alive():
+                live.append((ref, t))
+                continue
+            # unnamed threads' default group is their (unique) thread name —
+            # pool them, or uniquely-named churn would defeat the sweep
+            key = t.group if t.group_explicit else "retired"
+            acc = self._retired.get(key)
+            if acc is None:
+                acc = self._retired[key] = ShadowTable(
+                    thread_name=f"retired:{key}", group=key)
+            acc.absorb(t)
+        self._live = live
+
     def tables(self) -> List[ShadowTable]:
+        # retired accumulators are COPIED under the lock: a later sweep
+        # absorbs dead live-tables into them in place, and a caller holding
+        # both a dead table and a post-sweep accumulator would double-count
         with self._lock:
-            return list(self._tables.values())
+            return [t for _, t in self._live] + \
+                [r.snapshot_copy() for r in self._retired.values()]
 
     def iter_edges(self) -> Iterator[Tuple[SlotInfo, ShadowTable]]:
         for t in self.tables():
@@ -216,5 +282,9 @@ class ShadowTableSet:
         return sum(t.nbytes() for t in self.tables())
 
     def reset(self) -> None:
-        for t in self.tables():
-            t.reset()
+        # operate on the real tables, not the copies tables() hands out
+        with self._lock:
+            for _, t in self._live:
+                t.reset()
+            for r in self._retired.values():
+                r.reset()

@@ -1,0 +1,21 @@
+"""Version-compatibility shims for Pallas TPU across jax releases.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams` (and will
+eventually drop the old name).  jax==0.4.37 — the pinned CI version — only
+has `TPUCompilerParams`; newer nightlies only have `CompilerParams`.  Every
+kernel in this package goes through `tpu_compiler_params` so the kernels
+themselves stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Prefer the new name when both exist so deprecation warnings stay silent.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the pallas_call `compiler_params` object for this jax version."""
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import tpu_compiler_params
+
 NEG_INF = -1e30
 LANES = 128
 
@@ -129,7 +131,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((g, LANES), jnp.float32),
             pltpu.VMEM((g, LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="xfa_decode_attention",

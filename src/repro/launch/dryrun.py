@@ -28,7 +28,8 @@ import jax.numpy as jnp         # noqa: E402
 from repro.configs import SHAPES, get_config           # noqa: E402
 from repro.configs.base import TrainConfig             # noqa: E402
 from repro.core.device_fold import STATIC_COSTS        # noqa: E402
-from repro.core.hlo_analysis import analyze_module     # noqa: E402
+from repro.core.hlo_analysis import (analyze_module,   # noqa: E402
+                                     xla_cost_analysis)
 from repro.core.session import KNOWN_COMPONENTS        # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW,         # noqa: E402
                                PEAK_FLOPS_BF16, make_production_mesh,
@@ -92,7 +93,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # loop-aware static analysis (core.hlo_analysis): XLA's cost_analysis
     # counts while bodies ONCE; scan-over-layers models need trip-count-

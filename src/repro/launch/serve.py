@@ -28,6 +28,14 @@ def main() -> int:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--profile-dir", default="",
+                    help="write this replica's XFA profile shard here "
+                         "(reduce with: python -m repro.profile report DIR)")
+    ap.add_argument("--profile-interval", type=int, default=256,
+                    help="decode ticks between shard refreshes")
+    ap.add_argument("--profile-label", default="serve",
+                    help="shard label; give replicas sharing a host "
+                         "distinct labels (serve-0, serve-1, ...)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -46,7 +54,10 @@ def main() -> int:
 
     engine = ServingEngine(model, params,
                            ServeConfig(max_batch=args.max_batch,
-                                       max_seq_len=args.max_seq))
+                                       max_seq_len=args.max_seq,
+                                       profile_dir=args.profile_dir,
+                                       profile_interval_ticks=args.profile_interval,
+                                       profile_label=args.profile_label))
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         n = int(rng.integers(4, args.max_seq // 4))

@@ -36,6 +36,11 @@ def main() -> int:
     ap.add_argument("--ckpt-interval", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--profile-dir", default="",
+                    help="write per-process XFA profile shards here "
+                         "(reduce with: python -m repro.profile report DIR)")
+    ap.add_argument("--profile-interval", type=int, default=0,
+                    help="steps between shard refreshes (0: only at end)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -52,7 +57,9 @@ def main() -> int:
                        ckpt_interval=args.ckpt_interval)
     trainer = Trainer(model, tcfg,
                       CheckpointManager(args.ckpt_dir, async_save=True),
-                      session=XFASession(device_spec=model.fold_spec))
+                      session=XFASession(device_spec=model.fold_spec),
+                      profile_dir=args.profile_dir or None,
+                      profile_interval=args.profile_interval)
     data = SyntheticLMData(cfg, args.batch, args.seq)
     with runtime_mesh(mesh):
         state, metrics = trainer.run(jax.random.key(0), data, args.steps,

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.core.device_fold import DeviceFoldSpec, annotate_cost
 from repro.parallel.axes import axis_size, get_runtime_mesh, shard
+from repro.parallel.compat import shard_map
 
 from .layers import Params, Runtime, _init, linear, pdtype
 
@@ -215,7 +216,7 @@ def moe(p: Params, x: jax.Array, rt: Runtime, table: jax.Array,
                                if a in mesh.axis_names)
             fn = functools.partial(_moe_local, cfg=cfg, C=C, ep_axis="model",
                                    ep=ep, n_token_shards=n_shards)
-            fn = jax.shard_map(
+            fn = shard_map(
                 fn, mesh=mesh,
                 in_specs=((P(), P("model"), P("model"), P("model")),
                           P(token_axes, None)),

@@ -1,0 +1,28 @@
+"""Version-compatibility shims for jax parallelism APIs.
+
+Two renames happened after jax 0.4.37 (the pinned CI version):
+
+  * `jax.experimental.shard_map.shard_map` graduated to `jax.shard_map`
+  * its `check_rep` kwarg became `check_vma`
+
+Call sites in this repo use the modern spelling (`shard_map(...,
+check_vma=...)`) and import from here; on old jax the wrapper translates
+the kwarg and routes to the experimental module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(*args, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(*args, **kwargs)

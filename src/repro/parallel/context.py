@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ops, ref
+from repro.parallel.compat import shard_map
 
 
 def _local_split_k(q, k_loc, v_loc, pos, *, axis: str, seq_shards: int,
@@ -76,7 +77,7 @@ def context_parallel_decode(q, k, v, pos, mesh: Mesh, *,
 
     body = functools.partial(_local_split_k, axis=context_axis,
                              seq_shards=shards, impl=impl)
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = shard_map(body, mesh=mesh,
                        in_specs=(qspec, kvspec, kvspec, P()),
                        out_specs=qspec, check_vma=False)
     return fn(q, k, v, pos)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.compat import shard_map
+
 
 def gpipe_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                 stage_params: Any, microbatches: jax.Array, mesh: Mesh,
@@ -67,7 +69,7 @@ def gpipe_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         results = outs[S - 1:]                              # [M, B, ...]
         return results[None]                                # stage dim back
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
         out_specs=P(axis),

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.parallel.axes import get_rules, get_runtime_mesh
+from repro.parallel.compat import shard_map
 
 
 def _axes(mesh: Mesh) -> Tuple[Tuple[str, ...], Optional[str]]:
@@ -67,7 +68,7 @@ def col_row_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
                          maybe_gate[0] if maybe_gate else None,
                          gated, model, batch)
 
-    fn = jax.shard_map(body, mesh=mesh,
+    fn = shard_map(body, mesh=mesh,
                        in_specs=(bspec,) + ws_in, out_specs=bspec,
                        check_vma=False)
     args = (x, w_up, w_down) + ((w_gate,) if gated else ())

@@ -1,0 +1,27 @@
+"""repro.profile — persistence + cross-process aggregation for XFA profiles.
+
+Scaler merges per-thread shadow tables *offline* (§3.3–3.4); this package
+lifts that design one level: per-*process* profiles are persisted as columnar
+snapshot shards and reduced offline, so profiles survive process exit and can
+be aggregated across hosts, serving replicas, and runs.
+
+  snapshot.py   schema-versioned columnar serialization (npz arrays + json
+                slot metadata) of a FoldedTable — lossless round-trip
+  store.py      a directory of per-process shards + the N-way reducer
+  diff.py       run-over-run comparison with per-edge regression flagging
+  __main__.py   CLI: python -m repro.profile {report,merge,diff}
+
+The merge itself is the vectorized column algebra in core/folding.py
+(merge_columns): registry re-interning + whole-column numpy scatter-adds,
+not per-edge EdgeStats dict loops (benchmarks/merge.py measures the gap).
+"""
+
+from .snapshot import SCHEMA_VERSION, SNAPSHOT_SUFFIX, ProfileSnapshot
+from .store import ProfileStore, load_profile, tracer_folded
+from .diff import EdgeDelta, ProfileDiff, diff_profiles
+
+__all__ = [
+    "SCHEMA_VERSION", "SNAPSHOT_SUFFIX", "ProfileSnapshot",
+    "ProfileStore", "load_profile", "tracer_folded",
+    "EdgeDelta", "ProfileDiff", "diff_profiles",
+]

@@ -1,0 +1,118 @@
+"""CLI for the profile store.
+
+    python -m repro.profile report  RUN_DIR_OR_SNAPSHOT... [--component app]
+    python -m repro.profile merge   SHARD_OR_DIR... -o merged.xfa.npz
+    python -m repro.profile diff    BASELINE CANDIDATE [--threshold 0.25]
+
+`report` reduces every given shard/dir into one profile and renders the
+paper's component/API views + flow matrix.  `merge` persists that reduction.
+`diff` compares two profiles and exits 1 when any per-edge regression
+exceeds the threshold — wire it into CI as a perf gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from ..core.views import (api_view_by_caller, component_view,
+                          render_flow_matrix)
+from .diff import DIFF_FIELDS, diff_profiles
+from .snapshot import ProfileSnapshot
+from .store import load_profile
+
+
+def _load_many(paths: List[str]) -> ProfileSnapshot:
+    snaps = [load_profile(p) for p in paths]
+    return snaps[0] if len(snaps) == 1 else ProfileSnapshot.merge(snaps)
+
+
+def _cmd_report(args: argparse.Namespace) -> int:
+    snap = _load_many(args.inputs)
+    folded = snap.to_folded()
+    if args.json:
+        print(json.dumps({"meta": snap.meta, **folded.to_json()}, indent=1))
+        return 0
+    total = folded.total_ns()
+    print(f"profile: {len(folded)} edges, {total/1e9:.3f}s folded total, "
+          f"group={folded.group!r}")
+    if snap.meta:
+        print(f"meta: {json.dumps(snap.meta, sort_keys=True)}")
+    for comp in args.component:
+        print()
+        print(component_view(folded, comp).render(args.top))
+        print()
+        print(api_view_by_caller(folded, comp).render(args.top))
+    print()
+    print(render_flow_matrix(folded))
+    return 0
+
+
+def _cmd_merge(args: argparse.Namespace) -> int:
+    merged = _load_many(args.inputs)
+    # mark the output as a merge product even for a single input, so a
+    # store reduce over a dir containing it knows to skip it
+    merged.meta.setdefault("merged_from",
+                           [str(merged.meta.get("label", "?"))])
+    merged.save(args.output)
+    print(f"merged {len(args.inputs)} input(s), {len(merged)} edges "
+          f"-> {args.output}")
+    return 0
+
+
+def _cmd_diff(args: argparse.Namespace) -> int:
+    base = load_profile(args.baseline).to_folded()
+    cand = load_profile(args.candidate).to_folded()
+    d = diff_profiles(base, cand, threshold=args.threshold,
+                      fields=tuple(args.fields.split(",")),
+                      min_count=args.min_count,
+                      min_total_ns=args.min_total_ns,
+                      flag_added=not args.no_flag_added)
+    if args.json:
+        print(json.dumps(d.to_json(), indent=1))
+    else:
+        print(d.render())
+    return 1 if d.has_regressions else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.profile",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    rep = sub.add_parser("report", help="render merged profile views")
+    rep.add_argument("inputs", nargs="+",
+                     help="snapshot files and/or shard directories")
+    rep.add_argument("--component", nargs="*", default=["app"],
+                     help="components to render views for")
+    rep.add_argument("--top", type=int, default=20)
+    rep.add_argument("--json", action="store_true")
+    rep.set_defaults(fn=_cmd_report)
+
+    mrg = sub.add_parser("merge", help="reduce shards into one snapshot")
+    mrg.add_argument("inputs", nargs="+")
+    mrg.add_argument("-o", "--output", required=True)
+    mrg.set_defaults(fn=_cmd_merge)
+
+    dif = sub.add_parser("diff", help="flag per-edge regressions")
+    dif.add_argument("baseline")
+    dif.add_argument("candidate")
+    dif.add_argument("--threshold", type=float, default=0.25,
+                     help="relative growth beyond which an edge is flagged")
+    dif.add_argument("--fields", default="total_ns,self_ns,count",
+                     help=f"comma list from {DIFF_FIELDS}")
+    dif.add_argument("--min-count", type=int, default=1)
+    dif.add_argument("--min-total-ns", type=int, default=0)
+    dif.add_argument("--no-flag-added", action="store_true",
+                     help="do not fail the gate on significant NEW edges")
+    dif.add_argument("--json", action="store_true")
+    dif.set_defaults(fn=_cmd_diff)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,157 @@
+"""Columnar profile snapshots — the on-disk form of a FoldedTable.
+
+One snapshot file is a compressed npz holding:
+
+  __header__        uint8 bytes of a json document: schema version, group,
+                    free-form meta (host/pid/label/...), the interned string
+                    table, and the metric name list — the SlotRegistry half
+                    of the serialization
+  caller/component/api   int32 [N] indices into the string table (the
+                    relation-aware (caller, callee, api) key, columnar)
+  kind              int8  [N]
+  count/total_ns/child_ns/min_ns/max_ns   int64 [N] aligned stat columns
+  metric_values     float64 [M, N]
+  metric_mask       bool    [M, N]  (presence — absent metric != 0.0 metric)
+
+The columns are exactly core.folding.EdgeColumns, so loading a snapshot
+drops straight into the vectorized merge path without re-boxing per-edge
+EdgeStats objects.  Round-trip is lossless: FoldedTable -> snapshot ->
+FoldedTable preserves every stat, kind, metric and metric-presence bit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.folding import EdgeColumns, FoldedTable, merge_columns
+
+#: bump on any incompatible layout change; loaders reject newer majors.
+SCHEMA_VERSION = 1
+
+SNAPSHOT_SUFFIX = ".xfa.npz"
+
+_HEADER_KEY = "__header__"
+
+
+@dataclass
+class ProfileSnapshot:
+    """A FoldedTable in columnar form + provenance metadata."""
+
+    columns: EdgeColumns
+    meta: Dict[str, Any] = field(default_factory=dict)
+    schema: int = SCHEMA_VERSION
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def from_folded(folded: FoldedTable,
+                    meta: Optional[Dict[str, Any]] = None) -> "ProfileSnapshot":
+        return ProfileSnapshot(EdgeColumns.from_folded(folded),
+                               meta=dict(meta or {}))
+
+    @staticmethod
+    def merge(snaps: Sequence["ProfileSnapshot"],
+              meta: Optional[Dict[str, Any]] = None) -> "ProfileSnapshot":
+        """Reduce N shards into one snapshot (columnar, order-insensitive)."""
+        cols = merge_columns([s.columns for s in snaps])
+        merged_meta: Dict[str, Any] = {
+            "merged_from": [s.meta.get("label", "?") for s in snaps],
+            "n_shards": len(snaps),
+        }
+        merged_meta.update(meta or {})
+        return ProfileSnapshot(cols, meta=merged_meta)
+
+    # -- views ----------------------------------------------------------------
+    @property
+    def group(self) -> str:
+        return self.columns.group
+
+    def to_folded(self) -> FoldedTable:
+        return self.columns.to_folded()
+
+    def __len__(self) -> int:
+        return len(self.columns)
+
+    # -- disk -----------------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Atomic write (tmp + rename): periodic snapshotters overwrite their
+        shard in place and a crashed writer never leaves a torn file."""
+        cols = self.columns
+        strings: Dict[str, int] = {}
+
+        def intern(parts: List[str]) -> np.ndarray:
+            return np.fromiter((strings.setdefault(s, len(strings))
+                                for s in parts), dtype=np.int32,
+                               count=len(parts))
+
+        caller = intern([k[0] for k in cols.keys])
+        component = intern([k[1] for k in cols.keys])
+        api = intern([k[2] for k in cols.keys])
+        header = {
+            "schema": self.schema,
+            "group": cols.group,
+            "meta": self.meta,
+            "strings": list(strings),
+            "metric_names": list(cols.metric_names),
+            "n_edges": len(cols),
+        }
+        header_bytes = np.frombuffer(
+            json.dumps(header, sort_keys=True).encode("utf-8"), dtype=np.uint8)
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez_compressed(
+                    f, **{_HEADER_KEY: header_bytes},
+                    caller=caller, component=component, api=api,
+                    kind=cols.kind, count=cols.count, total_ns=cols.total_ns,
+                    child_ns=cols.child_ns, min_ns=cols.min_ns,
+                    max_ns=cols.max_ns, metric_values=cols.metric_values,
+                    metric_mask=cols.metric_mask)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    @staticmethod
+    def load(path: str) -> "ProfileSnapshot":
+        with np.load(path) as z:
+            if _HEADER_KEY not in z:
+                raise ValueError(f"{path}: not an XFA profile snapshot")
+            header = json.loads(bytes(z[_HEADER_KEY]).decode("utf-8"))
+            schema = int(header.get("schema", -1))
+            if schema > SCHEMA_VERSION or schema < 1:
+                raise ValueError(
+                    f"{path}: snapshot schema {schema} not supported by this "
+                    f"reader (supports <= {SCHEMA_VERSION})")
+            strings = header["strings"]
+            caller = z["caller"]
+            component = z["component"]
+            api = z["api"]
+            keys = [(strings[c], strings[m], strings[a])
+                    for c, m, a in zip(caller, component, api)]
+            cols = EdgeColumns(
+                keys=keys,
+                count=z["count"].astype(np.int64),
+                total_ns=z["total_ns"].astype(np.int64),
+                child_ns=z["child_ns"].astype(np.int64),
+                min_ns=z["min_ns"].astype(np.int64),
+                max_ns=z["max_ns"].astype(np.int64),
+                kind=z["kind"].astype(np.int8),
+                metric_names=list(header["metric_names"]),
+                metric_values=z["metric_values"].astype(np.float64),
+                metric_mask=z["metric_mask"].astype(bool),
+                group=header.get("group", "main"),
+            )
+        if len(cols) != int(header.get("n_edges", len(cols))):
+            raise ValueError(f"{path}: edge count mismatch vs header")
+        return ProfileSnapshot(cols, meta=dict(header.get("meta", {})),
+                               schema=schema)

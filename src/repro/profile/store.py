@@ -1,0 +1,118 @@
+"""Profile store — a directory of per-process snapshot shards + the reducer.
+
+The paper persists one file per *thread* at thread exit and merges offline;
+a ProfileStore is the per-*process* analogue for fleets: every process (one
+trainer rank, one serving replica, one host of a mesh) owns a single shard
+file named after (label, host, pid) that it atomically overwrites on each
+periodic snapshot — folds are cumulative, so the newest write supersedes
+the previous one and a crash loses at most one interval.  The reducer merges
+whatever shards exist into one profile through the vectorized column merge,
+preserving the relation-aware (caller, callee, api) keys.
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import socket
+import time
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.folding import FoldedTable
+from .snapshot import SNAPSHOT_SUFFIX, ProfileSnapshot
+
+
+def tracer_folded(tracer=None) -> FoldedTable:
+    """Merge every per-thread shadow table of `tracer` (default: the process
+    tracer) into one raw FoldedTable — the process's current host-layer fold."""
+    if tracer is None:
+        from ..core import tracer as xfa
+        tracer = xfa.TRACER
+    return FoldedTable.merge_all(FoldedTable.from_set(tracer.tables))
+
+
+class ProfileStore:
+    """Shard directory: each process writes one shard; anyone can reduce."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    # -- writer side --------------------------------------------------------
+    def shard_path(self, label: str = "shard") -> str:
+        host = socket.gethostname().split(".")[0]
+        return os.path.join(self.root,
+                            f"{label}-{host}-{os.getpid()}{SNAPSHOT_SUFFIX}")
+
+    def write_shard(self, folded: FoldedTable, label: str = "shard",
+                    meta: Optional[Dict[str, Any]] = None) -> str:
+        shard_meta: Dict[str, Any] = {
+            "label": label,
+            "host": socket.gethostname(),
+            "pid": os.getpid(),
+            "written_at": time.time(),
+        }
+        shard_meta.update(meta or {})
+        snap = ProfileSnapshot.from_folded(folded, meta=shard_meta)
+        return snap.save(self.shard_path(label))
+
+    # -- reader side ----------------------------------------------------------
+    def shard_paths(self) -> List[str]:
+        return sorted(glob.glob(os.path.join(self.root,
+                                             f"*{SNAPSHOT_SUFFIX}")))
+
+    def load_shards(self) -> List[ProfileSnapshot]:
+        """Load shard snapshots, EXCLUDING merged outputs: `merge -o` into
+        the shard dir must not make the next reduce count everything twice."""
+        shards = []
+        skipped = []
+        for p in self.shard_paths():
+            snap = ProfileSnapshot.load(p)
+            if "merged_from" in snap.meta:
+                skipped.append(os.path.basename(p))
+            else:
+                shards.append(snap)
+        if skipped:
+            warnings.warn(
+                f"profile dir {self.root!r}: ignoring already-merged "
+                f"snapshot(s) {skipped} when reducing shards", stacklevel=2)
+        return shards
+
+    def reduce(self, meta: Optional[Dict[str, Any]] = None) -> ProfileSnapshot:
+        shards = self.load_shards()
+        if not shards:
+            raise FileNotFoundError(f"no profile shards under {self.root!r}")
+        # two shards with the same (label, host) but different pids are
+        # either a stale shard from a previous run (double-counts every
+        # edge) or replicas sharing a label — either way worth surfacing
+        by_writer: Dict[Tuple[str, str], int] = {}
+        for s in shards:
+            k = (str(s.meta.get("label", "?")), str(s.meta.get("host", "?")))
+            by_writer[k] = by_writer.get(k, 0) + 1
+        dups = [k for k, n in by_writer.items() if n > 1]
+        if dups:
+            warnings.warn(
+                f"profile dir {self.root!r} holds multiple shards with the "
+                f"same (label, host) {dups}; the reduce SUMS them. If these "
+                "are stale shards from a previous run, use a fresh "
+                "--profile-dir per run; if they are concurrent replicas, "
+                "give each a distinct label (e.g. --profile-label serve-0)",
+                stacklevel=2)
+        if len(shards) == 1 and not meta:
+            return shards[0]
+        return ProfileSnapshot.merge(shards, meta=meta)
+
+    def __len__(self) -> int:
+        return len(self.shard_paths())
+
+
+def load_profile(path: str) -> ProfileSnapshot:
+    """Load a profile from a snapshot file, a shard directory (reduced), or
+    a legacy FoldedTable json dump."""
+    if os.path.isdir(path):
+        return ProfileStore(path).reduce()
+    if path.endswith(".json"):
+        return ProfileSnapshot.from_folded(FoldedTable.load(path),
+                                           meta={"label": path})
+    return ProfileSnapshot.load(path)

@@ -173,10 +173,34 @@ class Trainer:
     tcfg: TrainConfig
     ckpt: CheckpointManager
     session: Optional[XFASession] = None
+    #: when set, this process writes (and periodically refreshes) one profile
+    #: shard under `profile_dir`; shards from all ranks/hosts reduce offline
+    #: via `python -m repro.profile {report,merge}`.
+    profile_dir: Optional[str] = None
+    #: steps between shard refreshes; 0 -> only the final shard at run end
+    profile_interval: int = 0
 
     def __post_init__(self):
         if self.session is None:
             self.session = XFASession(device_spec=self.model.fold_spec)
+        self._profile_store = None
+        if self.profile_dir:
+            from repro.profile import ProfileStore
+            self._profile_store = ProfileStore(self.profile_dir)
+
+    def _write_profile_shard(self, step: int) -> None:
+        if self._profile_store is None:
+            return
+        # device/static folds are replicated across SPMD ranks — only rank 0
+        # shards them, or the cross-rank reduce would count them per rank
+        rank0 = jax.process_index() == 0
+        with xfa.scope("runtime", "profile_snapshot"):
+            self._profile_store.write_shard(
+                self.session.folded_all(include_replicated=rank0),
+                label=f"train-r{jax.process_index()}",
+                meta={"step": step, "n_steps": self.session.n_steps,
+                      "wall_ns": self.session.wall_ns,
+                      "rank": jax.process_index()})
 
     @xfa.api("runtime", "compile_step")
     def _compile(self, step_fn, state, batch, table):
@@ -223,9 +247,15 @@ class Trainer:
             if tcfg.ckpt_interval and (step + 1) % tcfg.ckpt_interval == 0:
                 self.ckpt.save(step, state, extra={"next_step": step + 1})
 
+            if self.profile_interval and \
+                    (step + 1) % self.profile_interval == 0:
+                self._write_profile_shard(step + 1)
+
             last_metrics = {k: float(v) for k, v in metrics.items()}
 
         data.stop()
         self.ckpt.wait()
         self.session.finish_device(table)
+        # final shard includes the device fold fetched above
+        self._write_profile_shard(n_steps)
         return state, last_metrics

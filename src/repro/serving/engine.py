@@ -61,6 +61,11 @@ class ServingEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
         self._uid = 0
         self.completed: List[Request] = []
+        self._profile_store = None
+        self._ticks = 0
+        if scfg.profile_dir:
+            from repro.profile import ProfileStore
+            self._profile_store = ProfileStore(scfg.profile_dir)
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
@@ -134,8 +139,18 @@ class ServingEngine:
         except queue.Empty:
             return None
 
+    def write_profile_shard(self) -> None:
+        """Refresh this replica's profile shard (host tracer folds)."""
+        if self._profile_store is None:
+            return
+        from repro.profile import tracer_folded
+        self._profile_store.write_shard(
+            tracer_folded(), label=self.scfg.profile_label,
+            meta={"ticks": self._ticks, "completed": len(self.completed)})
+
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         """Admit from the queue into free slots, tick until all done."""
+        interval = self.scfg.profile_interval_ticks
         for _ in range(max_ticks):
             free = [i for i, s in enumerate(self.slots) if s.request is None]
             while free and not self.queue.empty():
@@ -144,6 +159,11 @@ class ServingEngine:
                     break
                 self._admit(free.pop(0), req)
             n = self._tick()
+            self._ticks += 1
+            if self._profile_store is not None and interval \
+                    and self._ticks % interval == 0:
+                self.write_profile_shard()
             if n == 0 and self.queue.empty():
                 break
+        self.write_profile_shard()
         return self.completed

@@ -1,0 +1,13 @@
+"""Shared test helpers."""
+
+
+def assert_tables_equal(a, b):
+    """Full per-edge FoldedTable equality: every stat, kind, and the metric
+    dict (including presence — absent metric != 0.0 metric)."""
+    assert a.edges.keys() == b.edges.keys()
+    for k in a.edges:
+        ea, eb = a.edges[k], b.edges[k]
+        assert (ea.count, ea.total_ns, ea.child_ns, ea.min_ns, ea.max_ns,
+                ea.kind) == (eb.count, eb.total_ns, eb.child_ns, eb.min_ns,
+                             eb.max_ns, eb.kind), k
+        assert ea.metrics == eb.metrics, k

@@ -6,13 +6,17 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.hlo_analysis import analyze_module, parse_module
+from repro.core.hlo_analysis import (analyze_module, parse_module,
+                                     xla_cost_analysis)
 from repro.core.hlo_flows import (CollectiveFlow, find_redundant_gathers,
                                   parse_collective_flows)
 
 
 def _compile(fn, *args):
     return jax.jit(fn).lower(*args).compile()
+
+
+_cost = xla_cost_analysis
 
 
 class TestLoopAwareness:
@@ -30,8 +34,8 @@ class TestLoopAwareness:
                                 length=10)
             return y
 
-        f1 = _compile(one, x, w).cost_analysis()["flops"]
-        f10 = _compile(scanned, x, w).cost_analysis()["flops"]
+        f1 = _cost(_compile(one, x, w))["flops"]
+        f10 = _cost(_compile(scanned, x, w))["flops"]
         assert f1 == f10  # body counted once despite 10 trips
 
     def test_flat_scan_flops(self):

@@ -1,0 +1,280 @@
+"""Profile store subsystem: snapshot round-trip, columnar merge laws,
+cross-process shard aggregation through the CLI, and diff regression flags."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import assert_tables_equal
+from repro.core.folding import (EdgeColumns, EdgeStats, FoldedTable,
+                                fold_event_log, merge_columns)
+from repro.profile import (ProfileSnapshot, ProfileStore, diff_profiles,
+                           load_profile)
+from repro.profile.__main__ import main as profile_cli
+from repro.profile.snapshot import SCHEMA_VERSION
+
+EVENTS = [
+    ("app", "glibc", "read", 18), ("app", "glibc", "write", 35),
+    ("app", "alloc", "malloc", 10), ("glibc", "alloc", "malloc", 2),
+    ("moe", "glibc", "read", 7), ("app", "glibc", "read", 4),
+    ("optimizer", "alloc", "free", 1), ("moe", "pthread", "lock", 900),
+]
+
+
+def rich_table() -> FoldedTable:
+    """A table exercising every field: kinds, metrics, count-0 edges,
+    the min_ns sentinel, child_ns."""
+    t = fold_event_log(EVENTS)
+    t.edges[("app", "glibc", "read")].child_ns = 5
+    t.edges[("moe", "pthread", "lock")].kind = 1  # KIND_WAIT
+    t.edges[("app", "alloc", "malloc")].metrics = {"bytes": 4096.0,
+                                                   "load[0]": 1.0}
+    # device/static-style edge: metrics only, never timed
+    t.edges[("app", "moe", "dispatch")] = EdgeStats(
+        metrics={"flops": 1e9, "bytes": 0.0})
+    t.group = "proc0"
+    return t
+
+
+# ------------------------------------------------------------- snapshot ----
+class TestSnapshot:
+    def test_roundtrip_lossless(self, tmp_path):
+        t = rich_table()
+        p = str(tmp_path / "t.xfa.npz")
+        ProfileSnapshot.from_folded(t, meta={"label": "x"}).save(p)
+        snap = ProfileSnapshot.load(p)
+        assert snap.meta["label"] == "x"
+        assert snap.schema == SCHEMA_VERSION
+        back = snap.to_folded()
+        assert back.group == "proc0"
+        assert_tables_equal(back, t)
+        # metric PRESENCE survives: bytes=0.0 stays recorded, absent metrics
+        # stay absent
+        e = back.edges[("app", "moe", "dispatch")]
+        assert e.metrics == {"flops": 1e9, "bytes": 0.0}
+        assert back.edges[("moe", "pthread", "lock")].metrics == {}
+
+    def test_empty_roundtrip(self, tmp_path):
+        p = str(tmp_path / "e.xfa.npz")
+        ProfileSnapshot.from_folded(FoldedTable()).save(p)
+        assert len(ProfileSnapshot.load(p).to_folded()) == 0
+
+    def test_rejects_newer_schema(self, tmp_path):
+        t = fold_event_log(EVENTS[:2])
+        p = str(tmp_path / "t.xfa.npz")
+        snap = ProfileSnapshot.from_folded(t)
+        snap.schema = SCHEMA_VERSION + 1
+        snap.save(p)
+        with pytest.raises(ValueError, match="schema"):
+            ProfileSnapshot.load(p)
+
+    def test_rejects_non_snapshot(self, tmp_path):
+        p = str(tmp_path / "junk.npz")
+        np.savez(p, a=np.zeros(3))
+        with pytest.raises(ValueError, match="not an XFA profile"):
+            ProfileSnapshot.load(p)
+
+
+# ------------------------------------------------------ columnar merge ----
+class TestColumnarMerge:
+    def _random_tables(self, n, seed):
+        rng = np.random.default_rng(seed)
+        tables = []
+        for g in range(n):
+            evs = [(f"c{rng.integers(3)}", f"m{rng.integers(4)}",
+                    f"a{rng.integers(5)}", int(rng.integers(1, 1000)))
+                   for _ in range(int(rng.integers(0, 60)))]
+            t = fold_event_log(evs)
+            t.group = f"p{g}"
+            for k in list(t.edges)[::3]:
+                t.edges[k].metrics = {"flops": float(rng.integers(1, 100))}
+            tables.append(t)
+        return tables
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_matches_pairwise_oracle(self, seed):
+        tables = self._random_tables(5, seed)
+        want = FoldedTable.merge_all(tables)
+        got = FoldedTable.merge_all_columnar(tables)
+        assert_tables_equal(got, want)
+
+    def test_commutative_and_associative(self):
+        a, b, c = (t.to_columns() for t in self._random_tables(3, 7))
+        left = merge_columns([merge_columns([a, b]), c]).to_folded()
+        right = merge_columns([a, merge_columns([b, c])]).to_folded()
+        flipped = merge_columns([c, a, b]).to_folded()
+        assert_tables_equal(left, right)
+        assert_tables_equal(left, flipped)
+
+    def test_empty_identity(self):
+        t = rich_table()
+        merged = merge_columns([t.to_columns(),
+                                EdgeColumns.empty()]).to_folded()
+        assert_tables_equal(merged, t)
+
+
+# ----------------------------------------------------------------- store ----
+class TestStore:
+    def test_shard_overwrite_is_cumulative_refresh(self, tmp_path):
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS[:3]), label="train")
+        store.write_shard(fold_event_log(EVENTS), label="train")
+        assert len(store) == 1  # same process+label refreshes in place
+        assert_tables_equal(store.reduce().to_folded(),
+                            fold_event_log(EVENTS))
+
+    def test_reduce_empty_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ProfileStore(str(tmp_path)).reduce()
+
+    def test_reduce_warns_on_stale_same_writer_shards(self, tmp_path):
+        """Two shards with the same (label, host) but different pids are a
+        stale previous run — reduce sums them, so it must warn."""
+        store = ProfileStore(str(tmp_path))
+        snap = ProfileSnapshot.from_folded(
+            fold_event_log(EVENTS[:2]),
+            meta={"label": "train", "host": "h", "pid": 1})
+        snap.save(str(tmp_path / "train-h-1.xfa.npz"))
+        snap.meta["pid"] = 2
+        snap.save(str(tmp_path / "train-h-2.xfa.npz"))
+        with pytest.warns(UserWarning, match="SUMS them"):
+            merged = store.reduce()
+        assert merged.to_folded().edges[("app", "glibc", "read")].count == 2
+
+    def test_reduce_ignores_merged_snapshot_in_dir(self, tmp_path):
+        """`merge RUN_DIR -o RUN_DIR/merged.xfa.npz` must not double-count
+        on the next reduce."""
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS), label="p0")
+        assert profile_cli(["merge", str(tmp_path), "-o",
+                            str(tmp_path / "merged.xfa.npz")]) == 0
+        with pytest.warns(UserWarning, match="already-merged"):
+            merged = store.reduce()
+        assert_tables_equal(merged.to_folded(), fold_event_log(EVENTS))
+
+    def test_load_profile_json_compat(self, tmp_path):
+        t = fold_event_log(EVENTS)
+        p = str(tmp_path / "legacy.json")
+        t.dump(p)
+        assert_tables_equal(load_profile(p).to_folded(), t)
+
+
+# -------------------------------------------------- cross-process merge ----
+WRITER = """
+import sys, json
+from repro.core.folding import fold_event_log
+from repro.profile import ProfileStore
+
+events = [tuple(e) for e in json.loads(sys.argv[1])]
+store = ProfileStore(sys.argv[2])
+store.write_shard(fold_event_log(events), label=sys.argv[3])
+print("wrote", store.shard_paths())
+"""
+
+
+class TestCrossProcess:
+    def test_two_process_shards_merge_to_single_process_profile(self, tmp_path):
+        """The acceptance path: two separate OS processes each fold half of
+        the work and write shards; the CLI merges them into a profile whose
+        per-edge stats are identical to one process folding everything."""
+        shard_dir = str(tmp_path / "shards")
+        half = len(EVENTS) // 2
+        for label, chunk in (("p0", EVENTS[:half]), ("p1", EVENTS[half:])):
+            proc = subprocess.run(
+                [sys.executable, "-c", WRITER, json.dumps(chunk),
+                 shard_dir, label],
+                capture_output=True, text=True, timeout=120)
+            assert proc.returncode == 0, proc.stderr
+        assert len(ProfileStore(shard_dir)) == 2
+
+        merged_path = str(tmp_path / "merged.xfa.npz")
+        assert profile_cli(["merge", shard_dir, "-o", merged_path]) == 0
+        merged = ProfileSnapshot.load(merged_path).to_folded()
+        assert_tables_equal(merged, fold_event_log(EVENTS))
+
+    def test_report_renders_merged_views(self, tmp_path, capsys):
+        shard_dir = str(tmp_path / "shards")
+        store = ProfileStore(shard_dir)
+        store.write_shard(fold_event_log(EVENTS), label="r0")
+        assert profile_cli(["report", shard_dir]) == 0
+        out = capsys.readouterr().out
+        assert "Component view: app" in out
+        assert "Flow matrix" in out
+
+
+# ------------------------------------------------------------------ diff ----
+class TestDiff:
+    def test_flags_injected_slowdown(self, tmp_path):
+        base = fold_event_log(EVENTS)
+        slow = fold_event_log(EVENTS)
+        e = slow.edges[("app", "glibc", "write")]
+        e.total_ns *= 3  # injected 3x regression on one edge
+        d = diff_profiles(base, slow, threshold=0.5)
+        assert d.has_regressions
+        assert [r.key for r in d.regressions] == [("app", "glibc", "write")]
+        assert "total_ns" in d.regressions[0].flagged
+        assert "count" not in d.regressions[0].flagged
+        assert "REG" in d.render()
+
+    def test_below_threshold_is_clean(self):
+        base = fold_event_log(EVENTS)
+        d = diff_profiles(base, base, threshold=0.25)
+        assert not d.has_regressions
+        assert d.unchanged == len(base)
+
+    def test_added_and_removed_edges(self):
+        base = fold_event_log(EVENTS[:4])
+        cand = fold_event_log(EVENTS[2:])
+        d = diff_profiles(base, cand, threshold=0.25)
+        added = {x.key for x in d.added}
+        removed = {x.key for x in d.removed}
+        assert ("moe", "pthread", "lock") in added
+        assert ("app", "glibc", "write") in removed
+        # new edges fail the gate by default (a rename could hide a hot
+        # edge otherwise) but can be waived
+        assert d.has_regressions
+        d2 = diff_profiles(base, cand, threshold=0.25, flag_added=False)
+        assert not d2.has_regressions
+
+    def test_cli_diff_exit_codes(self, tmp_path, capsys):
+        base = fold_event_log(EVENTS)
+        slow = fold_event_log(EVENTS)
+        slow.edges[("app", "glibc", "write")].total_ns *= 3
+        pb = str(tmp_path / "base.xfa.npz")
+        pc = str(tmp_path / "cand.xfa.npz")
+        ProfileSnapshot.from_folded(base).save(pb)
+        ProfileSnapshot.from_folded(slow).save(pc)
+        assert profile_cli(["diff", pb, pb, "--threshold", "0.5"]) == 0
+        assert profile_cli(["diff", pb, pc, "--threshold", "0.5"]) == 1
+        capsys.readouterr()
+        assert profile_cli(["diff", pb, pc, "--threshold", "0.5",
+                            "--json"]) == 1
+        payload = json.loads(capsys.readouterr().out)
+        flagged = payload["regressions"][0]
+        assert (flagged["caller"], flagged["component"],
+                flagged["api"]) == ("app", "glibc", "write")
+
+
+# --------------------------------------------------------------- session ----
+class TestSessionSnapshot:
+    def test_session_snapshot_includes_host_folds(self, tmp_path):
+        from repro.core.session import XFASession
+        from repro.core.tracer import Tracer
+
+        t = Tracer()
+
+        @t.api("data")
+        def load():
+            return 1
+
+        load()
+        load()
+        sess = XFASession(tracer=t)
+        p = sess.snapshot(str(tmp_path / "s.xfa.npz"), meta={"label": "s"})
+        snap = ProfileSnapshot.load(p)
+        folded = snap.to_folded()
+        assert folded.edges[("app", "data", "load")].count == 2
+        assert snap.meta["label"] == "s"

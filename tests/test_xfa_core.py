@@ -173,6 +173,25 @@ class TestTracer:
         merged = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
         assert merged.edges[("app", "liba", "f")].count == 16
 
+    def test_dead_thread_tables_retire_bounded(self):
+        """Thread churn (e.g. one ckpt-writer thread per save) must not grow
+        the table list without bound; dead tables fold into per-group
+        accumulators and no data is lost."""
+        t = make_tracer()
+
+        @t.api("liba")
+        def f():
+            pass
+
+        n = t.tables.RETIRE_SWEEP_THRESHOLD * 3
+        for i in range(n):
+            th = threading.Thread(target=f, name=f"w{i}")
+            th.start()
+            th.join()
+        assert len(t.tables.tables()) <= t.tables.RETIRE_SWEEP_THRESHOLD + 2
+        merged = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert merged.edges[("app", "liba", "f")].count == n
+
 
 # --------------------------------------------------------------- folding ----
 class TestFolding:
