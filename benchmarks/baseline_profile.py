@@ -1,0 +1,109 @@
+"""Deterministic synthetic workload -> reference XFA profile.
+
+Folds a fixed, seeded event stream shaped like a smoke training run (data
+loading, dispatch, device sync, checkpoint writes, optimizer work, a few
+wait edges) plus device-layer style metric emissions, and persists it as
+an uncompressed snapshot.  Every byte is a function of (seed, steps,
+scale): rerunning the script reproduces the checked-in baseline exactly.
+
+CI (non-blocking `profile-diff` lane) regenerates the candidate profile
+and runs
+
+    python -m repro.profile diff tests/data/ci_baseline.xfa.npz cand.xfa.npz
+
+so the whole persist -> reduce -> diff pipeline is exercised as a perf
+gate on every push; `--scale`/`--extra-edge` exist to inject regressions
+when calibrating thresholds (ROADMAP: thresholds logged, not yet gating).
+
+Regenerate the checked-in baseline after a DELIBERATE profile-shape change:
+
+    python benchmarks/baseline_profile.py -o tests/data/ci_baseline.xfa.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core.folding import EdgeStats, FoldedTable  # noqa: E402
+from repro.profile import ProfileSnapshot  # noqa: E402
+
+#: the synthetic run's cross-flow edges: (caller, component, api,
+#: mean_ns, wait?) — roughly the shape a smoke train run folds.
+EDGES = (
+    ("app", "data", "next_batch", 120_000, False),
+    ("app", "data", "generate_batch", 450_000, False),
+    ("app", "runtime", "dispatch_step", 2_500_000, False),
+    ("runtime", "runtime", "device_sync", 1_200_000, True),
+    ("app", "runtime", "compile_step", 30_000_000, False),
+    ("app", "ckpt", "save", 5_000_000, False),
+    ("ckpt", "runtime", "flush_wait", 800_000, True),
+    ("app", "optimizer", "apply_updates", 900_000, False),
+    ("optimizer", "collective", "grad_allreduce", 600_000, False),
+    ("app", "loss", "train_step", 0, False),
+)
+
+
+def build_profile(steps: int = 50, seed: int = 0,
+                  scale: float = 1.0) -> FoldedTable:
+    rng = np.random.default_rng(seed)
+    t = FoldedTable(group="ci-baseline")
+    for caller, comp, api, mean_ns, wait in EDGES:
+        count = steps                         # every edge fires per step
+        if api == "compile_step":
+            count = 1
+        elif api == "save":
+            count = max(steps // 10, 1)
+        elif api == "flush_wait":
+            count = max(steps // 10, 1)
+        if mean_ns == 0:                      # count-only edge
+            t.edges[(caller, comp, api)] = EdgeStats(count=count)
+            continue
+        # deterministic "timings": seeded integer jitter around the mean
+        durs = (mean_ns + rng.integers(-mean_ns // 10, mean_ns // 10,
+                                       size=count)) * scale
+        durs = durs.astype(np.int64)
+        t.edges[(caller, comp, api)] = EdgeStats(
+            count=count, total_ns=int(durs.sum()),
+            child_ns=int(durs.sum() // 20),
+            min_ns=int(durs.min()), max_ns=int(durs.max()),
+            kind=1 if wait else 0)
+    # device-layer style metrics (flops/bytes), metric-mask exercised
+    t.edges[("app", "runtime", "dispatch_step")].metrics = {
+        "flops": float(steps) * 1.0e12, "bytes": float(steps) * 2.0e9}
+    t.edges[("app", "loss", "train_step")].metrics = {"tokens": 0.0}
+    return t
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("-o", "--output", default="baseline.xfa.npz")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="multiply all durations (inject a regression)")
+    ap.add_argument("--extra-edge", action="store_true",
+                    help="add a new hot edge (exercise flag_added)")
+    args = ap.parse_args()
+
+    t = build_profile(args.steps, args.seed, args.scale)
+    if args.extra_edge:
+        t.edges[("app", "moe", "unexpected_dispatch")] = EdgeStats(
+            count=args.steps, total_ns=10_000_000 * args.steps,
+            min_ns=9_000_000, max_ns=11_000_000)
+    snap = ProfileSnapshot.from_folded(
+        t, meta={"label": "ci-baseline", "steps": args.steps,
+                 "seed": args.seed, "scale": args.scale})
+    snap.save(args.output, compress=False)
+    print(f"wrote {args.output}: {len(t)} edges, "
+          f"{t.total_ns()/1e9:.3f}s folded")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -298,6 +298,16 @@ class ServeConfig:
     #: shard label; give replicas sharing a host+dir distinct labels (e.g.
     #: serve-0, serve-1) so the reducer can tell them from stale shards
     profile_label: str = "serve"
+    #: retention for this replica's snapshot ring (see profile/store.py:
+    #: RetentionPolicy): ring length per shard, max snapshot age, and a
+    #: per-run-dir byte budget; 0 means unbounded for each knob, and the
+    #: newest snapshot of a shard is never deleted
+    profile_keep_last: int = 8
+    profile_max_age_s: float = 0.0
+    profile_max_bytes: int = 0
+    #: free-form key=value metadata merged into the run manifest at engine
+    #: start (the run registry indexes it for `repro.profile query`)
+    profile_meta: Tuple[Tuple[str, str], ...] = ()
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

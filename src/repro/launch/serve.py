@@ -36,6 +36,16 @@ def main() -> int:
     ap.add_argument("--profile-label", default="serve",
                     help="shard label; give replicas sharing a host "
                          "distinct labels (serve-0, serve-1, ...)")
+    ap.add_argument("--profile-keep-last", type=int, default=8,
+                    help="snapshots kept per shard ring (0: unbounded)")
+    ap.add_argument("--profile-max-age-s", type=float, default=0.0,
+                    help="delete ring snapshots older than this (0: never)")
+    ap.add_argument("--profile-max-bytes", type=int, default=0,
+                    help="per-run-dir snapshot byte budget (0: unbounded)")
+    from repro.profile import kv_pair
+    ap.add_argument("--profile-meta", action="append", default=[],
+                    type=kv_pair, metavar="KEY=VALUE",
+                    help="extra run-manifest metadata (repeatable)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -57,7 +67,11 @@ def main() -> int:
                                        max_seq_len=args.max_seq,
                                        profile_dir=args.profile_dir,
                                        profile_interval_ticks=args.profile_interval,
-                                       profile_label=args.profile_label))
+                                       profile_label=args.profile_label,
+                                       profile_keep_last=args.profile_keep_last,
+                                       profile_max_age_s=args.profile_max_age_s,
+                                       profile_max_bytes=args.profile_max_bytes,
+                                       profile_meta=tuple(args.profile_meta)))
     rng = np.random.default_rng(0)
     for _ in range(args.requests):
         n = int(rng.integers(4, args.max_seq // 4))

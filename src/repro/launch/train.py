@@ -37,10 +37,23 @@ def main() -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--profile-dir", default="",
-                    help="write per-process XFA profile shards here "
-                         "(reduce with: python -m repro.profile report DIR)")
+                    help="register the run + write per-process XFA profile "
+                         "snapshot rings here (reduce with: python -m "
+                         "repro.profile report DIR; browse runs with: "
+                         "python -m repro.profile query ROOT)")
     ap.add_argument("--profile-interval", type=int, default=0,
-                    help="steps between shard refreshes (0: only at end)")
+                    help="steps between snapshot-ring refreshes "
+                         "(0: only at end)")
+    ap.add_argument("--profile-keep-last", type=int, default=8,
+                    help="snapshots kept per shard ring (0: unbounded)")
+    ap.add_argument("--profile-max-age-s", type=float, default=0.0,
+                    help="delete ring snapshots older than this (0: never)")
+    ap.add_argument("--profile-max-bytes", type=int, default=0,
+                    help="per-run-dir snapshot byte budget (0: unbounded)")
+    from repro.profile import kv_pair
+    ap.add_argument("--profile-meta", action="append", default=[],
+                    type=kv_pair, metavar="KEY=VALUE",
+                    help="extra run-manifest metadata (repeatable)")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -55,11 +68,17 @@ def main() -> int:
                        warmup_steps=max(args.steps // 10, 1),
                        microbatches=args.microbatches,
                        ckpt_interval=args.ckpt_interval)
+    from repro.profile import RetentionPolicy
     trainer = Trainer(model, tcfg,
                       CheckpointManager(args.ckpt_dir, async_save=True),
                       session=XFASession(device_spec=model.fold_spec),
                       profile_dir=args.profile_dir or None,
-                      profile_interval=args.profile_interval)
+                      profile_interval=args.profile_interval,
+                      profile_retention=RetentionPolicy(
+                          keep_last=args.profile_keep_last,
+                          max_age_s=args.profile_max_age_s,
+                          max_bytes=args.profile_max_bytes),
+                      profile_meta=dict(args.profile_meta))
     data = SyntheticLMData(cfg, args.batch, args.seq)
     with runtime_mesh(mesh):
         state, metrics = trainer.run(jax.random.key(0), data, args.steps,

@@ -1,15 +1,25 @@
-"""repro.profile — persistence + cross-process aggregation for XFA profiles.
+"""repro.profile — persistence, indexing + cross-process aggregation of XFA
+profiles.
 
 Scaler merges per-thread shadow tables *offline* (§3.3–3.4); this package
 lifts that design one level: per-*process* profiles are persisted as columnar
 snapshot shards and reduced offline, so profiles survive process exit and can
-be aggregated across hosts, serving replicas, and runs.
+be aggregated across hosts, serving replicas, and runs — and since v2 the
+store is a *run registry*: bounded time-series snapshot rings per shard, a
+retention/GC policy, and metadata manifests that make whole fleets of runs
+queryable ("all runs of arch X on mesh Y").
 
   snapshot.py   schema-versioned columnar serialization (npz arrays + json
-                slot metadata) of a FoldedTable — lossless round-trip
-  store.py      a directory of per-process shards + the N-way reducer
+                slot metadata) of a FoldedTable — lossless, byte-stable
+  store.py      run dir of per-process snapshot *rings* (sequence-numbered),
+                the N-way reducer, and RetentionPolicy (keep-last / max-age
+                / max-bytes, enforced in-writer and via `gc`)
+  index.py      run manifests + RunRegistry.query (metadata predicates)
+  timeline.py   per-edge count/total_ns/self_ns trajectories across a
+                shard's ring — the in-run drift view
   diff.py       run-over-run comparison with per-edge regression flagging
-  __main__.py   CLI: python -m repro.profile {report,merge,diff}
+  __main__.py   CLI: python -m repro.profile
+                {report,merge,diff,query,gc,timeline}
 
 The merge itself is the vectorized column algebra in core/folding.py
 (merge_columns): registry re-interning + whole-column numpy scatter-adds,
@@ -17,11 +27,19 @@ not per-edge EdgeStats dict loops (benchmarks/merge.py measures the gap).
 """
 
 from .snapshot import SCHEMA_VERSION, SNAPSHOT_SUFFIX, ProfileSnapshot
-from .store import ProfileStore, load_profile, tracer_folded
+from .store import (ProfileStore, RetentionPolicy, find_run_dirs,
+                    load_profile, split_snapshot_name, tracer_folded)
+from .index import (MANIFEST_NAME, RunManifest, RunRegistry, kv_pair,
+                    parse_mesh, register_run)
+from .timeline import ShardTimeline, build_timelines, render_timeline
 from .diff import EdgeDelta, ProfileDiff, diff_profiles
 
 __all__ = [
     "SCHEMA_VERSION", "SNAPSHOT_SUFFIX", "ProfileSnapshot",
-    "ProfileStore", "load_profile", "tracer_folded",
+    "ProfileStore", "RetentionPolicy", "find_run_dirs", "load_profile",
+    "split_snapshot_name", "tracer_folded",
+    "MANIFEST_NAME", "RunManifest", "RunRegistry", "kv_pair", "parse_mesh",
+    "register_run",
+    "ShardTimeline", "build_timelines", "render_timeline",
     "EdgeDelta", "ProfileDiff", "diff_profiles",
 ]

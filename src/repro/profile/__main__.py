@@ -1,13 +1,20 @@
 """CLI for the profile store.
 
-    python -m repro.profile report  RUN_DIR_OR_SNAPSHOT... [--component app]
-    python -m repro.profile merge   SHARD_OR_DIR... -o merged.xfa.npz
-    python -m repro.profile diff    BASELINE CANDIDATE [--threshold 0.25]
+    python -m repro.profile report   RUN_DIR_OR_SNAPSHOT... [--component app]
+    python -m repro.profile merge    SHARD_OR_DIR... -o merged.xfa.npz
+    python -m repro.profile diff     BASELINE CANDIDATE [--threshold 0.25]
+    python -m repro.profile query    ROOT [--config C] [--mesh 4x2] [--label L]
+    python -m repro.profile gc       ROOT... [--keep-last N] [--max-age-s S]
+    python -m repro.profile timeline RUN_DIR [--field total_ns] [--shard S]
 
 `report` reduces every given shard/dir into one profile and renders the
 paper's component/API views + flow matrix.  `merge` persists that reduction.
 `diff` compares two profiles and exits 1 when any per-edge regression
-exceeds the threshold — wire it into CI as a perf gate.
+exceeds the threshold — wire it into CI as a perf gate.  `query` filters
+the run registry by metadata predicates (exit 1 when nothing matches, so
+it composes in shell pipelines).  `gc` applies a retention policy offline;
+`timeline` renders per-edge count/total_ns/self_ns trajectories across one
+run's sequence-numbered snapshots.
 """
 
 from __future__ import annotations
@@ -20,8 +27,11 @@ from typing import List
 from ..core.views import (api_view_by_caller, component_view,
                           render_flow_matrix)
 from .diff import DIFF_FIELDS, diff_profiles
+from .index import RunRegistry, kv_pair
 from .snapshot import ProfileSnapshot
-from .store import load_profile
+from .store import (ProfileStore, RetentionPolicy, find_run_dirs,
+                    load_profile)
+from .timeline import TIMELINE_FIELDS, build_timelines, render_timeline
 
 
 def _load_many(paths: List[str]) -> ProfileSnapshot:
@@ -77,6 +87,71 @@ def _cmd_diff(args: argparse.Namespace) -> int:
     return 1 if d.has_regressions else 0
 
 
+def _cmd_query(args: argparse.Namespace) -> int:
+    where = dict(args.where)
+    since = None
+    if args.max_age_s:
+        import time
+        since = time.time() - args.max_age_s
+    runs = RunRegistry(args.root).query(
+        config=args.config, arch=args.arch, mesh=args.mesh or None,
+        label=args.label, kind=args.kind, since=since, where=where)
+    if args.json:
+        print(json.dumps([{**m.to_json(), "run_dir": m.run_dir}
+                          for m in runs], indent=1))
+    else:
+        for m in runs:
+            line = m.describe()
+            if args.verbose:
+                store = ProfileStore(m.run_dir)
+                line += (f" shards={len(store)} "
+                         f"snapshots={len(store.snapshot_paths())}")
+            print(line)
+        if not runs:
+            print("no runs matched", file=sys.stderr)
+    return 0 if runs else 1
+
+
+def _cmd_gc(args: argparse.Namespace) -> int:
+    policy = RetentionPolicy(keep_last=args.keep_last,
+                             max_age_s=args.max_age_s,
+                             max_bytes=args.max_bytes)
+    report = {}
+    for root in args.roots:
+        for run_dir in find_run_dirs(root):
+            victims = policy.enforce(run_dir, dry_run=args.dry_run)
+            if victims:
+                report[run_dir] = victims
+    verb = "would delete" if args.dry_run else "deleted"
+    if args.json:
+        print(json.dumps({"dry_run": args.dry_run, "deleted": report},
+                         indent=1))
+    else:
+        n = sum(len(v) for v in report.values())
+        print(f"gc: {verb} {n} snapshot(s) across {len(report)} run dir(s)")
+        for run_dir, victims in sorted(report.items()):
+            for v in victims:
+                print(f"  {verb[:3].upper()}  {v}")
+    return 0
+
+
+def _cmd_timeline(args: argparse.Namespace) -> int:
+    tls = build_timelines(args.run_dir, shard=args.shard,
+                          min_len=args.min_snapshots)
+    if not tls:
+        print(f"no shard under {args.run_dir!r} has "
+              f">= {args.min_snapshots} snapshots", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps([tl.to_json(args.field) for tl in tls], indent=1))
+        return 0
+    for tl in tls:
+        print(render_timeline(tl, fld=args.field, top=args.top,
+                              edge=args.edge))
+        print()
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.profile",
                                  description=__doc__)
@@ -109,6 +184,49 @@ def main(argv=None) -> int:
                      help="do not fail the gate on significant NEW edges")
     dif.add_argument("--json", action="store_true")
     dif.set_defaults(fn=_cmd_diff)
+
+    qry = sub.add_parser("query", help="filter the run registry by metadata")
+    qry.add_argument("root", help="registry root (tree of run dirs)")
+    qry.add_argument("--config", help="config name (fnmatch glob ok)")
+    qry.add_argument("--arch", help="model arch/family (glob ok)")
+    qry.add_argument("--mesh", default="", help="mesh shape, e.g. 4x2")
+    qry.add_argument("--label", help="run label (glob ok)")
+    qry.add_argument("--kind", help="train | serve (glob ok)")
+    qry.add_argument("--max-age-s", type=float, default=0.0,
+                     help="only runs started within the last S seconds")
+    qry.add_argument("--where", action="append", default=[], type=kv_pair,
+                     metavar="KEY=VALUE",
+                     help="match a manifest field or free-form meta key")
+    qry.add_argument("-v", "--verbose", action="store_true",
+                     help="also count each run's shards/snapshots")
+    qry.add_argument("--json", action="store_true")
+    qry.set_defaults(fn=_cmd_query)
+
+    gcp = sub.add_parser("gc", help="apply a retention policy offline")
+    gcp.add_argument("roots", nargs="+",
+                     help="run dirs or registry roots (recursed)")
+    gcp.add_argument("--keep-last", type=int, default=8,
+                     help="ring length kept per shard (0: unbounded)")
+    gcp.add_argument("--max-age-s", type=float, default=0.0,
+                     help="delete snapshots older than S seconds")
+    gcp.add_argument("--max-bytes", type=int, default=0,
+                     help="per-run-dir snapshot byte budget")
+    gcp.add_argument("-n", "--dry-run", action="store_true")
+    gcp.add_argument("--json", action="store_true")
+    gcp.set_defaults(fn=_cmd_gc)
+
+    tml = sub.add_parser("timeline",
+                         help="per-edge deltas across a shard's snapshots")
+    tml.add_argument("run_dir")
+    tml.add_argument("--field", default="total_ns",
+                     help=f"one of {TIMELINE_FIELDS}")
+    tml.add_argument("--shard", help="substring filter on shard stems")
+    tml.add_argument("--edge", help="substring filter on edge keys")
+    tml.add_argument("--top", type=int, default=12)
+    tml.add_argument("--min-snapshots", type=int, default=2,
+                     help="skip shards with fewer ring entries")
+    tml.add_argument("--json", action="store_true")
+    tml.set_defaults(fn=_cmd_timeline)
 
     args = ap.parse_args(argv)
     return args.fn(args)

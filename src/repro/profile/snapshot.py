@@ -24,10 +24,12 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import zipfile
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
+from numpy.lib import format as _npformat
 
 from ..core.folding import EdgeColumns, FoldedTable, merge_columns
 
@@ -37,6 +39,26 @@ SCHEMA_VERSION = 1
 SNAPSHOT_SUFFIX = ".xfa.npz"
 
 _HEADER_KEY = "__header__"
+
+#: fixed zip member timestamp (the zip epoch) — snapshot bytes must be a
+#: function of their CONTENT only, so identical profiles hash/compare equal
+#: and the golden-file schema test can pin the v1 layout byte-for-byte.
+_ZIP_EPOCH = (1980, 1, 1, 0, 0, 0)
+
+
+def _write_npz(f, arrays: Dict[str, np.ndarray], compress: bool) -> None:
+    """np.savez_compressed replacement with deterministic output: fixed
+    member timestamps/attributes and caller-controlled member order.  The
+    result is a regular npz that np.load reads unchanged."""
+    method = zipfile.ZIP_DEFLATED if compress else zipfile.ZIP_STORED
+    with zipfile.ZipFile(f, "w", method) as zf:
+        for name, arr in arrays.items():
+            zi = zipfile.ZipInfo(name + ".npy", date_time=_ZIP_EPOCH)
+            zi.compress_type = method
+            zi.external_attr = 0o644 << 16
+            with zf.open(zi, "w") as member:
+                _npformat.write_array(member, np.asanyarray(arr),
+                                      allow_pickle=False)
 
 
 @dataclass
@@ -78,9 +100,12 @@ class ProfileSnapshot:
         return len(self.columns)
 
     # -- disk -----------------------------------------------------------------
-    def save(self, path: str) -> str:
+    def save(self, path: str, compress: bool = True) -> str:
         """Atomic write (tmp + rename): periodic snapshotters overwrite their
-        shard in place and a crashed writer never leaves a torn file."""
+        shard in place and a crashed writer never leaves a torn file.  The
+        bytes are deterministic in the snapshot content (fixed zip metadata);
+        `compress=False` additionally removes the zlib dependence, which is
+        what checked-in golden/baseline files use."""
         cols = self.columns
         strings: Dict[str, int] = {}
 
@@ -107,13 +132,15 @@ class ProfileSnapshot:
                                    suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                np.savez_compressed(
-                    f, **{_HEADER_KEY: header_bytes},
-                    caller=caller, component=component, api=api,
-                    kind=cols.kind, count=cols.count, total_ns=cols.total_ns,
-                    child_ns=cols.child_ns, min_ns=cols.min_ns,
-                    max_ns=cols.max_ns, metric_values=cols.metric_values,
-                    metric_mask=cols.metric_mask)
+                _write_npz(f, {
+                    _HEADER_KEY: header_bytes,
+                    "caller": caller, "component": component, "api": api,
+                    "kind": cols.kind, "count": cols.count,
+                    "total_ns": cols.total_ns, "child_ns": cols.child_ns,
+                    "min_ns": cols.min_ns, "max_ns": cols.max_ns,
+                    "metric_values": cols.metric_values,
+                    "metric_mask": cols.metric_mask,
+                }, compress=compress)
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):

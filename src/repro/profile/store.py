@@ -1,26 +1,62 @@
-"""Profile store — a directory of per-process snapshot shards + the reducer.
+"""Profile store — a run directory of per-process snapshot rings + reducer.
 
 The paper persists one file per *thread* at thread exit and merges offline;
 a ProfileStore is the per-*process* analogue for fleets: every process (one
-trainer rank, one serving replica, one host of a mesh) owns a single shard
-file named after (label, host, pid) that it atomically overwrites on each
-periodic snapshot — folds are cumulative, so the newest write supersedes
-the previous one and a crash loses at most one interval.  The reducer merges
-whatever shards exist into one profile through the vectorized column merge,
-preserving the relation-aware (caller, callee, api) keys.
+trainer rank, one serving replica, one host of a mesh) owns a shard named
+after (label, host, pid).  Since v2 a shard is not a single atomically
+-replaced file but a bounded ring of *sequence-numbered* snapshots
+
+    <label>-<host>-<pid>.000001.xfa.npz
+    <label>-<host>-<pid>.000002.xfa.npz ...
+
+written on each periodic refresh.  Folds are cumulative, so the NEWEST
+snapshot of a shard supersedes the older ones for aggregation (reduce /
+report / merge all use only the newest per shard), while the older ring
+entries are the shard's *time series* — `python -m repro.profile timeline`
+renders per-edge trajectories across them, which is how drift inside one
+run becomes visible (ScalAna's per-run performance-graph argument).
+
+The ring is bounded by a RetentionPolicy (keep-last-N per shard, max-age,
+max-bytes per run dir) enforced in the writer on every refresh and offline
+via `python -m repro.profile gc`.  The newest snapshot of a shard is never
+deleted — a live shard always keeps its latest cumulative fold.
+
+Legacy v1 shards (`<label>-<host>-<pid>.xfa.npz`, no sequence number) load
+as sequence 0 of their shard, so old run dirs keep reducing.
 """
 
 from __future__ import annotations
 
 import glob
 import os
+import re
 import socket
 import time
 import warnings
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..core.folding import FoldedTable
 from .snapshot import SNAPSHOT_SUFFIX, ProfileSnapshot
+
+#: sequence-numbered ring entry: <stem>.<seq:06d>.xfa.npz
+_SEQ_RE = re.compile(r"^(?P<stem>.+)\.(?P<seq>\d{6})$")
+
+
+def split_snapshot_name(path: str) -> Tuple[str, int]:
+    """(shard stem, sequence number) of a snapshot path; legacy un-numbered
+    snapshots are sequence 0 of their stem."""
+    name = os.path.basename(path)
+    if name.endswith(SNAPSHOT_SUFFIX):
+        name = name[: -len(SNAPSHOT_SUFFIX)]
+    m = _SEQ_RE.match(name)
+    if m:
+        return m.group("stem"), int(m.group("seq"))
+    return name, 0
+
+
+def snapshot_name(stem: str, seq: int) -> str:
+    return f"{stem}.{seq:06d}{SNAPSHOT_SUFFIX}"
 
 
 def tracer_folded(tracer=None) -> FoldedTable:
@@ -32,39 +68,153 @@ def tracer_folded(tracer=None) -> FoldedTable:
     return FoldedTable.merge_all(FoldedTable.from_set(tracer.tables))
 
 
-class ProfileStore:
-    """Shard directory: each process writes one shard; anyone can reduce."""
+@dataclass(frozen=True)
+class RetentionPolicy:
+    """Bounded-footprint rules for one run directory.
 
-    def __init__(self, root: str) -> None:
+    keep_last   ring length per shard (0: unbounded)
+    max_age_s   delete snapshots older than this (0: unbounded)
+    max_bytes   total snapshot bytes per run dir; oldest-first eviction
+                across shards until under budget (0: unbounded)
+
+    Whatever the rule, the newest snapshot of every shard survives: a live
+    shard's latest cumulative fold is the one file aggregation needs.
+    """
+
+    keep_last: int = 8
+    max_age_s: float = 0.0
+    max_bytes: int = 0
+
+    @property
+    def unbounded(self) -> bool:
+        return not (self.keep_last or self.max_age_s or self.max_bytes)
+
+    def doomed(self, root: str, now: Optional[float] = None) -> List[str]:
+        """Paths under `root` this policy would delete (oldest-first)."""
+        if self.unbounded:
+            return []
+        now = time.time() if now is None else now
+        entries = []  # (stem, seq, path, size, mtime)
+        for p in glob.glob(os.path.join(root, f"*{SNAPSHOT_SUFFIX}")):
+            try:
+                st = os.stat(p)
+            except FileNotFoundError:      # concurrent writer GC'd it
+                continue
+            stem, seq = split_snapshot_name(p)
+            entries.append((stem, seq, p, st.st_size, st.st_mtime))
+        newest = {}  # stem -> max seq
+        for stem, seq, *_ in entries:
+            newest[stem] = max(newest.get(stem, -1), seq)
+        protected = {p for stem, seq, p, *_ in entries
+                     if seq == newest[stem]}
+        doomed: Dict[str, float] = {}  # path -> mtime (dict keeps order out)
+        by_stem: Dict[str, List] = {}
+        for e in entries:
+            by_stem.setdefault(e[0], []).append(e)
+        for stem, es in by_stem.items():
+            es.sort(key=lambda e: (-e[1], -e[4]))  # newest first
+            if self.keep_last:
+                for e in es[self.keep_last:]:
+                    if e[2] not in protected:
+                        doomed[e[2]] = e[4]
+            if self.max_age_s:
+                for e in es:
+                    if now - e[4] > self.max_age_s and e[2] not in protected:
+                        doomed[e[2]] = e[4]
+        if self.max_bytes:
+            live = [e for e in entries if e[2] not in doomed]
+            total = sum(e[3] for e in live)
+            # oldest first: (mtime, seq) — never the newest of a stem
+            for e in sorted(live, key=lambda e: (e[4], e[1])):
+                if total <= self.max_bytes:
+                    break
+                if e[2] in protected:
+                    continue
+                doomed[e[2]] = e[4]
+                total -= e[3]
+        return sorted(doomed, key=doomed.get)
+
+    def enforce(self, root: str, now: Optional[float] = None,
+                dry_run: bool = False) -> List[str]:
+        """Delete (or with dry_run just report) out-of-policy snapshots."""
+        victims = self.doomed(root, now=now)
+        if not dry_run:
+            for p in victims:
+                try:
+                    os.unlink(p)
+                except FileNotFoundError:  # lost a race with another writer
+                    pass
+        return victims
+
+
+class ProfileStore:
+    """One run directory: per-process shard rings; anyone can reduce."""
+
+    def __init__(self, root: str,
+                 retention: Optional[RetentionPolicy] = None) -> None:
+        # NO makedirs here: readers (query -v, timeline, reduce) construct
+        # stores too, and a typo'd path must error, not leave empty dirs
+        # behind to pollute later registry scans.  write_shard creates it.
         self.root = root
-        os.makedirs(root, exist_ok=True)
+        self.retention = RetentionPolicy() if retention is None else retention
 
     # -- writer side --------------------------------------------------------
-    def shard_path(self, label: str = "shard") -> str:
+    def shard_stem(self, label: str = "shard") -> str:
         host = socket.gethostname().split(".")[0]
-        return os.path.join(self.root,
-                            f"{label}-{host}-{os.getpid()}{SNAPSHOT_SUFFIX}")
+        return f"{label}-{host}-{os.getpid()}"
+
+    def next_seq(self, stem: str) -> int:
+        seqs = [seq for s, seq in map(split_snapshot_name,
+                                      self.snapshot_paths()) if s == stem]
+        return max(seqs, default=0) + 1
 
     def write_shard(self, folded: FoldedTable, label: str = "shard",
                     meta: Optional[Dict[str, Any]] = None) -> str:
+        """Append the next ring snapshot for this process's shard and
+        enforce retention.  Folds are cumulative: each snapshot holds the
+        whole run so far, so the newest alone is enough to aggregate and
+        consecutive snapshots difference into per-interval activity."""
+        os.makedirs(self.root, exist_ok=True)
+        stem = self.shard_stem(label)
+        seq = self.next_seq(stem)
         shard_meta: Dict[str, Any] = {
             "label": label,
             "host": socket.gethostname(),
             "pid": os.getpid(),
+            "seq": seq,
             "written_at": time.time(),
         }
         shard_meta.update(meta or {})
         snap = ProfileSnapshot.from_folded(folded, meta=shard_meta)
-        return snap.save(self.shard_path(label))
+        path = snap.save(os.path.join(self.root, snapshot_name(stem, seq)))
+        self.retention.enforce(self.root)
+        return path
 
     # -- reader side ----------------------------------------------------------
-    def shard_paths(self) -> List[str]:
+    def snapshot_paths(self) -> List[str]:
+        """Every ring entry of every shard in this run dir."""
         return sorted(glob.glob(os.path.join(self.root,
                                              f"*{SNAPSHOT_SUFFIX}")))
 
+    def shards(self) -> Dict[str, List[Tuple[int, str]]]:
+        """stem -> [(seq, path), ...] ascending — each shard's time series."""
+        out: Dict[str, List[Tuple[int, str]]] = {}
+        for p in self.snapshot_paths():
+            stem, seq = split_snapshot_name(p)
+            out.setdefault(stem, []).append((seq, p))
+        for ring in out.values():
+            ring.sort()
+        return out
+
+    def shard_paths(self) -> List[str]:
+        """The NEWEST snapshot of each shard — what aggregation consumes
+        (cumulative folds: the latest ring entry supersedes the others)."""
+        return sorted(ring[-1][1] for ring in self.shards().values())
+
     def load_shards(self) -> List[ProfileSnapshot]:
-        """Load shard snapshots, EXCLUDING merged outputs: `merge -o` into
-        the shard dir must not make the next reduce count everything twice."""
+        """Load newest-per-shard snapshots, EXCLUDING merged outputs:
+        `merge -o` into the shard dir must not make the next reduce count
+        everything twice."""
         shards = []
         skipped = []
         for p in self.shard_paths():
@@ -105,6 +255,16 @@ class ProfileStore:
 
     def __len__(self) -> int:
         return len(self.shard_paths())
+
+
+def find_run_dirs(root: str) -> List[str]:
+    """Directories under `root` (inclusive) holding profile snapshots —
+    the unit `gc` applies a RetentionPolicy to."""
+    dirs = set()
+    for p in glob.glob(os.path.join(root, "**", f"*{SNAPSHOT_SUFFIX}"),
+                       recursive=True):
+        dirs.add(os.path.dirname(p))
+    return sorted(dirs)
 
 
 def load_profile(path: str) -> ProfileSnapshot:

@@ -1,0 +1,159 @@
+"""Timeline — per-edge trajectories across a shard's snapshot ring.
+
+A shard's ring entries are cumulative folds taken at increasing sequence
+numbers, so differencing consecutive snapshots yields the per-interval
+activity of every edge: count/total_ns/self_ns between step K and step
+K+N.  Rendering those deltas side by side is the in-run drift detector —
+an edge whose per-interval time creeps up (garbage accumulation, a cache
+filling, a slot pool fragmenting) is flat in any single snapshot and
+obvious on the timeline.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+from ..core.folding import FoldedTable
+from ..core.shadow import SlotKey
+from .snapshot import ProfileSnapshot
+from .store import ProfileStore
+
+#: fields a timeline can plot; self_ns/mean_ns derive per snapshot.
+TIMELINE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns")
+
+
+def _edge_key_str(key: SlotKey) -> str:
+    caller, comp, api = key
+    return f"{caller} -> {comp}.{api}"
+
+
+@dataclass
+class ShardTimeline:
+    """One shard's ring, loaded: aligned (seq, meta, folded) triples."""
+
+    stem: str
+    seqs: List[int]
+    metas: List[Dict[str, Any]]
+    tables: List[FoldedTable]
+
+    def __len__(self) -> int:
+        return len(self.seqs)
+
+    def edges(self) -> List[SlotKey]:
+        keys = set()
+        for t in self.tables:
+            keys.update(t.edges)
+        return sorted(keys)
+
+    def series(self, key: SlotKey, fld: str = "total_ns") -> List[float]:
+        """Cumulative value of `fld` at each snapshot (0 while absent)."""
+        out = []
+        for t in self.tables:
+            e = t.edges.get(key)
+            out.append(float(getattr(e, fld)) if e is not None else 0.0)
+        return out
+
+    def deltas(self, key: SlotKey, fld: str = "total_ns") -> List[float]:
+        """Per-interval activity: first snapshot's value, then successive
+        differences of the cumulative series.  A negative delta means the
+        writer restarted (a new cumulative fold began) — rendered with a
+        '!' marker.
+
+        `mean_ns` is not cumulative, so differencing it would alias any
+        ordinary speedup into a fake restart; instead each interval gets
+        its TRUE mean, delta(total_ns) / delta(count) (0 for an idle
+        interval, negative only on an actual counter regression)."""
+        if fld == "mean_ns":
+            counts = self.series(key, "count")
+            totals = self.series(key, "total_ns")
+            out = [totals[0] / counts[0] if counts[0] else 0.0]
+            for i in range(1, len(counts)):
+                dc = counts[i] - counts[i - 1]
+                dt = totals[i] - totals[i - 1]
+                out.append(dt / dc if dc > 0 else (-1.0 if dc < 0 else 0.0))
+            return out
+        s = self.series(key, fld)
+        return [s[0]] + [b - a for a, b in zip(s, s[1:])]
+
+    def steps(self) -> List[Any]:
+        """Per-snapshot progress marker from writer meta (step/ticks/seq)."""
+        out = []
+        for seq, meta in zip(self.seqs, self.metas):
+            out.append(meta.get("step", meta.get("ticks", seq)))
+        return out
+
+    def to_json(self, fld: str = "total_ns") -> dict:
+        return {
+            "stem": self.stem,
+            "seqs": self.seqs,
+            "steps": self.steps(),
+            "field": fld,
+            "edges": {
+                _edge_key_str(k): {"series": self.series(k, fld),
+                                   "deltas": self.deltas(k, fld)}
+                for k in self.edges()
+            },
+        }
+
+
+def build_timelines(root: str, shard: Optional[str] = None,
+                    min_len: int = 1) -> List[ShardTimeline]:
+    """Load every shard ring under run dir `root` (optionally filtered by a
+    `shard` substring of the stem) with at least `min_len` snapshots."""
+    store = ProfileStore(root)
+    out = []
+    for stem, ring in sorted(store.shards().items()):
+        if shard is not None and shard not in stem:
+            continue
+        if len(ring) < min_len:
+            continue
+        seqs, metas, tables = [], [], []
+        for seq, path in ring:
+            snap = ProfileSnapshot.load(path)
+            if "merged_from" in snap.meta:   # merge products are not shards
+                continue
+            seqs.append(seq)
+            metas.append(snap.meta)
+            tables.append(snap.to_folded())
+        if len(seqs) >= min_len:
+            out.append(ShardTimeline(stem, seqs, metas, tables))
+    return out
+
+
+def render_timeline(tl: ShardTimeline, fld: str = "total_ns",
+                    top: int = 12, edge: Optional[str] = None) -> str:
+    """Tabular per-edge deltas across the ring, hottest edges first.
+
+    First column is the value at the first snapshot, later columns the
+    per-interval increments ('+N'); '!' marks a negative delta (writer
+    restart).  `edge` filters rows by substring.
+    """
+    if fld not in TIMELINE_FIELDS:
+        raise ValueError(f"unknown timeline field {fld!r}; "
+                         f"choose from {TIMELINE_FIELDS}")
+    keys = tl.edges()
+    if edge:
+        keys = [k for k in keys if edge in _edge_key_str(k)]
+    keys.sort(key=lambda k: -tl.series(k, fld)[-1])
+    shown = keys[:top]
+    what = "per-interval means" if fld == "mean_ns" \
+        else "per-interval deltas"
+    head = [f"timeline {tl.stem}: {len(tl)} snapshots, field={fld} "
+            f"(first value, then {what})"]
+    marks = [f"seq{s}" + (f"@{st}" if st != s else "")
+             for s, st in zip(tl.seqs, tl.steps())]
+    width = max([len(m) for m in marks] + [10])
+    label_w = max([len(_edge_key_str(k)) for k in shown] + [20])
+    head.append("  ".join([" " * label_w] + [m.rjust(width) for m in marks]))
+    for k in shown:
+        d = tl.deltas(k, fld)
+        cells = [f"{d[0]:.0f}".rjust(width)]
+        for v in d[1:]:
+            cell = f"{v:+.0f}" + ("!" if v < 0 else "")
+            cells.append(cell.rjust(width))
+        head.append("  ".join([_edge_key_str(k).ljust(label_w)] + cells))
+    if len(keys) > top:
+        head.append(f"  ... ({len(keys) - top} more edges)")
+    return "\n".join(head)

@@ -173,12 +173,18 @@ class Trainer:
     tcfg: TrainConfig
     ckpt: CheckpointManager
     session: Optional[XFASession] = None
-    #: when set, this process writes (and periodically refreshes) one profile
-    #: shard under `profile_dir`; shards from all ranks/hosts reduce offline
-    #: via `python -m repro.profile {report,merge}`.
+    #: when set, this process registers the run in `profile_dir`'s manifest
+    #: and writes a ring of sequence-numbered profile snapshots there; all
+    #: ranks/hosts reduce offline via `python -m repro.profile`, and the
+    #: ring is the input to the `timeline` drift view.
     profile_dir: Optional[str] = None
     #: steps between shard refreshes; 0 -> only the final shard at run end
     profile_interval: int = 0
+    #: snapshot-ring retention (repro.profile.RetentionPolicy); None keeps
+    #: the store default (keep-last 8 per shard, no age/byte bound)
+    profile_retention: Optional[Any] = None
+    #: extra key=value metadata for the run manifest (experiment name, ...)
+    profile_meta: Optional[Dict[str, Any]] = None
 
     def __post_init__(self):
         if self.session is None:
@@ -186,7 +192,26 @@ class Trainer:
         self._profile_store = None
         if self.profile_dir:
             from repro.profile import ProfileStore
-            self._profile_store = ProfileStore(self.profile_dir)
+            self._profile_store = ProfileStore(
+                self.profile_dir, retention=self.profile_retention)
+
+    def _register_run(self, n_steps: int) -> None:
+        """Write/merge this rank into the run manifest (the registry index:
+        `python -m repro.profile query` filters on these fields)."""
+        if self._profile_store is None:
+            return
+        from repro.profile import register_run
+        mesh = get_runtime_mesh()
+        cfg = self.model.cfg
+        register_run(
+            self.profile_dir,
+            config=cfg.name, arch=cfg.family,
+            mesh_shape=tuple(mesh.devices.shape) if mesh is not None else None,
+            mesh_axes=tuple(mesh.axis_names) if mesh is not None else None,
+            label=f"train-r{jax.process_index()}", kind="train",
+            meta={"n_steps_planned": n_steps,
+                  "microbatches": self.tcfg.microbatches,
+                  **(self.profile_meta or {})})
 
     def _write_profile_shard(self, step: int) -> None:
         if self._profile_store is None:
@@ -230,6 +255,7 @@ class Trainer:
                     state, extra = self.ckpt.restore(state)
                     start_step = int(extra.get("next_step", latest + 1))
 
+        self._register_run(n_steps)
         table = model.table()
         compiled = self._compile(step_fn, state, data.generate(0), table)
         data.start(at_step=start_step)

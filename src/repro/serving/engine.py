@@ -64,8 +64,29 @@ class ServingEngine:
         self._profile_store = None
         self._ticks = 0
         if scfg.profile_dir:
-            from repro.profile import ProfileStore
-            self._profile_store = ProfileStore(scfg.profile_dir)
+            from repro.profile import (ProfileStore, RetentionPolicy,
+                                       register_run)
+            self._profile_store = ProfileStore(
+                scfg.profile_dir,
+                retention=RetentionPolicy(
+                    keep_last=scfg.profile_keep_last,
+                    max_age_s=scfg.profile_max_age_s,
+                    max_bytes=scfg.profile_max_bytes))
+            # index this replica in the run registry so fleets of serving
+            # runs are queryable (`repro.profile query --kind serve ...`)
+            from repro.parallel.axes import get_runtime_mesh
+            mesh = get_runtime_mesh()
+            register_run(
+                scfg.profile_dir,
+                config=model.cfg.name, arch=model.cfg.family,
+                mesh_shape=tuple(mesh.devices.shape)
+                if mesh is not None else None,
+                mesh_axes=tuple(mesh.axis_names)
+                if mesh is not None else None,
+                label=scfg.profile_label, kind="serve",
+                meta={"max_batch": scfg.max_batch,
+                      "max_seq_len": scfg.max_seq_len,
+                      **dict(scfg.profile_meta)})
 
     # -- client API --------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:

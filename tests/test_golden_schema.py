@@ -1,0 +1,117 @@
+"""Golden-file pin of snapshot schema v1.
+
+`tests/data/golden_v1.xfa.npz` is a tiny reference snapshot checked into
+the repo (uncompressed, fixed zip metadata — see snapshot._write_npz).
+These tests assert that loading it, reporting over it, and re-saving it
+reproduces the file byte-for-byte.  If any of them fail after a change to
+snapshot.py, the on-disk layout moved: either restore compatibility or
+bump SCHEMA_VERSION, regenerate the golden (run this file as a script),
+and say so loudly in the PR — schema bumps must be deliberate, never a
+side effect.
+"""
+
+import os
+
+import pytest
+
+from conftest import assert_tables_equal
+from repro.core.folding import EdgeStats, FoldedTable
+from repro.core.views import component_view, render_flow_matrix
+from repro.profile import ProfileSnapshot
+from repro.profile.snapshot import SCHEMA_VERSION
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_v1.xfa.npz")
+
+
+def golden_table() -> FoldedTable:
+    """The reference profile: exercises kinds, wait edges, child_ns, the
+    min_ns sentinel (count-0 edge), metric presence and an explicit 0.0
+    metric — every v1 field with fixed values."""
+    t = FoldedTable(group="golden")
+    t.edges[("app", "glibc", "read")] = EdgeStats(
+        count=3, total_ns=220, child_ns=20, min_ns=18, max_ns=120)
+    t.edges[("app", "glibc", "write")] = EdgeStats(
+        count=1, total_ns=35, child_ns=0, min_ns=35, max_ns=35)
+    t.edges[("moe", "pthread", "lock")] = EdgeStats(
+        count=2, total_ns=900, child_ns=0, min_ns=400, max_ns=500,
+        kind=1)  # KIND_WAIT
+    t.edges[("app", "moe", "dispatch")] = EdgeStats(   # metrics-only edge
+        metrics={"flops": 1e9, "bytes": 0.0})
+    t.edges[("optimizer", "alloc", "malloc")] = EdgeStats(
+        count=5, total_ns=50, child_ns=5, min_ns=2, max_ns=30,
+        metrics={"bytes": 4096.0})
+    return t
+
+
+GOLDEN_META = {"label": "golden", "note": "schema v1 reference"}
+
+
+def write_golden(path: str = GOLDEN) -> str:
+    snap = ProfileSnapshot.from_folded(golden_table(), meta=GOLDEN_META)
+    return snap.save(path, compress=False)
+
+
+class TestGoldenSchemaV1:
+    def test_schema_version_still_v1(self):
+        # regenerating the golden on a bump is a DELIBERATE step; this
+        # makes `SCHEMA_VERSION += 1` fail tests until someone does it
+        assert SCHEMA_VERSION == 1, \
+            "schema bumped: regenerate tests/data/golden_v1.xfa.npz " \
+            "(python tests/test_golden_schema.py) and update this test"
+
+    def test_load_matches_reference_content(self):
+        snap = ProfileSnapshot.load(GOLDEN)
+        assert snap.schema == 1
+        assert snap.meta == GOLDEN_META
+        assert_tables_equal(snap.to_folded(), golden_table())
+
+    def test_report_views_render(self):
+        folded = ProfileSnapshot.load(GOLDEN).to_folded()
+        out = component_view(folded, "app").render()
+        assert "Component view: app" in out
+        moe = component_view(folded, "moe").render()
+        assert "Wait" in moe                      # the KIND_WAIT edge shows
+        assert "Flow matrix" in render_flow_matrix(folded)
+
+    def test_resave_is_byte_stable(self, tmp_path):
+        """load -> save must be the identity on bytes: key order, string
+        interning, header json, zip member metadata are all pinned."""
+        snap = ProfileSnapshot.load(GOLDEN)
+        out = str(tmp_path / "resaved.xfa.npz")
+        snap.save(out, compress=False)
+        with open(GOLDEN, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read(), \
+                "snapshot v1 byte layout changed — bump SCHEMA_VERSION " \
+                "and regenerate the golden if this was intentional"
+
+    def test_fresh_build_matches_golden_bytes(self, tmp_path):
+        """Rebuilding the reference table from source produces the exact
+        checked-in bytes (writer determinism, not just reader identity)."""
+        out = write_golden(str(tmp_path / "rebuilt.xfa.npz"))
+        with open(GOLDEN, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_compressed_save_is_deterministic(self, tmp_path):
+        """Same content -> same bytes for the default compressed writer
+        (fixed zip timestamps); lets shard refreshes be content-compared."""
+        snap = ProfileSnapshot.load(GOLDEN)
+        p1 = str(tmp_path / "a.xfa.npz")
+        p2 = str(tmp_path / "b.xfa.npz")
+        snap.save(p1)
+        snap.save(p2)
+        with open(p1, "rb") as a, open(p2, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_golden_loads_via_np_load_contract(self):
+        """The file stays a plain npz (np.load-readable) — external tooling
+        reads snapshots without repro installed."""
+        import numpy as np
+        with np.load(GOLDEN) as z:
+            assert "__header__" in z and "count" in z
+            assert z["count"].dtype == np.int64
+            assert z["kind"].dtype == np.int8
+            assert z["metric_values"].dtype == np.float64
+
+
+if __name__ == "__main__":   # regenerate the golden after a DELIBERATE bump
+    print("wrote", write_golden())

@@ -1,0 +1,238 @@
+"""End-to-end CLI tests: `python -m repro.profile ...` as real OS processes.
+
+Everything the README advertises is exercised the way an operator (or CI)
+runs it — argv in, stdout/exit-code out: report, merge, diff (exit 1 on an
+injected regression, 0 otherwise), query (exit 1 on no match), gc, and
+timeline.  The fixtures build run dirs through the public writer API so
+the subprocesses see exactly what trainers/serving replicas leave behind.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.folding import fold_event_log
+from repro.profile import (ProfileSnapshot, ProfileStore, RetentionPolicy,
+                           register_run)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+EVENTS = [
+    ("app", "glibc", "read", 18), ("app", "glibc", "write", 35),
+    ("app", "alloc", "malloc", 10), ("moe", "pthread", "lock", 900),
+]
+
+
+def run_cli(*args, timeout=120):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.profile", *map(str, args)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    """Two registered runs: 'train' (3-deep ring, 4x2 mesh) + 'serve'."""
+    train = tmp_path / "train"
+    store = ProfileStore(str(train))
+    for i in range(1, 4):
+        store.write_shard(fold_event_log(EVENTS * i), label="train-r0",
+                          meta={"step": i})
+    register_run(str(train), config="tinyllama_1_1b", arch="dense",
+                 mesh_shape="4x2", label="train-r0", kind="train")
+
+    serve = tmp_path / "serve"
+    ProfileStore(str(serve)).write_shard(fold_event_log(EVENTS),
+                                         label="serve-0")
+    register_run(str(serve), config="qwen3_14b", arch="dense",
+                 mesh_shape=(8,), label="serve-0", kind="serve")
+    return tmp_path
+
+
+class TestReportMergeCLI:
+    def test_report_renders_views(self, registry):
+        p = run_cli("report", registry / "train")
+        assert p.returncode == 0, p.stderr
+        assert "Component view: app" in p.stdout
+        assert "Flow matrix" in p.stdout
+
+    def test_report_json(self, registry):
+        p = run_cli("report", registry / "train", "--json")
+        assert p.returncode == 0, p.stderr
+        doc = json.loads(p.stdout)
+        assert doc["meta"]["label"] == "train-r0"
+        assert len(doc["edges"]) == len(fold_event_log(EVENTS))
+
+    def test_merge_reduces_newest_per_shard(self, registry, tmp_path):
+        out = tmp_path / "merged.xfa.npz"
+        p = run_cli("merge", registry / "train", registry / "serve",
+                    "-o", out)
+        assert p.returncode == 0, p.stderr
+        merged = ProfileSnapshot.load(str(out)).to_folded()
+        # newest train ring entry (EVENTS*3) + the serve shard (EVENTS*1):
+        # older ring entries must NOT be double-counted
+        assert merged.edges[("app", "glibc", "read")].count == 4
+
+    def test_report_missing_dir_fails(self, tmp_path):
+        p = run_cli("report", tmp_path / "nope")
+        assert p.returncode != 0
+
+
+class TestDiffCLI:
+    def test_exit_codes_gate_regressions(self, registry, tmp_path):
+        base = tmp_path / "base.xfa.npz"
+        slow = tmp_path / "slow.xfa.npz"
+        t = fold_event_log(EVENTS)
+        ProfileSnapshot.from_folded(t).save(str(base))
+        t.edges[("app", "glibc", "write")].total_ns *= 3   # injected 3x
+        ProfileSnapshot.from_folded(t).save(str(slow))
+
+        clean = run_cli("diff", base, base, "--threshold", "0.5")
+        assert clean.returncode == 0, clean.stderr
+        assert "0 regressed" in clean.stdout
+
+        hot = run_cli("diff", base, slow, "--threshold", "0.5")
+        assert hot.returncode == 1, hot.stderr
+        assert "REG" in hot.stdout and "glibc.write" in hot.stdout
+
+    def test_diff_run_dir_uses_newest_snapshot(self, registry, tmp_path):
+        """diff against a run DIR reduces it first — and a new ring entry
+        with more folded work is a regression the gate catches."""
+        base = tmp_path / "base.xfa.npz"
+        ProfileSnapshot.from_folded(fold_event_log(EVENTS)).save(str(base))
+        p = run_cli("diff", base, registry / "train", "--threshold", "0.5")
+        assert p.returncode == 1   # newest ring entry folded EVENTS*3
+
+
+class TestQueryCLI:
+    def test_filters_and_exit_codes(self, registry):
+        p = run_cli("query", registry, "--config", "tinyllama_1_1b",
+                    "--mesh", "4x2", "--label", "train-*")
+        assert p.returncode == 0, p.stderr
+        assert "train" in p.stdout and "serve" not in p.stdout
+
+        none = run_cli("query", registry, "--label", "nope")
+        assert none.returncode == 1            # grep-like: no match -> 1
+        assert none.stdout.strip() == ""
+
+    def test_json_output_carries_manifest(self, registry):
+        p = run_cli("query", registry, "--kind", "serve", "--json")
+        assert p.returncode == 0, p.stderr
+        [run] = json.loads(p.stdout)
+        assert run["config"] == "qwen3_14b"
+        assert run["mesh_shape"] == [8]
+        assert run["run_dir"].endswith("serve")
+
+    def test_where_predicate(self, registry):
+        p = run_cli("query", registry, "--where", "arch=dense")
+        assert p.returncode == 0
+        assert len(p.stdout.strip().splitlines()) == 2
+
+    def test_malformed_where_is_a_usage_error(self, registry):
+        p = run_cli("query", registry, "--where", "archdense")
+        assert p.returncode == 2               # argparse usage error
+        assert "KEY=VALUE" in p.stderr
+
+
+class TestGcCLI:
+    def test_gc_enforces_keep_last_across_runs(self, registry):
+        train_store = ProfileStore(str(registry / "train"))
+        assert len(train_store.snapshot_paths()) == 3
+        p = run_cli("gc", registry, "--keep-last", "1")
+        assert p.returncode == 0, p.stderr
+        assert "deleted 2 snapshot(s)" in p.stdout
+        # newest ring entry + manifest survive; reduce still works
+        assert len(train_store.snapshot_paths()) == 1
+        assert os.path.exists(registry / "train" / "manifest.json")
+        assert train_store.reduce().to_folded().edges[
+            ("app", "glibc", "read")].count == 3
+
+    def test_gc_dry_run_keeps_everything(self, registry):
+        p = run_cli("gc", registry, "--keep-last", "1", "--dry-run",
+                    "--json")
+        assert p.returncode == 0, p.stderr
+        doc = json.loads(p.stdout)
+        assert doc["dry_run"] is True
+        assert sum(len(v) for v in doc["deleted"].values()) == 2
+        assert len(ProfileStore(str(registry / "train"))
+                   .snapshot_paths()) == 3
+
+
+class TestTimelineCLI:
+    def test_renders_deltas_across_ring(self, registry):
+        p = run_cli("timeline", registry / "train", "--field", "count")
+        assert p.returncode == 0, p.stderr
+        assert "3 snapshots" in p.stdout
+        assert "app -> glibc.read" in p.stdout
+        assert "+1" in p.stdout                # per-interval delta columns
+
+    def test_json_and_empty_exit_code(self, registry, tmp_path):
+        p = run_cli("timeline", registry / "train", "--json",
+                    "--field", "count")
+        assert p.returncode == 0, p.stderr
+        [tl] = json.loads(p.stdout)
+        assert tl["edges"]["app -> glibc.read"]["deltas"] == [1.0, 1.0, 1.0]
+        # a dir with no multi-entry ring renders nothing -> exit 1
+        empty = run_cli("timeline", tmp_path)
+        assert empty.returncode == 1
+
+
+class TestCIBaselineLane:
+    """The non-blocking CI profile-diff lane, run here as a gating test:
+    the synthetic workload must regenerate the checked-in baseline and
+    diff clean; injected slowdowns/new edges must trip the gate."""
+
+    BASELINE = os.path.join(os.path.dirname(__file__), "data",
+                            "ci_baseline.xfa.npz")
+    SCRIPT = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                          "baseline_profile.py")
+
+    def _gen(self, out, *extra):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        return subprocess.run(
+            [sys.executable, self.SCRIPT, "-o", str(out), *extra],
+            capture_output=True, text=True, timeout=120, env=env)
+
+    def test_workload_reproduces_checked_in_baseline(self, tmp_path):
+        cand = tmp_path / "cand.xfa.npz"
+        p = self._gen(cand)
+        assert p.returncode == 0, p.stderr
+        with open(self.BASELINE, "rb") as a, open(cand, "rb") as b:
+            assert a.read() == b.read(), \
+                "baseline drifted: regenerate tests/data/ci_baseline" \
+                ".xfa.npz deliberately (see benchmarks/baseline_profile.py)"
+        d = run_cli("diff", self.BASELINE, cand, "--threshold", "0.25")
+        assert d.returncode == 0, d.stdout + d.stderr
+
+    def test_injected_regression_trips_the_lane(self, tmp_path):
+        slow = tmp_path / "slow.xfa.npz"
+        assert self._gen(slow, "--scale", "1.6").returncode == 0
+        assert run_cli("diff", self.BASELINE, slow,
+                       "--threshold", "0.25").returncode == 1
+        new_edge = tmp_path / "new.xfa.npz"
+        assert self._gen(new_edge, "--extra-edge").returncode == 0
+        assert run_cli("diff", self.BASELINE, new_edge,
+                       "--threshold", "0.25").returncode == 1
+
+
+class TestWriterRetentionE2E:
+    def test_concurrent_style_writers_stay_bounded(self, tmp_path):
+        """Many refreshes through the public writer with a tight policy:
+        the run dir footprint stays bounded and the newest fold wins."""
+        store = ProfileStore(str(tmp_path),
+                             retention=RetentionPolicy(keep_last=2))
+        for i in range(1, 8):
+            store.write_shard(fold_event_log(EVENTS * i), label="w")
+        assert len(store.snapshot_paths()) == 2
+        p = run_cli("report", tmp_path, "--json")
+        assert p.returncode == 0, p.stderr
+        doc = json.loads(p.stdout)
+        read = [e for e in doc["edges"]
+                if (e["caller"], e["component"], e["api"])
+                == ("app", "glibc", "read")]
+        assert read[0]["count"] == 7

@@ -1,0 +1,389 @@
+"""Profile store v2: run registry (manifests + query), snapshot rings,
+retention/GC, and the timeline drift view — including one real trainer run
+feeding ≥3 sequence-numbered snapshots."""
+
+import json
+import os
+import time
+
+import pytest
+
+from conftest import assert_tables_equal
+from repro.core.folding import fold_event_log
+from repro.profile import (MANIFEST_NAME, ProfileSnapshot, ProfileStore,
+                           RetentionPolicy, RunManifest, RunRegistry,
+                           build_timelines, register_run, render_timeline,
+                           split_snapshot_name)
+from repro.profile.snapshot import SCHEMA_VERSION
+
+EVENTS = [
+    ("app", "glibc", "read", 18), ("app", "glibc", "write", 35),
+    ("app", "alloc", "malloc", 10), ("moe", "pthread", "lock", 900),
+]
+
+
+def make_run(root, name, *, config, mesh=None, label="train", kind="train",
+             n_snaps=1, meta=None, started_at=None):
+    run = os.path.join(str(root), name)
+    store = ProfileStore(run)
+    for i in range(1, n_snaps + 1):
+        store.write_shard(fold_event_log(EVENTS * i), label=label,
+                          meta={"step": i})
+    register_run(run, config=config, arch="dense", mesh_shape=mesh,
+                 label=label, kind=kind, meta=meta, started_at=started_at)
+    return run
+
+
+# ------------------------------------------------------------- registry ----
+class TestRunRegistry:
+    def test_register_writes_structured_manifest(self, tmp_path):
+        run = make_run(tmp_path, "r1", config="tinyllama_1_1b", mesh="4x2",
+                       meta={"exp": "pr2"})
+        m = RunManifest.load(run)
+        assert m.config == "tinyllama_1_1b"
+        assert m.arch == "dense"
+        assert m.mesh_shape == (4, 2)
+        assert m.label == "train"
+        assert m.kind == "train"
+        assert m.schema == SCHEMA_VERSION
+        assert m.started_at > 0
+        assert m.meta["exp"] == "pr2"
+        assert len(m.writers) == 1
+        # manifest is plain indented json — greppable without repro
+        with open(os.path.join(run, MANIFEST_NAME)) as f:
+            assert json.load(f)["config"] == "tinyllama_1_1b"
+
+    def test_register_is_idempotent_and_multi_writer(self, tmp_path):
+        run = make_run(tmp_path, "r1", config="c", started_at=100.0)
+        register_run(run, label="train-r1", meta={"rank1": True},
+                     started_at=200.0)
+        register_run(run, label="train-r1", started_at=200.0)  # re-register
+        m = RunManifest.load(run)
+        assert m.started_at == 100.0          # earliest start wins
+        assert m.config == "c"                # rank1 didn't blank it
+        assert m.meta["rank1"] is True
+        # same (label, host, pid) registered once; distinct labels add up
+        assert len(m.writers) == 2
+
+    def test_query_filters_config_mesh_label(self, tmp_path):
+        make_run(tmp_path, "a", config="tinyllama_1_1b", mesh="4x2",
+                 label="train-r0")
+        make_run(tmp_path, "nested/b", config="qwen3_14b", mesh="4x2",
+                 label="train-r0")
+        make_run(tmp_path, "c", config="qwen3_14b", mesh=(8,),
+                 label="serve-0", kind="serve")
+        reg = RunRegistry(str(tmp_path))
+        assert len(reg.runs()) == 3            # recursive discovery
+
+        got = {m.run_id for m in reg.query(config="qwen3_14b")}
+        assert got == {"b", "c"}
+        got = {m.run_id for m in reg.query(mesh="4x2")}
+        assert got == {"a", "b"}
+        got = {m.run_id for m in reg.query(mesh=(4, 2),
+                                           config="tinyllama*")}
+        assert got == {"a"}                    # globs + tuple mesh spelling
+        got = {m.run_id for m in reg.query(label="serve-*")}
+        assert got == {"c"}
+        got = {m.run_id for m in reg.query(kind="serve")}
+        assert got == {"c"}
+        assert reg.query(config="nope") == []
+
+    def test_query_where_and_since(self, tmp_path):
+        make_run(tmp_path, "old", config="c", started_at=1000.0,
+                 meta={"exp": "x"})
+        make_run(tmp_path, "new", config="c", started_at=2000.0,
+                 meta={"exp": "y"})
+        reg = RunRegistry(str(tmp_path))
+        assert [m.run_id for m in reg.query(since=1500.0)] == ["new"]
+        assert [m.run_id for m in reg.query(where={"exp": "x"})] == ["old"]
+        # `where` also reaches top-level manifest fields
+        assert len(reg.query(where={"arch": "dense"})) == 2
+
+    def test_concurrent_registration_loses_no_writers(self, tmp_path):
+        """N concurrent register_run calls (the per-rank race at run
+        start, here as threads) must all land in the writers list — the
+        manifest lock serializes the load-modify-save."""
+        import threading
+
+        run = str(tmp_path / "race")
+        n = 16
+        ths = [threading.Thread(
+            target=register_run, args=(run,),
+            kwargs={"config": "c", "label": f"train-r{i}",
+                    "meta": {f"rank{i}": i}}) for i in range(n)]
+        for t in ths:
+            t.start()
+        for t in ths:
+            t.join(timeout=30)
+        m = RunManifest.load(run)
+        assert len(m.writers) == n
+        assert {w["label"] for w in m.writers} == \
+            {f"train-r{i}" for i in range(n)}
+        assert all(m.meta[f"rank{i}"] == i for i in range(n))
+
+    def test_readers_do_not_create_run_dirs(self, tmp_path):
+        """A typo'd path through the read-only surfaces must not leave
+        empty directories behind to pollute later registry scans."""
+        from repro.profile import build_timelines
+        ghost = str(tmp_path / "typo-run")
+        store = ProfileStore(ghost)
+        assert store.snapshot_paths() == []
+        with pytest.raises(FileNotFoundError):
+            store.reduce()
+        assert build_timelines(ghost) == []
+        assert not os.path.exists(ghost)
+
+    def test_unreadable_manifest_is_skipped_with_warning(self, tmp_path):
+        make_run(tmp_path, "ok", config="c")
+        bad = tmp_path / "bad"
+        bad.mkdir()
+        (bad / MANIFEST_NAME).write_text("{not json")
+        with pytest.warns(UserWarning, match="unreadable manifest"):
+            runs = RunRegistry(str(tmp_path)).runs()
+        assert [m.run_id for m in runs] == ["ok"]
+
+
+# ------------------------------------------------------- snapshot rings ----
+class TestSnapshotRing:
+    def test_writes_are_sequence_numbered(self, tmp_path):
+        store = ProfileStore(str(tmp_path))
+        for i in range(1, 4):
+            store.write_shard(fold_event_log(EVENTS * i), label="t")
+        names = [os.path.basename(p) for p in store.snapshot_paths()]
+        assert [split_snapshot_name(n)[1] for n in names] == [1, 2, 3]
+        stems = {split_snapshot_name(n)[0] for n in names}
+        assert len(stems) == 1                 # one shard, one ring
+        # reduce/aggregation consume only the newest (cumulative fold)
+        assert len(store) == 1
+        assert_tables_equal(store.reduce().to_folded(),
+                            fold_event_log(EVENTS * 3))
+        metas = [ProfileSnapshot.load(p).meta for p in store.snapshot_paths()]
+        assert [m["seq"] for m in metas] == [1, 2, 3]
+
+    def test_legacy_unnumbered_shard_still_reduces(self, tmp_path):
+        legacy = str(tmp_path / "train-h-1.xfa.npz")
+        ProfileSnapshot.from_folded(fold_event_log(EVENTS),
+                                    meta={"label": "train"}).save(legacy)
+        store = ProfileStore(str(tmp_path))
+        assert split_snapshot_name(legacy) == ("train-h-1", 0)
+        assert len(store) == 1
+        assert_tables_equal(store.reduce().to_folded(),
+                            fold_event_log(EVENTS))
+
+    def test_writer_enforces_keep_last(self, tmp_path):
+        store = ProfileStore(str(tmp_path),
+                             retention=RetentionPolicy(keep_last=2))
+        for i in range(1, 6):
+            store.write_shard(fold_event_log(EVENTS * i), label="t")
+        seqs = [split_snapshot_name(p)[1] for p in store.snapshot_paths()]
+        assert seqs == [4, 5]                  # ring bounded, newest kept
+        assert_tables_equal(store.reduce().to_folded(),
+                            fold_event_log(EVENTS * 5))
+
+
+# ------------------------------------------------------------ retention ----
+class TestRetention:
+    def _ring(self, root, stem, n, size=1):
+        """n snapshots for `stem` with strictly increasing mtimes."""
+        paths = []
+        t = fold_event_log(EVENTS * size)
+        now = time.time()
+        for i in range(1, n + 1):
+            p = os.path.join(str(root), f"{stem}.{i:06d}.xfa.npz")
+            ProfileSnapshot.from_folded(t, meta={"label": stem}).save(p)
+            # age the older entries without sleeping
+            os.utime(p, (now - (n - i) * 100, now - (n - i) * 100))
+            paths.append(p)
+        return paths
+
+    def test_max_age_spares_newest(self, tmp_path):
+        paths = self._ring(tmp_path, "a", 4)
+        policy = RetentionPolicy(keep_last=0, max_age_s=150)
+        victims = policy.enforce(str(tmp_path))
+        # entries older than 150s die; the newest survives regardless
+        assert set(victims) == set(paths[:2])
+        assert os.path.exists(paths[-1])
+
+    def test_max_age_never_deletes_sole_snapshot(self, tmp_path):
+        [p] = self._ring(tmp_path, "a", 1)
+        os.utime(p, (1, 1))                    # ancient
+        assert RetentionPolicy(keep_last=1, max_age_s=1).enforce(
+            str(tmp_path)) == []
+        assert os.path.exists(p)
+
+    def test_max_bytes_evicts_oldest_across_shards(self, tmp_path):
+        a = self._ring(tmp_path, "a", 3)
+        b = self._ring(tmp_path, "b", 3)
+        total = sum(os.path.getsize(p) for p in a + b)
+        one = os.path.getsize(a[0])
+        policy = RetentionPolicy(keep_last=0, max_bytes=total - one)
+        victims = policy.enforce(str(tmp_path))
+        assert len(victims) >= 1
+        assert a[-1] not in victims and b[-1] not in victims
+        left = sum(os.path.getsize(p) for p in a + b if os.path.exists(p))
+        assert left <= total - one
+
+    def test_max_bytes_one_byte_budget_keeps_newest_per_shard(self, tmp_path):
+        a = self._ring(tmp_path, "a", 3)
+        b = self._ring(tmp_path, "b", 2)
+        RetentionPolicy(keep_last=0, max_bytes=1).enforce(str(tmp_path))
+        alive = sorted(os.path.basename(p) for p in a + b
+                       if os.path.exists(p))
+        # over budget, but the newest of each LIVE shard is untouchable
+        assert alive == ["a.000003.xfa.npz", "b.000002.xfa.npz"]
+
+    def test_dry_run_deletes_nothing(self, tmp_path):
+        paths = self._ring(tmp_path, "a", 4)
+        victims = RetentionPolicy(keep_last=1).enforce(str(tmp_path),
+                                                       dry_run=True)
+        assert len(victims) == 3
+        assert all(os.path.exists(p) for p in paths)
+
+    def test_unbounded_policy_is_a_noop(self, tmp_path):
+        self._ring(tmp_path, "a", 4)
+        policy = RetentionPolicy(keep_last=0, max_age_s=0, max_bytes=0)
+        assert policy.unbounded
+        assert policy.enforce(str(tmp_path)) == []
+
+
+# -------------------------------------------------------------- timeline ----
+class TestTimeline:
+    def test_trainer_run_produces_timeline(self, tmp_path):
+        """Acceptance path: one real trainer run with per-step snapshots
+        yields >= 3 sequence-numbered ring entries whose per-edge deltas
+        show exactly one dispatch per interval."""
+        import dataclasses
+
+        import jax
+
+        from repro.ckpt.manager import CheckpointManager
+        from repro.configs import get_smoke
+        from repro.configs.base import TrainConfig
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import build_model
+        from repro.runtime.trainer import Trainer
+
+        cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"),
+                                  n_layers=2, d_model=64, d_ff=128,
+                                  vocab=512, n_heads=2, n_kv_heads=2,
+                                  head_dim=32)
+        model = build_model(cfg, impl="ref")
+        run_dir = str(tmp_path / "run")
+        trainer = Trainer(model, TrainConfig(ckpt_interval=0),
+                          CheckpointManager(str(tmp_path / "ckpt")),
+                          profile_dir=run_dir, profile_interval=1,
+                          profile_meta={"exp": "timeline-test"})
+        trainer.run(jax.random.key(0), SyntheticLMData(cfg, 2, 32),
+                    n_steps=3, resume=False)
+
+        # the run registered itself with structured metadata
+        m = RunManifest.load(run_dir)
+        assert m.config == cfg.name and m.kind == "train"
+        assert m.jax_version == jax.__version__
+        assert m.meta["exp"] == "timeline-test"
+        assert RunRegistry(str(tmp_path)).query(config=cfg.name)
+
+        [tl] = build_timelines(run_dir)
+        assert len(tl) >= 3                    # >= 3 ring entries, in order
+        assert tl.seqs == sorted(tl.seqs)
+        key = ("app", "runtime", "dispatch_step")
+        # per-interval deltas: exactly one dispatch per profiled step,
+        # regardless of whatever the process-global tracer saw before
+        deltas = tl.deltas(key, "count")[1:]
+        assert deltas[:2] == [1.0, 1.0]
+        assert sum(deltas) >= 2.0
+        # the process-global tracer may carry hotter edges from earlier
+        # tests in this process — filter instead of relying on top-N rank
+        out = render_timeline(tl, fld="count", edge="dispatch_step")
+        assert "dispatch_step" in out and f"{len(tl)} snapshots" in out
+
+    def test_serving_engine_registers_and_rings(self, tmp_path):
+        """The serving replica registers under kind=serve and its periodic
+        shard refreshes honor the ServeConfig retention knobs."""
+        import dataclasses
+
+        import jax
+        import numpy as np
+
+        from repro.configs import get_smoke
+        from repro.configs.base import ServeConfig
+        from repro.models import build_model
+        from repro.serving.engine import ServingEngine
+
+        cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"),
+                                  n_layers=2, d_model=64, d_ff=128,
+                                  vocab=512, n_heads=2, n_kv_heads=2,
+                                  head_dim=32)
+        model = build_model(cfg, impl="ref")
+        run_dir = str(tmp_path / "serve-run")
+        engine = ServingEngine(
+            model, model.init(jax.random.key(0)),
+            ServeConfig(max_batch=2, max_seq_len=64,
+                        profile_dir=run_dir, profile_label="serve-0",
+                        profile_keep_last=2,
+                        profile_meta=(("fleet", "test"),)))
+        m = RunManifest.load(run_dir)
+        assert m.kind == "serve" and m.label == "serve-0"
+        assert m.config == cfg.name and m.meta["fleet"] == "test"
+        assert m.meta["max_batch"] == 2
+        for _ in range(4):
+            engine.write_profile_shard()
+        store = ProfileStore(run_dir)
+        assert len(store.snapshot_paths()) == 2   # keep_last honored
+        assert len(store) == 1
+        rng = np.random.default_rng(0)
+        engine.submit(rng.integers(0, cfg.vocab, 5), 2)
+        engine.run_until_drained()
+        newest = store.reduce()
+        assert newest.meta["label"] == "serve-0"
+        assert newest.meta["completed"] == 1
+
+    def test_timeline_deltas_and_series(self, tmp_path):
+        store = ProfileStore(str(tmp_path))
+        for i in (1, 2, 4):                    # cumulative folds
+            store.write_shard(fold_event_log(EVENTS * i), label="t",
+                              meta={"step": i})
+        [tl] = build_timelines(str(tmp_path))
+        key = ("app", "glibc", "read")
+        assert tl.series(key, "count") == [1.0, 2.0, 4.0]
+        assert tl.deltas(key, "count") == [1.0, 1.0, 2.0]
+        assert tl.series(key, "total_ns") == [18.0, 36.0, 72.0]
+        assert tl.steps() == [1, 2, 4]
+        j = tl.to_json("count")
+        assert j["edges"]["app -> glibc.read"]["deltas"] == [1.0, 1.0, 2.0]
+
+    def test_timeline_mean_ns_is_per_interval_mean(self, tmp_path):
+        """mean_ns is not cumulative: each interval shows its TRUE mean
+        (delta total / delta count), so a speedup renders as a smaller
+        mean, not as a bogus negative 'restart' delta."""
+        store = ProfileStore(str(tmp_path))
+        # interval 1: one 100ns call; interval 2: one MORE call at 10ns
+        t1 = fold_event_log([("app", "glibc", "read", 100)])
+        t2 = fold_event_log([("app", "glibc", "read", 100),
+                             ("app", "glibc", "read", 10)])
+        store.write_shard(t1, label="t")
+        store.write_shard(t2, label="t")
+        [tl] = build_timelines(str(tmp_path))
+        key = ("app", "glibc", "read")
+        assert tl.deltas(key, "mean_ns") == [100.0, 10.0]
+        out = render_timeline(tl, fld="mean_ns")
+        assert "per-interval means" in out
+        assert "!" not in out                  # faster != restarted
+
+    def test_timeline_marks_writer_restart(self, tmp_path):
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS * 3), label="t")
+        store.write_shard(fold_event_log(EVENTS), label="t")  # restarted
+        [tl] = build_timelines(str(tmp_path))
+        assert tl.deltas(("app", "glibc", "read"), "count") == [3.0, -2.0]
+        assert "!" in render_timeline(tl, fld="count")
+
+    def test_shard_filter_and_min_len(self, tmp_path):
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS), label="aa")
+        store.write_shard(fold_event_log(EVENTS), label="bb")
+        store.write_shard(fold_event_log(EVENTS * 2), label="bb")
+        assert [t.stem for t in build_timelines(str(tmp_path), shard="aa")
+                ] == [store.shard_stem("aa")]
+        assert [t.stem for t in build_timelines(str(tmp_path), min_len=2)
+                ] == [store.shard_stem("bb")]

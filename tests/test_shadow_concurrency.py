@@ -1,0 +1,124 @@
+"""Concurrency stress for ShadowTableSet: thread churn ≫ the retire-sweep
+threshold while readers snapshot concurrently.
+
+The hazard being guarded: the retire sweep absorbs dead threads' tables
+into per-group accumulators *in place*, while `tables()` hands copies out
+to reader threads.  Any double-absorb, ident-reuse overwrite, or torn
+retired-accumulator read shows up as a conservation failure — the total
+count/total_ns over all tables must equal exactly what the worker threads
+recorded.
+"""
+
+import threading
+
+import numpy as np
+
+from repro.core.shadow import ShadowTableSet
+
+
+def _total(tables, slot_count):
+    """(sum of count, sum of total_ns) across a tables() snapshot."""
+    c = t = 0
+    for tab in tables:
+        n = min(tab.capacity, slot_count)
+        c += int(tab.count[:n].sum())
+        t += int(tab.total_ns[:n].sum())
+    return c, t
+
+
+class TestRetireSweepConservation:
+    N_THREADS = 6 * ShadowTableSet.RETIRE_SWEEP_THRESHOLD  # 192: many sweeps
+    EVENTS_PER_THREAD = 40
+
+    def test_churn_with_concurrent_snapshots_conserves_totals(self):
+        s = ShadowTableSet()
+        # a handful of slots shared by all threads (registry is global)
+        slots = [s.registry.resolve("app", "worker", f"api{i}").slot
+                 for i in range(4)]
+        dur = 7  # fixed per-event duration: expected totals are exact
+
+        def work(idx: int) -> None:
+            # half the threads tag an explicit group (named pools), half
+            # keep the thread-name default ("unnamed" churn) — both retire
+            # paths (per-group accumulator vs pooled 'retired') are hit
+            t = s.table(group="pool" if idx % 2 == 0 else None)
+            for j in range(self.EVENTS_PER_THREAD):
+                t.record(slots[(idx + j) % len(slots)], dur)
+
+        stop = threading.Event()
+        snapshot_errors = []
+        want_events = self.N_THREADS * self.EVENTS_PER_THREAD
+
+        def reader() -> None:
+            # hammer tables() (copy-under-lock) while churn sweeps retire
+            # tables in place.  Mid-run the only safe invariants are
+            # monotonicity (events are only ever added; sweeps move them
+            # between tables under the lock) and the global upper bound —
+            # a double-absorb would overshoot, a lost table would make the
+            # totals drop.
+            last_c = last_t = 0
+            while not stop.is_set():
+                try:
+                    c, t = _total(s.tables(), len(slots))
+                    assert c >= last_c and t >= last_t, "totals went down"
+                    assert c <= want_events and t <= want_events * dur
+                    last_c, last_t = c, t
+                except Exception as e:  # pragma: no cover - failure path
+                    snapshot_errors.append(e)
+                    return
+
+        readers = [threading.Thread(target=reader, daemon=True)
+                   for _ in range(3)]
+        for r in readers:
+            r.start()
+
+        # spawn in waves and join each wave so later table() registrations
+        # find plenty of dead tables: every wave crosses the sweep threshold
+        wave = 16
+        idx = 0
+        for _ in range(self.N_THREADS // wave):
+            ts = [threading.Thread(target=work, args=(idx + k,))
+                  for k in range(wave)]
+            idx += wave
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join(timeout=30)
+                assert not t.is_alive()
+
+        stop.set()
+        for r in readers:
+            r.join(timeout=30)
+            assert not r.is_alive()
+        assert not snapshot_errors, snapshot_errors[0]
+
+        got_count, got_ns = _total(s.tables(), len(slots))
+        assert got_count == want_events          # no loss, no double-count
+        assert got_ns == want_events * dur
+        # churn actually got folded away: the table list stays bounded by
+        # the sweep threshold + one un-swept wave + the two retired
+        # accumulators ('pool', 'retired') — not all 192 worker tables
+        assert len(s.tables()) <= \
+            ShadowTableSet.RETIRE_SWEEP_THRESHOLD + wave + 2
+
+    def test_sweep_pools_unnamed_and_keeps_named_groups(self):
+        s = ShadowTableSet()
+        slot = s.registry.resolve("app", "worker", "api").slot
+
+        def work(group):
+            s.table(group=group).record_count(slot, 1)
+
+        n = ShadowTableSet.RETIRE_SWEEP_THRESHOLD + 8
+        for i in range(n):
+            th = threading.Thread(
+                target=work, args=("stage0" if i % 2 else None,))
+            th.start()
+            th.join(timeout=30)
+        # force one more registration -> sweep of all the dead tables above
+        s.table()
+        groups = {t.group for t in s.tables()}
+        assert "stage0" in groups      # explicit groups keep their identity
+        assert "retired" in groups     # unnamed churn pools into 'retired'
+        total = sum(int(t.count[slot]) for t in s.tables()
+                    if t.capacity > slot)
+        assert total == n

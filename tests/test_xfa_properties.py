@@ -172,6 +172,84 @@ def test_columnar_merge_matches_pairwise(e1, e2, e3):
     _edges_equal(nested.to_folded(), want)
 
 
+METRIC_NAMES = ("flops", "bytes", "load[0]")
+
+
+@st.composite
+def edge_stats_st(draw):
+    """EdgeStats covering the full field space, INCLUDING count == 0 edges
+    (device/static-style: declared + metrics, never timed) and explicit
+    0.0-valued metrics (presence != value)."""
+    from repro.core.folding import EdgeStats
+    from repro.core.shadow import KIND_CALL, KIND_WAIT
+
+    count = draw(st.integers(0, 50))
+    kind = draw(st.sampled_from((KIND_CALL, KIND_WAIT)))
+    metrics = draw(st.dictionaries(
+        st.sampled_from(METRIC_NAMES),
+        st.floats(min_value=0.0, max_value=1e6, allow_nan=False), max_size=3))
+    if count == 0:
+        return EdgeStats(kind=kind, metrics=metrics)
+    total = draw(st.integers(1, 10**6))
+    return EdgeStats(count=count, total_ns=total,
+                     child_ns=draw(st.integers(0, total)),
+                     min_ns=draw(st.integers(1, total)),
+                     max_ns=draw(st.integers(1, total)),
+                     kind=kind, metrics=metrics)
+
+
+folded_table_st = st.dictionaries(
+    st.tuples(st.sampled_from(CALLERS), st.sampled_from(COMPONENTS),
+              st.sampled_from(APIS)),
+    edge_stats_st(), max_size=12).map(FoldedTable)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(folded_table_st, min_size=1, max_size=5))
+def test_columnar_merge_equals_pairwise_with_masks_and_kinds(tables):
+    """merge_columns ≡ FoldedTable.merge_all on the FULL field space:
+
+    * metric PRESENCE is preserved exactly — an edge that never emitted a
+      metric stays absent after the columnar merge (mask semantics), and an
+      explicit 0.0 metric stays present;
+    * kind tie-breaking matches the pairwise oracle even when the first
+      part(s) carrying an edge have count == 0: the pairwise merge keeps
+      deferring to the next part until one actually observed the edge, and
+      the columnar `decided` vector must do the same.
+    """
+    from repro.core.folding import merge_columns
+    want = FoldedTable.merge_all(tables)
+    got = merge_columns([t.to_columns() for t in tables]).to_folded()
+    _edges_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(folded_table_st, min_size=2, max_size=4),
+       st.randoms(use_true_random=False))
+def test_columnar_merge_order_insensitive_on_full_fields(tables, rnd):
+    """Shuffling shard order never changes stats or metric masks.  (kind is
+    deliberately excluded: the algebra defines it as "first part that
+    observed the edge", which is order-dependent when parts disagree — in
+    real shards they never do, since kind comes from the shared slot
+    registry.)"""
+    from repro.core.folding import merge_columns
+    cols = [t.to_columns() for t in tables]
+    base = merge_columns(cols).to_folded()
+    shuffled = list(cols)
+    rnd.shuffle(shuffled)
+    got = merge_columns(shuffled).to_folded()
+    assert got.edges.keys() == base.edges.keys()
+    for k in base.edges:
+        a, b = base.edges[k], got.edges[k]
+        assert (a.count, a.total_ns, a.child_ns, a.min_ns, a.max_ns) == \
+            (b.count, b.total_ns, b.child_ns, b.min_ns, b.max_ns), k
+        # metric PRESENCE is exact; values only to float-sum reassociation
+        assert a.metrics.keys() == b.metrics.keys(), k
+        for m in a.metrics:
+            assert a.metrics[m] == pytest.approx(b.metrics[m], rel=1e-12), \
+                (k, m)
+
+
 @settings(max_examples=30, deadline=None)
 @given(events, st.integers(1, 4))
 def test_shard_split_invariance(evs, n_shards):
