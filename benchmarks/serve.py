@@ -1,0 +1,121 @@
+"""Serving throughput + TTFT benchmark on a tiny config (CPU-lane safe).
+
+Drives the continuous-batching engine — open-loop Poisson arrivals on
+the background serving thread by default (TTFT and queue wait are only
+meaningful under an arrival process), or closed-loop with --mode closed
+— and emits name,value CSV rows like the other benchmarks:
+
+  serve.requests / serve.tokens / serve.wall_s
+  serve.throughput_tok_s
+  serve.ttft_mean_ms / serve.ttft_p95_ms
+  serve.queue_wait_mean_ms
+  serve.decode_ms_per_tok
+
+With --profile-dir the run registers in the run registry (kind=serve)
+and writes its XFA shard there, so
+
+  python -m repro.profile query DIR --kind serve
+  python -m repro.profile report DIR --component serve
+
+work against the benchmark's output — the serve-bench CI lane asserts
+exactly that round trip.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.configs.base import ServeConfig
+from repro.models import build_model
+from repro.serving import (SamplingParams, ServingEngine, latency_stats,
+                           run_workload)
+
+
+def tiny_cfg(arch: str):
+    """2-layer reduction of the smoke config: benchmark the ENGINE, not
+    the model."""
+    return dataclasses.replace(get_smoke(arch), n_layers=2, vocab=512)
+
+
+def run(args) -> dict:
+    cfg = tiny_cfg(args.arch)
+    model = build_model(cfg, impl="ref")
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(model, params, ServeConfig(
+        max_batch=args.max_batch, max_seq_len=args.max_seq,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget_tokens=args.prefill_budget,
+        eos_token=-1,
+        profile_dir=args.profile_dir,
+        profile_interval_ticks=64,
+        profile_label="serve-bench",
+        profile_meta=(("bench", "serve"),)))
+    sampling = SamplingParams(temperature=args.temperature, seed=1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, args.max_seq // 4)))
+               for _ in range(args.requests)]
+
+    # warmup: compile prefill/decode/sampler outside the timed window
+    engine.submit(prompts[0][:4], 2, sampling=sampling)
+    engine.run_until_drained()
+    engine.completed.clear()
+
+    t0 = time.monotonic()
+    done = run_workload(engine, prompts, args.max_new, mode=args.mode,
+                        rate=args.rate, rng=rng, sampling=sampling)
+    s = latency_stats(done, time.monotonic() - t0)
+    if not s["requests"] or "ttft_mean_s" not in s:
+        # reachable diagnostic BEFORE any stats key is touched
+        raise SystemExit("degenerate serve run: no requests completed")
+    return {
+        "serve.requests": int(s["requests"]),
+        "serve.tokens": int(s["tokens"]),
+        "serve.wall_s": round(s["wall_s"], 4),
+        "serve.throughput_tok_s": round(s["throughput_tok_s"], 2),
+        "serve.ttft_mean_ms": round(s["ttft_mean_s"] * 1e3, 3),
+        "serve.ttft_p95_ms": round(s["ttft_p95_s"] * 1e3, 3),
+        "serve.queue_wait_mean_ms": round(s["queue_wait_mean_s"] * 1e3, 3),
+        "serve.decode_ms_per_tok": round(s["decode_s_per_tok"] * 1e3, 3),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--mode", choices=("open", "closed"), default="open")
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="open-loop mean arrival rate, requests/s")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--profile-dir", default="",
+                    help="register the run + write its XFA shard here")
+    ap.add_argument("-o", "--output", default="",
+                    help="also write the CSV rows to this file")
+    args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+
+    rows = run(args)
+    lines = ["name,value"] + [f"{k},{v}" for k, v in rows.items()]
+    out = "\n".join(lines)
+    print(out)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(out + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

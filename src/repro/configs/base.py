@@ -288,8 +288,23 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 8
     max_seq_len: int = 2_048
+    #: bulk prefill at admission covers at most this many prompt tokens;
+    #: the tail of a longer prompt is merged into the pooled decode stream
+    #: one token per tick (host-chunked prefill: admission cost is
+    #: O(chunk), never O(prompt))
     prefill_chunk: int = 512
     eos_token: int = 2
+    # -- scheduler ----------------------------------------------------------
+    #: per-tick admission budget in bulk-prefill tokens (0 = unbounded);
+    #: bounds prefill/decode interference — a burst of long prompts cannot
+    #: stall slots already decoding.  The head-of-line request always fits,
+    #: so a single prompt longer than the budget cannot starve (FCFS).
+    prefill_budget_tokens: int = 0
+    # -- sampling defaults (per-request SamplingParams override these) ------
+    temperature: float = 0.0         # 0 -> greedy
+    top_k: int = 0                   # 0 -> full vocab
+    top_p: float = 1.0
+    sample_seed: int = 0
     #: when set, the engine writes one XFA profile shard per process under
     #: this directory (refreshed every `profile_interval_ticks` decode ticks
     #: and at drain); fleet replicas reduce via `python -m repro.profile`.

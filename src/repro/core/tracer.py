@@ -169,6 +169,25 @@ class Tracer:
         slot = self.tables.registry.resolve(caller, component, api, kind)
         self.tables.table().record_count(slot.slot, n)
 
+    def record_duration(self, component: str, api: str, dur_ns: float,
+                        kind: int = KIND_CALL, n: int = 1) -> None:
+        """Fold an externally-measured span into the caller->component.api
+        edge — for latency phases whose start and end are observed on
+        different control paths and so cannot be bracketed by a decorator
+        (a request's queue wait is known only at admit time, its TTFT only
+        at first-token time).  `n` > 1 folds n events of dur_ns each (e.g.
+        per-token decode latency attributed from one pooled tick)."""
+        if not self.enabled:
+            return
+        caller = self.current_component()
+        slot = self.tables.registry.resolve(caller, component, api, kind)
+        t = self.tables.table()
+        if not self.timing:
+            t.record_count(slot.slot, n)
+            return
+        for _ in range(n):
+            t.record(slot.slot, int(dur_ns), 0)
+
     # -- lifecycle ----------------------------------------------------------
     def reset(self) -> None:
         self.tables = ShadowTableSet()
@@ -186,6 +205,7 @@ wait = TRACER.wait
 wrap = TRACER.wrap
 scope = TRACER.scope
 count_event = TRACER.count_event
+record_duration = TRACER.record_duration
 current_component = TRACER.current_component
 set_thread_group = TRACER.set_thread_group
 

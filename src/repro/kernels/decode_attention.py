@@ -43,6 +43,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
 
     kv_len = len_ref[0]  # [1]-blocked per batch row (SMEM scalar)
 
+    # per-row early exit: this row is done once ik*block_k passes ITS
+    # length — other rows of the same call keep streaming their blocks
     @pl.when(ik * block_k < kv_len)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G, D]
@@ -83,8 +85,16 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                      return_residuals: bool = False):
     """q: [B, Hq, D]; k, v: [B, Hkv, S, D] -> [B, Hq, D].
 
-    kv_len: [B] int32 valid lengths (None = full S). return_residuals=True
-    additionally returns (m, l): [B, Hq] for distributed split-K merge."""
+    kv_len: [B] int32 PER-ROW valid lengths (None = full S).  Under
+    continuous batching every serving slot decodes at its own depth, so
+    rows of one call carry arbitrary mixed lengths: the kernel reads each
+    row's length from SMEM, skips whole KV blocks past it (`pl.when` on
+    the arbitrary grid dim — a row at depth 100 does not pay for a
+    neighbour at 32k), and masks the partial block with a per-column
+    iota compare.  A fully-masked row (kv_len == 0, e.g. an empty pool
+    slot) short-circuits every block; the l == 0 guard in _finalize
+    yields zeros instead of 0/0 NaNs.  return_residuals=True additionally
+    returns (m, l): [B, Hq] for distributed split-K merge."""
     B, Hq, D = q.shape
     _, Hkv, S, _ = k.shape
     assert Hq % Hkv == 0

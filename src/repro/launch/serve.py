@@ -1,7 +1,17 @@
 """Serving launcher: continuous-batching engine over a model checkpoint.
 
+Closed-loop (default): submit --requests up front, drain synchronously —
+a throughput benchmark.
+
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b \
         --smoke --requests 8 [--ckpt artifacts/train]
+
+Open-loop: Poisson arrivals at --rate req/s against the engine running
+on its background thread — the latency-under-load benchmark (queue wait
+and TTFT are only meaningful here).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1_1b \
+        --smoke --mode open --rate 4 --requests 32
 """
 
 from __future__ import annotations
@@ -16,7 +26,24 @@ from repro.ckpt.manager import CheckpointManager
 from repro.configs import get_config, get_smoke
 from repro.configs.base import ServeConfig
 from repro.models import build_model
-from repro.serving.engine import ServingEngine
+from repro.serving import ServingEngine, latency_stats, run_workload
+
+
+def summarize(done, wall_s: float) -> str:
+    s = latency_stats(done, wall_s)
+    lines = [f"served {s['requests']:.0f} requests / {s['tokens']:.0f} "
+             f"tokens in {s['wall_s']:.2f}s "
+             f"({s['throughput_tok_s']:.1f} tok/s)"]
+    if "ttft_mean_s" in s:
+        lines.append(f"ttft       mean {s['ttft_mean_s'] * 1e3:.1f}ms  "
+                     f"p50 {s['ttft_p50_s'] * 1e3:.1f}ms  "
+                     f"p95 {s['ttft_p95_s'] * 1e3:.1f}ms")
+    if "queue_wait_mean_s" in s:
+        lines.append(f"queue_wait mean {s['queue_wait_mean_s'] * 1e3:.1f}ms  "
+                     f"p95 {s['queue_wait_p95_s'] * 1e3:.1f}ms")
+    if s["truncated"]:
+        lines.append(f"truncated prompts: {s['truncated']:.0f}")
+    return "\n".join(lines)
 
 
 def main() -> int:
@@ -28,6 +55,25 @@ def main() -> int:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default="")
+    # -- workload ------------------------------------------------------------
+    ap.add_argument("--mode", choices=("closed", "open"), default="closed",
+                    help="closed: submit all then drain (throughput); open: "
+                         "Poisson arrivals on a live engine (latency)")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="open-loop mean arrival rate, requests/s")
+    # -- scheduler -----------------------------------------------------------
+    ap.add_argument("--prefill-chunk", type=int, default=512,
+                    help="bulk-prefill at most this many prompt tokens at "
+                         "admission; the tail merges into the decode stream")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="per-tick bulk-prefill token budget (0: unbounded)")
+    # -- sampling ------------------------------------------------------------
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--sample-seed", type=int, default=0)
+    # -- profiling -----------------------------------------------------------
     ap.add_argument("--profile-dir", default="",
                     help="write this replica's XFA profile shard here "
                          "(reduce with: python -m repro.profile report DIR)")
@@ -52,7 +98,6 @@ def main() -> int:
     model = build_model(cfg, impl="auto")
     if args.ckpt:
         like = jax.eval_shape(model.init, jax.random.key(0))
-        state_like = {"params": like}
         mgr = CheckpointManager(args.ckpt)
         # restore params out of a full train state checkpoint
         import jax.numpy as jnp
@@ -62,26 +107,28 @@ def main() -> int:
     else:
         params = model.init(jax.random.key(0))
 
-    engine = ServingEngine(model, params,
-                           ServeConfig(max_batch=args.max_batch,
-                                       max_seq_len=args.max_seq,
-                                       profile_dir=args.profile_dir,
-                                       profile_interval_ticks=args.profile_interval,
-                                       profile_label=args.profile_label,
-                                       profile_keep_last=args.profile_keep_last,
-                                       profile_max_age_s=args.profile_max_age_s,
-                                       profile_max_bytes=args.profile_max_bytes,
-                                       profile_meta=tuple(args.profile_meta)))
+    engine = ServingEngine(model, params, ServeConfig(
+        max_batch=args.max_batch, max_seq_len=args.max_seq,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget_tokens=args.prefill_budget,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        sample_seed=args.sample_seed,
+        profile_dir=args.profile_dir,
+        profile_interval_ticks=args.profile_interval,
+        profile_label=args.profile_label,
+        profile_keep_last=args.profile_keep_last,
+        profile_max_age_s=args.profile_max_age_s,
+        profile_max_bytes=args.profile_max_bytes,
+        profile_meta=tuple(args.profile_meta)))
+    # sampling knobs ride in ServeConfig: submit() defaults to them
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        n = int(rng.integers(4, args.max_seq // 4))
-        engine.submit(rng.integers(0, cfg.vocab, n), args.max_new)
+    prompts = [rng.integers(0, cfg.vocab,
+                            int(rng.integers(4, args.max_seq // 4)))
+               for _ in range(args.requests)]
     t0 = time.monotonic()
-    done = engine.run_until_drained()
-    dt = time.monotonic() - t0
-    tok = sum(len(r.output) for r in done)
-    print(f"served {len(done)} requests / {tok} tokens in {dt:.2f}s "
-          f"({tok/dt:.1f} tok/s)")
+    done = run_workload(engine, prompts, args.max_new, mode=args.mode,
+                        rate=args.rate, rng=rng)
+    print(summarize(done, time.monotonic() - t0))
     return 0
 
 

@@ -199,10 +199,12 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
     def serve_step(params, token, table, cache, pos):
         return model.decode_step(params, token, table, cache, pos)
 
-    pos_like = jax.ShapeDtypeStruct((), jnp.int32)
+    # per-slot positions [B] (continuous batching: every cache row at its
+    # own depth) — sharded like the token vector
+    pos_like = jax.ShapeDtypeStruct((B,), jnp.int32)
     return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg, shape=shape,
                 fn=serve_step,
                 args=(params_like, tok_like, table_like, cache_like,
                       pos_like),
-                in_shardings=(ps, ts, rep, cs, rep),
+                in_shardings=(ps, ts, rep, cs, ts),
                 out_shardings=(None, cs, rep), donate=(3,))

@@ -8,6 +8,9 @@ launcher, trainer, server, dry-run and benchmarks never dispatch on family:
     model.init_cache(batch, max_len)         -> cache pytree
     model.prefill(params, batch, table, cache) -> (logits, cache, table)
     model.decode_step(params, tok, table, cache, pos) -> (logits, cache, table)
+        pos is [B] int32 — PER-SLOT cache depths, each row advancing
+        independently (continuous batching); a scalar broadcasts for
+        single-sequence decode
     model.batch_spec(shape)                  -> ShapeDtypeStruct pytree
     model.fold_spec                          -> frozen DeviceFoldSpec
 """
@@ -111,6 +114,8 @@ def build_model(cfg: ModelConfig, impl: str = "auto") -> Model:
         return mod.prefill(params, batch["tokens"], rt, table, cache, **extra)
 
     def decode_step(params, token, table, cache, pos):
+        # pos: [B] per-slot positions; each family canonicalizes (scalars
+        # broadcast there, so direct module callers get it too)
         return mod.decode_step(params, token, rt, table, cache, pos)
 
     return Model(cfg=cfg, rt=rt, fold_spec=spec, init=init, loss_fn=loss_fn,

@@ -206,9 +206,14 @@ def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
 
 def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache, pos: jax.Array):
+    """pos: [B] per-slot decoder depths (scalar broadcasts). Self-attention
+    cache writes/masks and rope angles are per-row; the cross-attention
+    K/V is static per request (encoder output), so only its kv_len matters
+    and it is already full-length for every row."""
     cfg = rt.cfg
     x = embed(p, token[:, None], rt)
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
+    positions = pos[:, None]                     # [B, 1] per-row rope angles
     B = x.shape[0]
 
     def body(carry, inp):

@@ -141,6 +141,22 @@ def init_attention(key, cfg: ModelConfig) -> Params:
     return {"attn": p}
 
 
+def update_cache_rows(dst: jax.Array, src: jax.Array, pos: jax.Array,
+                      seq_axis: int = 2) -> jax.Array:
+    """Scatter one decode step's rows into a batched cache at PER-ROW
+    positions: row b of `src` (length-1 along `seq_axis`) lands at index
+    pos[b] of `dst`'s seq_axis.  dst: [B, ...]; src: [B, ...]; pos: [B].
+
+    The vmap'd dynamic_update_slice is what lets every slot of a serving
+    pool advance its cache row independently (continuous batching: slots
+    decode at different depths in the same compiled step)."""
+    def one(d, s, p):
+        idx = [jnp.int32(0)] * d.ndim
+        idx[seq_axis - 1] = p        # batch dim vmapped away
+        return jax.lax.dynamic_update_slice(d, s, tuple(idx))
+    return jax.vmap(one)(dst, src.astype(dst.dtype), pos)
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   n_layers: int, dtype) -> Params:
     """Stacked (scan-compatible) KV cache for n_layers layers."""
@@ -166,7 +182,10 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
     """GQA/MQA (optionally qk-norm) attention.
 
     x: [B, S, d]; kv: cross-attention source [B, Sk, d] (None = self-attn);
-    cache+pos: single-layer KV cache for decode (S == 1);
+    cache+pos: single-layer KV cache for decode (S == 1) — pos is [B]
+    int32, each batch row's own cache depth (a scalar broadcasts), so a
+    serving pool's slots decode at independent positions;
+    positions: [S] shared rope positions, or [B, S] per-row (decode);
     return_kv: return this call's post-rope K/V (prefill cache building).
     Returns (y [B, S, d], cache-or-kv).
     """
@@ -191,6 +210,8 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
         if kv is None:  # RoPE on self-attention only
             with jax.named_scope("rope"):
                 cos, sin = rope_tables(cfg, positions, h)
+                if cos.ndim == 3:            # per-row positions [B, S]
+                    cos, sin = cos[:, None], sin[:, None]
                 q = apply_rope(q.swapaxes(1, 2), cos, sin)       # [B,H,S,h]
                 k = apply_rope(k.swapaxes(1, 2), cos, sin)
         else:
@@ -202,13 +223,13 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
                   None, None)
 
         if cache is not None:
-            # decode: append this step's k/v at `pos`, attend to the prefix
+            # decode: append each row's k/v at its own `pos`, attend to the
+            # row's own prefix (kv_len is per-row)
             assert S == 1
-            ck = jax.lax.dynamic_update_slice(
-                cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
-            kv_len = jnp.full((B,), pos + 1, jnp.int32)
+            pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            ck = update_cache_rows(cache["k"], k, pos, seq_axis=2)
+            cv = update_cache_rows(cache["v"], v, pos, seq_axis=2)
+            kv_len = pos + 1
             o = ops.decode_attention(q[:, :, 0], ck, cv, kv_len=kv_len,
                                      impl=rt.impl)
             o = o[:, None] if o.ndim == 3 else o   # [B,1,Hq,h] fmt below
@@ -248,6 +269,8 @@ def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
         c_kv, k_rope = kv_a[..., :r], kv_a[..., r:]
         with jax.named_scope("rope"):
             cos, sin = rope_tables(cfg, positions, dr)
+            if cos.ndim == 3:                # per-row positions [B, S]
+                cos, sin = cos[:, None], sin[:, None]
             q_rope = apply_rope(q_rope.swapaxes(1, 2), cos, sin)  # [B,nh,S,dr]
             k_rope = apply_rope(k_rope[:, None], cos, sin)        # [B,1,S,dr]
         annotate_cost("attention", "attention", "mla_proj",
@@ -258,11 +281,10 @@ def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
 
         if cache is not None:
             assert S == 1
-            cc = jax.lax.dynamic_update_slice(
-                cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
-            cr = jax.lax.dynamic_update_slice(
-                cache["krope"], k_rope[:, 0].astype(cache["krope"].dtype),
-                (0, pos, 0))
+            pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            cc = update_cache_rows(cache["ckv"], c_kv, pos, seq_axis=1)
+            cr = update_cache_rows(cache["krope"], k_rope[:, 0], pos,
+                                   seq_axis=1)
             # absorb: q_latent = q_nope @ wk_b^T  -> [B,nh,r]
             q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
                                wk_b.astype(jnp.float32)).astype(x.dtype)
@@ -270,7 +292,7 @@ def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
             k_full = jnp.concatenate([cc, cr], -1)[:, None]         # [B,1,S,r+dr]
             # v = c_kv (latent); pad to r+dr so k/v share a kernel shape
             v_lat = jnp.pad(cc, ((0, 0), (0, 0), (0, dr)))[:, None]
-            kv_len = jnp.full((B,), pos + 1, jnp.int32)
+            kv_len = pos + 1
             scale = (dn + dr) ** -0.5
             o_lat = ops.decode_attention(q_full, k_full, v_lat, kv_len=kv_len,
                                          sm_scale=scale, impl=rt.impl)

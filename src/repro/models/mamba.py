@@ -299,11 +299,15 @@ def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
 
 def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache: Params, pos: jax.Array):
+    """pos: [B] per-slot depths (scalar broadcasts) — the shared attention
+    block's KV writes/masks and rope angles are per-row; the SSM states
+    are position-free and row-independent by construction."""
     cfg = rt.cfg
     n_super = cfg.n_layers // cfg.attn_every
     k = cfg.attn_every
     x = embed(p, token[:, None], rt)
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
+    positions = pos[:, None]                     # [B, 1] per-row rope angles
     shared = p["shared_attn"]
     ssm0 = jax.tree.map(
         lambda a: a.reshape((n_super, k) + a.shape[1:]), cache["ssm"])

@@ -231,10 +231,16 @@ def _place_prefill_kv(layer_cache, kv):
 
 def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache: Params, pos: jax.Array):
-    """token: [B] -> (logits [B, V], new stacked cache, table)."""
+    """token: [B], pos: [B] per-slot cache depths (scalar broadcasts)
+    -> (logits [B, V], new stacked cache, table).
+
+    Every batch row advances independently: rope angles, cache writes and
+    kv-length masks are all per-row, so a serving pool can decode slots
+    at arbitrary mixed positions in ONE compiled call."""
     cfg = rt.cfg
     x = embed(p, token[:, None], rt)
-    positions = pos[None] if jnp.ndim(pos) == 0 else pos
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
+    positions = pos[:, None]                     # [B, 1] per-row rope angles
     counts = [c for _, c in _layer_kinds(cfg)]
     cache_segs = _split_cache(cache, counts)
 

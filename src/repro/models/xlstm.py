@@ -435,6 +435,9 @@ def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
 
 def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache, pos: jax.Array):
+    """pos: [B] per-slot depths (scalar broadcasts) — accepted for API
+    uniformity; xLSTM state is recurrent and position-free, and every
+    state update is row-independent, so per-slot decode needs no masking."""
     x = embed(p, token[:, None], rt)
     x, table, new_cache = _run_with_state(p, x, rt, cache, table, True)
     x = norm(p["final_norm"], x, rt)

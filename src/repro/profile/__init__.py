@@ -16,7 +16,9 @@ queryable ("all runs of arch X on mesh Y").
                 / max-bytes, enforced in-writer and via `gc`)
   index.py      run manifests + RunRegistry.query (metadata predicates)
   timeline.py   per-edge count/total_ns/self_ns trajectories across a
-                shard's ring — the in-run drift view
+                shard's ring — the in-run drift view; TimelineDiff aligns
+                two runs' rings by sequence index for per-edge
+                delta-of-deltas (`timeline RUN_A --diff RUN_B`)
   diff.py       run-over-run comparison with per-edge regression flagging
   __main__.py   CLI: python -m repro.profile
                 {report,merge,diff,query,gc,timeline}
@@ -31,7 +33,8 @@ from .store import (ProfileStore, RetentionPolicy, find_run_dirs,
                     load_profile, split_snapshot_name, tracer_folded)
 from .index import (MANIFEST_NAME, RunManifest, RunRegistry, kv_pair,
                     parse_mesh, register_run)
-from .timeline import ShardTimeline, build_timelines, render_timeline
+from .timeline import (ShardTimeline, TimelineDiff, build_timelines,
+                       pair_timelines, render_timeline, render_timeline_diff)
 from .diff import EdgeDelta, ProfileDiff, diff_profiles
 
 __all__ = [
@@ -40,6 +43,7 @@ __all__ = [
     "split_snapshot_name", "tracer_folded",
     "MANIFEST_NAME", "RunManifest", "RunRegistry", "kv_pair", "parse_mesh",
     "register_run",
-    "ShardTimeline", "build_timelines", "render_timeline",
+    "ShardTimeline", "TimelineDiff", "build_timelines", "pair_timelines",
+    "render_timeline", "render_timeline_diff",
     "EdgeDelta", "ProfileDiff", "diff_profiles",
 ]

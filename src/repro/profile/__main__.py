@@ -31,7 +31,8 @@ from .index import RunRegistry, kv_pair
 from .snapshot import ProfileSnapshot
 from .store import (ProfileStore, RetentionPolicy, find_run_dirs,
                     load_profile)
-from .timeline import TIMELINE_FIELDS, build_timelines, render_timeline
+from .timeline import (TIMELINE_FIELDS, build_timelines, pair_timelines,
+                       render_timeline, render_timeline_diff)
 
 
 def _load_many(paths: List[str]) -> ProfileSnapshot:
@@ -142,6 +143,32 @@ def _cmd_timeline(args: argparse.Namespace) -> int:
         print(f"no shard under {args.run_dir!r} has "
               f">= {args.min_snapshots} snapshots", file=sys.stderr)
         return 1
+    if args.diff:
+        # cross-run drift: align two runs' rings by sequence index and
+        # render per-edge delta-of-deltas (see timeline.TimelineDiff)
+        other = build_timelines(args.diff, shard=args.shard,
+                                min_len=args.min_snapshots)
+        if not other:
+            print(f"no shard under {args.diff!r} has "
+                  f">= {args.min_snapshots} snapshots", file=sys.stderr)
+            return 1
+        pairs = pair_timelines(tls, other)
+        if len(tls) != len(other):
+            print(f"warning: {len(tls)} vs {len(other)} shards; diffing "
+                  f"the {len(pairs)} stem-ordered pair(s)", file=sys.stderr)
+        if not any(len(td) for td in pairs):
+            print("no pair of shards shares sequence numbers; the rings "
+                  "were retained past each other", file=sys.stderr)
+            return 1
+        if args.json:
+            print(json.dumps([td.to_json(args.field) for td in pairs],
+                             indent=1))
+            return 0
+        for td in pairs:
+            print(render_timeline_diff(td, fld=args.field, top=args.top,
+                                       edge=args.edge))
+            print()
+        return 0
     if args.json:
         print(json.dumps([tl.to_json(args.field) for tl in tls], indent=1))
         return 0
@@ -218,6 +245,9 @@ def main(argv=None) -> int:
     tml = sub.add_parser("timeline",
                          help="per-edge deltas across a shard's snapshots")
     tml.add_argument("run_dir")
+    tml.add_argument("--diff", metavar="OTHER_RUN_DIR",
+                     help="second run of the same config: align rings by "
+                          "sequence index, render per-edge delta-of-deltas")
     tml.add_argument("--field", default="total_ns",
                      help=f"one of {TIMELINE_FIELDS}")
     tml.add_argument("--shard", help="substring filter on shard stems")

@@ -7,6 +7,11 @@ K+N.  Rendering those deltas side by side is the in-run drift detector —
 an edge whose per-interval time creeps up (garbage accumulation, a cache
 filling, a slot pool fragmenting) is flat in any single snapshot and
 obvious on the timeline.
+
+TimelineDiff extends the same idea ACROSS runs: two rings of the same
+config align by ring index and render per-edge delta-of-deltas (how the
+per-interval activity changed between run A and run B, interval by
+interval) — `python -m repro.profile timeline RUN_A --diff RUN_B`.
 """
 
 from __future__ import annotations
@@ -120,6 +125,141 @@ def build_timelines(root: str, shard: Optional[str] = None,
         if len(seqs) >= min_len:
             out.append(ShardTimeline(stem, seqs, metas, tables))
     return out
+
+
+@dataclass
+class TimelineDiff:
+    """Two shard rings (same config, two runs) aligned by SEQUENCE NUMBER.
+
+    Both rings are written on the same cadence (profile_interval
+    steps/ticks), so equal sequence numbers mark the same phase of each
+    run.  Alignment uses the *intersection* of the two rings' seq sets:
+    each aligned column is the interval between consecutive common seqs
+    (plus a from-run-start column when both rings still hold seq 1), and
+    each ring's per-interval value is differenced between exactly those
+    two snapshots.  This stays correct when retention trimmed the rings
+    differently — naive ring-position alignment would pair a trimmed
+    ring's first entry (a CUMULATIVE fold of everything before it) with
+    the other run's single-interval delta and rank the artifact as the
+    top drift.  The payload is the per-edge delta-of-deltas: how much
+    more (or less) per-interval count/time an edge spent in B than in A,
+    interval by interval — the cross-run drift detector (run-level `diff`
+    compares only cumulative totals and cannot see WHEN a regression
+    develops)."""
+
+    a: ShardTimeline
+    b: ShardTimeline
+
+    def columns(self) -> List[Tuple[Optional[int], int]]:
+        """Aligned intervals as (prev_seq, seq); prev None = run start."""
+        common = sorted(set(self.a.seqs) & set(self.b.seqs))
+        cols: List[Tuple[Optional[int], int]] = []
+        if common and common[0] == 1:    # both rings begin at the true start
+            cols.append((None, 1))
+        cols += list(zip(common[:-1], common[1:]))
+        return cols
+
+    def __len__(self) -> int:
+        return len(self.columns())
+
+    def edges(self) -> List[SlotKey]:
+        return sorted(set(self.a.edges()) | set(self.b.edges()))
+
+    def deltas(self, tl: ShardTimeline, key: SlotKey,
+               fld: str = "total_ns") -> List[float]:
+        """One ring's per-aligned-interval activity for `key` (one pass:
+        the seq->index map and series are built once per call)."""
+        cols = self.columns()
+        idx = {s: i for i, s in enumerate(tl.seqs)}
+        if fld == "mean_ns":             # true per-interval mean (cf. deltas)
+            tot = tl.series(key, "total_ns")
+            cnt = tl.series(key, "count")
+            out = []
+            for prev, cur in cols:
+                dt = tot[idx[cur]] - (tot[idx[prev]] if prev is not None
+                                      else 0.0)
+                dc = cnt[idx[cur]] - (cnt[idx[prev]] if prev is not None
+                                      else 0.0)
+                out.append(dt / dc if dc > 0 else (-1.0 if dc < 0 else 0.0))
+            return out
+        s = tl.series(key, fld)
+        return [s[idx[cur]] - (s[idx[prev]] if prev is not None else 0.0)
+                for prev, cur in cols]
+
+    def delta_of_deltas(self, key: SlotKey, fld: str = "total_ns"
+                        ) -> List[float]:
+        """Per-aligned-interval activity of B minus A."""
+        return [y - x for x, y in zip(self.deltas(self.a, key, fld),
+                                      self.deltas(self.b, key, fld))]
+
+    def to_json(self, fld: str = "total_ns") -> dict:
+        cols = self.columns()
+        edges = {}
+        for k in self.edges():
+            da = self.deltas(self.a, k, fld)
+            db = self.deltas(self.b, k, fld)
+            edges[_edge_key_str(k)] = {
+                "deltas_a": da,
+                "deltas_b": db,
+                "delta_of_deltas": [y - x for x, y in zip(da, db)],
+            }
+        return {
+            "a": {"stem": self.a.stem, "seqs": self.a.seqs},
+            "b": {"stem": self.b.stem, "seqs": self.b.seqs},
+            "aligned": len(cols),
+            "columns": [[p, c] for p, c in cols],
+            "field": fld,
+            "edges": edges,
+        }
+
+
+def pair_timelines(a: List[ShardTimeline], b: List[ShardTimeline]
+                   ) -> List[TimelineDiff]:
+    """Pair two runs' shards for diffing: by stem-order (stems embed the
+    label, so replicas labelled serve-0/serve-1 pair with their cross-run
+    counterparts; host/pid parts differ across runs by construction)."""
+    aa = sorted(a, key=lambda t: t.stem)
+    bb = sorted(b, key=lambda t: t.stem)
+    return [TimelineDiff(x, y) for x, y in zip(aa, bb)]
+
+
+def render_timeline_diff(td: TimelineDiff, fld: str = "total_ns",
+                         top: int = 12, edge: Optional[str] = None) -> str:
+    """Tabular per-edge delta-of-deltas, largest absolute drift first.
+
+    Cells are signed B-minus-A per-interval increments; a consistently
+    positive row is an edge whose per-interval cost GREW between runs."""
+    if fld not in TIMELINE_FIELDS:
+        raise ValueError(f"unknown timeline field {fld!r}; "
+                         f"choose from {TIMELINE_FIELDS}")
+    cols = td.columns()
+    if not cols:
+        return (f"timeline diff {td.a.stem} -> {td.b.stem}: no common "
+                f"sequence numbers (A holds {td.a.seqs}, B holds "
+                f"{td.b.seqs}) — rings were retained past each other; "
+                f"nothing comparable")
+    n = len(cols)
+    keys = td.edges()
+    if edge:
+        keys = [k for k in keys if edge in _edge_key_str(k)]
+    dd = {k: td.delta_of_deltas(k, fld) for k in keys}   # computed once
+    keys.sort(key=lambda k: -sum(abs(v) for v in dd[k]))
+    shown = keys[:top]
+    head = [f"timeline diff {td.a.stem} -> {td.b.stem}: {n} aligned "
+            f"intervals, field={fld} (per-interval B-minus-A)"]
+    marks = [f"s{0 if p is None else p}>s{c}" for p, c in cols]
+    if len(td.a) != len(td.b):
+        head.append(f"  (ring lengths differ: {len(td.a)} vs {len(td.b)} "
+                    f"snapshots; only common seqs are compared)")
+    width = max([len(m) for m in marks] + [10])
+    label_w = max([len(_edge_key_str(k)) for k in shown] + [20])
+    head.append("  ".join([" " * label_w] + [m.rjust(width) for m in marks]))
+    for k in shown:
+        cells = [f"{v:+.0f}".rjust(width) for v in dd[k]]
+        head.append("  ".join([_edge_key_str(k).ljust(label_w)] + cells))
+    if len(keys) > top:
+        head.append(f"  ... ({len(keys) - top} more edges)")
+    return "\n".join(head)
 
 
 def render_timeline(tl: ShardTimeline, fld: str = "total_ns",

@@ -1,25 +1,43 @@
-"""Serving engine: continuous batching over a fixed slot pool.
+"""Serving engine: iteration-level continuous batching behind a client API.
 
-vLLM-style iteration-level scheduling adapted to XLA's static shapes:
-  * a fixed pool of `max_batch` slots, each owning one row of the batched
-    KV cache (the cache pytree is [L, max_batch, ...] — slots never move,
-    requests are assigned to free slots);
-  * every engine tick runs ONE compiled decode_step over the whole pool
-    (finished/empty slots are masked out of sampling — no recompilation as
-    requests come and go);
-  * prefill runs per-request (optionally chunked) into the slot's cache rows
-    using dynamic_update_slice at the slot index.
+Layering of this package:
 
-Boundaries are XFA-instrumented ('serve'): queue wait, prefill, decode tick,
-detokenize — the API view over 'serve' is the serving latency breakdown.
+    scheduler.py  admission — FCFS queue -> free slots under a per-tick
+                  chunked-prefill token budget
+    sampling.py   per-request sampling params as per-slot vectors, ONE
+                  jitted pooled sampler (greedy/temperature/top-k/top-p)
+    engine.py     the slot pool + compiled per-slot-position decode tick,
+                  the background serving thread, and the client handles
+
+Decode runs ONE compiled decode_step per tick over the whole pool with a
+per-slot position vector `pos: [B] int32` — every slot's KV/state row
+advances independently (rope angles, cache writes and kv-length masks
+are per-row in the model layer), so mixed-length requests admitted at
+staggered ticks decode at their own depths: true iteration-level
+batching with zero recompilation as requests come and go.  Prompt tails
+beyond `prefill_chunk` are merged into the decode stream one token per
+tick (host-chunked prefill).
+
+Client API: `submit()` returns a Request handle immediately; tokens
+stream through an optional `on_token` callback and `handle.result()`
+blocks until completion.  `start()` runs the engine on a background
+thread (open-loop serving); without it, `run_until_drained()` drives the
+same loop synchronously (closed-loop benchmarks, tests).
+
+XFA instrumentation ('serve'): prefill_request and decode_tick are
+traced boundaries; queue_wait (Wait kind), ttft, decode_token and e2e
+latency phases fold via tracer.record_duration; truncated_prompt is a
+count event.  Shards land in the profile store exactly like trainer
+shards — `repro.profile query --kind serve`, report/diff/timeline all
+apply to serving runs natively.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
+import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,26 +45,81 @@ import numpy as np
 
 from repro.configs.base import ServeConfig
 from repro.core import tracer as xfa
+from repro.core.shadow import KIND_WAIT
 from repro.models.api import Model
+
+from .sampling import GREEDY, PooledSampler, SamplingParams
+from .scheduler import Scheduler
 
 
 @dataclasses.dataclass
 class Request:
+    """Client handle for one generation request.
+
+    Returned by ServingEngine.submit; safe to read from other threads.
+    `result()` blocks until the request finishes; `on_token` (if given)
+    is invoked from the engine thread for every generated token."""
     uid: int
     prompt: np.ndarray                 # [S] int32
     max_new_tokens: int = 32
+    sampling: SamplingParams = GREEDY
     submitted_at: float = 0.0
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    truncated: bool = False            # prompt cut to fit the cache row
+    admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    on_token: Optional[Callable[["Request", int], None]] = None
+    error: Optional[BaseException] = None      # engine failure, if any
+    _done_event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    def result(self, timeout: Optional[float] = None) -> "Request":
+        """Block until the request completes; raises TimeoutError, or
+        RuntimeError if the engine failed while this request was live."""
+        if not self._done_event.wait(timeout):
+            raise TimeoutError(f"request {self.uid} not done in {timeout}s")
+        if self.error is not None:
+            raise RuntimeError(
+                f"serving engine failed while request {self.uid} was "
+                f"in flight") from self.error
+        return self
+
+    # -- latency accessors (None until the phase happened) ------------------
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        return None if self.admitted_at is None \
+            else self.admitted_at - self.submitted_at
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return None if self.first_token_at is None \
+            else self.first_token_at - self.submitted_at
+
+    @property
+    def e2e_s(self) -> Optional[float]:
+        return None if self.finished_at is None \
+            else self.finished_at - self.submitted_at
 
 
-@dataclasses.dataclass
-class _Slot:
-    request: Optional[Request] = None
-    pos: int = 0                        # next cache position to write
-    remaining: int = 0
+def _scatter_slot(pool, one, slot_idx: int):
+    """Write a batch=1 cache pytree into row `slot_idx` of the pool cache.
+
+    The batch axis differs per family/leaf ([L,B,...] KV rows, xlstm's
+    [n_super,n_m,B,...] states, ...) — it is inferred per leaf as the
+    first axis where the batch=1 tree has extent 1 and the pool differs.
+    (The previous engine hardcoded axis 1, which silently aliased every
+    xlstm request onto batch row 0.)"""
+    def leaf(p, o):
+        if p.shape == o.shape:         # max_batch == 1: full replace
+            return o.astype(p.dtype)
+        ax = next(d for d, (a, b) in enumerate(zip(p.shape, o.shape))
+                  if b == 1 and a != b)
+        idx = [0] * p.ndim
+        idx[ax] = slot_idx
+        return jax.lax.dynamic_update_slice(p, o.astype(p.dtype), tuple(idx))
+    return jax.tree.map(leaf, pool, one)
 
 
 class ServingEngine:
@@ -54,13 +127,18 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.scfg = scfg
-        self.slots = [_Slot() for _ in range(scfg.max_batch)]
-        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.scheduler = Scheduler(scfg)
+        self.sampler = PooledSampler(scfg.max_batch)
         self.table = model.table()
         self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
         self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
         self._uid = 0
         self.completed: List[Request] = []
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+        self._error: Optional[BaseException] = None   # terminal loop failure
         self._profile_store = None
         self._ticks = 0
         if scfg.profile_dir:
@@ -88,78 +166,262 @@ class ServingEngine:
                       "max_seq_len": scfg.max_seq_len,
                       **dict(scfg.profile_meta)})
 
-    # -- client API --------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
-        self._uid += 1
-        req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens, submitted_at=time.monotonic())
-        self.queue.put(req)
+    # -- client API ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               sampling: Optional[SamplingParams] = None,
+               on_token: Optional[Callable[[Request, int], None]] = None
+               ) -> Request:
+        """Enqueue a request; returns its handle immediately."""
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (the engine "
+                             "always samples at least the first token)")
+        if sampling is None:
+            sampling = SamplingParams(
+                temperature=self.scfg.temperature, top_k=self.scfg.top_k,
+                top_p=self.scfg.top_p, seed=self.scfg.sample_seed)
+        # timestamp BEFORE taking the lock: a tick in progress holds it,
+        # and that wait is queueing delay the client really experienced
+        submitted_at = time.monotonic()
+        with self._work:
+            if self._error is not None:
+                # a dead engine must reject, not enqueue into a void where
+                # result() would block forever
+                raise RuntimeError("serving engine has failed; no further "
+                                   "requests accepted") from self._error
+            self._uid += 1
+            req = Request(self._uid, np.asarray(prompt, np.int32),
+                          max_new_tokens, sampling=sampling,
+                          submitted_at=submitted_at, on_token=on_token)
+            self.scheduler.add(req)
+            self._work.notify_all()
         return req
 
-    # -- engine internals -----------------------------------------------------
+    def start(self) -> "ServingEngine":
+        """Run the engine loop on a background daemon thread.  After a
+        timed-out stop() this blocks until the old loop finishes its tick
+        and is reaped — there is never a second loop over the same pool,
+        and start() returning means the engine IS serving."""
+        while True:
+            with self._lock:
+                if self._error is not None:
+                    raise RuntimeError("serving engine has failed; it "
+                                       "cannot be restarted") from self._error
+                t = self._thread
+                if t is None:
+                    self._stop = False
+                    self._thread = threading.Thread(
+                        target=self._serve_loop, name="serve-engine",
+                        daemon=True)
+                    self._thread.start()
+                    return self
+                if t.is_alive() and not self._stop:
+                    return self            # genuinely running
+            # finished, or stopping after a timed-out stop(): reap OUTSIDE
+            # the lock (the loop's current tick needs it to complete)
+            t.join()
+            with self._lock:
+                if self._thread is t:
+                    self._thread = None
+
+    def stop(self, timeout: float = 30.0) -> bool:
+        """Stop the background thread (in-flight requests stay in place).
+        Returns False if the loop is still finishing its current tick —
+        the thread stays owned so a later start() can never spawn a
+        second loop over the same pool; call stop() again to reap it."""
+        with self._work:
+            if self._thread is None:
+                return True
+            self._stop = True
+            self._work.notify_all()
+            t = self._thread
+        t.join(timeout)
+        if t.is_alive():
+            return False
+        with self._lock:
+            if self._thread is t:
+                self._thread = None
+        return True
+
+    # -- engine internals ---------------------------------------------------
     @xfa.api("serve", "prefill_request")
     def _admit(self, slot_idx: int, req: Request) -> None:
-        """Prefill `req` into slot `slot_idx`'s cache rows, chunked."""
+        """Bulk-prefill up to prefill_chunk tokens of `req` into slot
+        `slot_idx`'s cache rows; the prompt tail (if any) is left pending
+        for the decode stream."""
         model, scfg = self.model, self.scfg
-        prompt = req.prompt[: scfg.max_seq_len - req.max_new_tokens - 1]
-        # single-slot prefill: run the whole-prompt prefill at batch=1 and
-        # scatter the resulting rows into the pool cache at slot_idx
+        now = time.monotonic()
+        req.admitted_at = now
+        xfa.record_duration("serve", "queue_wait",
+                            (now - req.submitted_at) * 1e9, kind=KIND_WAIT)
+        # keep at least one prompt token even when max_new_tokens alone
+        # (nearly) fills the row — matches Scheduler.admit_cost's clamp
+        limit = max(1, scfg.max_seq_len - req.max_new_tokens - 1)
+        prompt = req.prompt
+        if len(prompt) > limit:
+            # visible truncation: flagged on the handle AND folded as a
+            # count event so fleets can alarm on it
+            prompt = prompt[:limit]
+            req.truncated = True
+            xfa.count_event("serve", "truncated_prompt")
+        cap = scfg.max_seq_len - len(prompt)
+        if req.max_new_tokens > cap:
+            # generation budget clamped so the slot's pos can never run
+            # off the end of its cache row (oversized max_new_tokens)
+            req.max_new_tokens = cap
+            req.truncated = True
+            xfa.count_event("serve", "clamped_max_new")
+        chunk = self.scheduler.admit_cost(req)
+        head, tail = prompt[:chunk], prompt[chunk:]
+        # single-slot prefill: run the chunk at batch=1 and scatter the
+        # resulting rows into the pool cache at slot_idx
         tiny_cache = model.init_cache(1, scfg.max_seq_len)
-        batch = {"tokens": jnp.asarray(prompt[None])}
+        batch = {"tokens": jnp.asarray(head[None])}
         logits, tiny_cache, self.table = model.prefill(
             self.params, batch, self.table, tiny_cache)
-        self.cache = jax.tree.map(
-            lambda pool, one: jax.lax.dynamic_update_slice(
-                pool, one.astype(pool.dtype),
-                (0, slot_idx) + (0,) * (pool.ndim - 2)),
-            self.cache, tiny_cache)
-        first = int(jnp.argmax(logits[0]))
-        req.output.append(first)
-        req.first_token_at = time.monotonic()
-        slot = self.slots[slot_idx]
-        slot.request = req
-        slot.pos = len(prompt)
-        slot.remaining = req.max_new_tokens - 1
+        self.cache = _scatter_slot(self.cache, tiny_cache, slot_idx)
+        self.scheduler.bind(slot_idx, req, pos=len(head), pending=tail)
+        self.sampler.bind(slot_idx, req.sampling)
+        if len(tail) == 0:
+            # whole prompt prefilled: the first token samples NOW (and is
+            # EOS-checked — a first-token EOS finishes without any decode
+            # ticks instead of burning max_new_tokens - 1 of them)
+            tok = self.sampler.sample_one(np.asarray(logits[0]),
+                                          req.sampling, step=len(head))
+            self._emit(slot_idx, tok, time.monotonic())
 
     @xfa.api("serve", "decode_tick")
     def _tick(self) -> int:
-        """One pooled decode step; returns #active slots."""
-        active = [i for i, s in enumerate(self.slots) if s.request is not None]
+        """One pooled decode step at per-slot positions; returns #active."""
+        slots = self.scheduler.slots
+        active = self.scheduler.active()
         if not active:
             return 0
         tokens = np.zeros((self.scfg.max_batch,), np.int32)
-        for i, s in enumerate(self.slots):
-            if s.request is not None and s.request.output:
+        pos = self.scheduler.pos_vector()
+        feeding = {}           # idx -> prompt tokens REMAIN after this tick
+        for i in active:
+            s = slots[i]
+            if s.pending:
+                tokens[i] = s.pending.popleft()
+                feeding[i] = bool(s.pending)
+            else:
                 tokens[i] = s.request.output[-1]
-        # pool-wide position: slots decode at their own pos; the decode step
-        # takes a single pos per call, so we tick the max and mask per-slot
-        # validity through kv_len = slot.pos (cache rows beyond are zeros).
-        pos = max(self.slots[i].pos for i in active)
+                feeding[i] = False
+        t0 = time.perf_counter_ns()
         logits, self.cache, self.table = self._decode(
             self.params, jnp.asarray(tokens), self.table, self.cache,
-            jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+            jnp.asarray(pos))
+        nxt = self.sampler(logits, step=pos + 1)
+        tick_ns = time.perf_counter_ns() - t0
         now = time.monotonic()
+        emitted = 0
         for i in active:
-            s = self.slots[i]
-            tok = int(nxt[i])
-            s.request.output.append(tok)
-            s.pos += 1
-            s.remaining -= 1
-            if s.remaining <= 0 or tok == self.scfg.eos_token:
-                s.request.done = True
-                s.request.finished_at = now
-                self.completed.append(s.request)
-                self.slots[i] = _Slot()
+            slots[i].pos += 1
+            if feeding[i]:     # mid-prompt: the sampled token is discarded
+                continue
+            emitted += 1
+            self._emit(i, int(nxt[i]), now)
+        if emitted:
+            xfa.record_duration("serve", "decode_token",
+                                tick_ns / emitted, n=emitted)
         return len(active)
 
-    @xfa.wait("serve", "queue_wait")
-    def _poll(self) -> Optional[Request]:
-        try:
-            return self.queue.get_nowait()
-        except queue.Empty:
-            return None
+    def _emit(self, slot_idx: int, tok: int, now: float) -> None:
+        """Accept one generated token for the request in `slot_idx`."""
+        req = self.scheduler.slots[slot_idx].request
+        first = not req.output
+        req.output.append(tok)
+        if first:
+            req.first_token_at = now
+            xfa.record_duration("serve", "ttft",
+                                (now - req.submitted_at) * 1e9)
+        if req.on_token is not None:
+            try:
+                req.on_token(req, tok)
+            except Exception:
+                xfa.count_event("serve", "callback_error")
+        if tok == self.scfg.eos_token or len(req.output) >= req.max_new_tokens:
+            self._finish(slot_idx, now)
 
+    def _finish(self, slot_idx: int, now: float) -> None:
+        req = self.scheduler.slots[slot_idx].request
+        req.done = True
+        req.finished_at = now
+        xfa.record_duration("serve", "e2e", (now - req.submitted_at) * 1e9)
+        self.completed.append(req)
+        self.scheduler.release(slot_idx)
+        self.sampler.release(slot_idx)
+        req._done_event.set()
+
+    def step(self) -> int:
+        """One engine iteration: admit under the budget, then one pooled
+        decode tick.  Returns the number of active slots ticked.
+
+        Failure handling lives HERE, not in the background loop, so the
+        synchronous (closed-loop) driver gets the same guarantee: an
+        error marks the engine dead and wakes every waiter before the
+        exception propagates to whoever drove the step."""
+        with self._lock:
+            try:
+                picked = self.scheduler.schedule()
+                for k, (idx, req) in enumerate(picked):
+                    try:
+                        self._admit(idx, req)
+                    except Exception as e:
+                        # every request in `picked` was already popped
+                        # from the queue — none may vanish without waking
+                        # waiters: the failing one errors out, later ones
+                        # go back to the queue head (FCFS preserved) for
+                        # _fail_outstanding to find
+                        req.error = e
+                        req._done_event.set()
+                        self.scheduler.release(idx)
+                        for _, later in reversed(picked[k + 1:]):
+                            self.scheduler.waiting.appendleft(later)
+                        raise
+                n = self._tick()
+                self._ticks += 1
+                interval = self.scfg.profile_interval_ticks
+                if self._profile_store is not None and interval \
+                        and self._ticks % interval == 0:
+                    self.write_profile_shard()
+                return n
+            except Exception as e:      # noqa: BLE001 — fail loud AND clean
+                self._fail_outstanding(e)
+                raise
+
+    def _serve_loop(self) -> None:
+        xfa.set_thread_group("serve")
+        while True:
+            with self._work:
+                while not self._stop and not self.scheduler.has_work():
+                    self._work.wait(0.05)
+                if self._stop:
+                    break
+            try:
+                self.step()
+            except Exception:               # noqa: BLE001 — must not die mute
+                break                       # step() already failed waiters
+        self.write_profile_shard()
+
+    def _fail_outstanding(self, exc: BaseException) -> None:
+        """A serve-loop error must not strand clients on result(): mark
+        every live request failed and wake its waiters."""
+        xfa.count_event("serve", "engine_error")
+        with self._lock:
+            self._error = exc
+            live = [s.request for s in self.scheduler.slots
+                    if s.request is not None]
+            live += list(self.scheduler.waiting)
+            self.scheduler.waiting.clear()
+            for i in self.scheduler.active():
+                self.scheduler.release(i)
+            for req in live:
+                req.error = exc
+                req._done_event.set()
+            self._stop = True
+
+    # -- profiling ----------------------------------------------------------
     def write_profile_shard(self) -> None:
         """Refresh this replica's profile shard (host tracer folds)."""
         if self._profile_store is None:
@@ -169,22 +431,28 @@ class ServingEngine:
             tracer_folded(), label=self.scfg.profile_label,
             meta={"ticks": self._ticks, "completed": len(self.completed)})
 
+    # -- synchronous driver -------------------------------------------------
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        """Admit from the queue into free slots, tick until all done."""
-        interval = self.scfg.profile_interval_ticks
-        for _ in range(max_ticks):
-            free = [i for i, s in enumerate(self.slots) if s.request is None]
-            while free and not self.queue.empty():
-                req = self._poll()
-                if req is None:
+        """Serve until queue and pool are empty.  With a background thread
+        running this just waits for quiescence; otherwise it drives the
+        loop inline (closed-loop mode)."""
+        t = self._thread
+        if t is not None and t.is_alive():
+            deadline = time.monotonic() + max_ticks * 0.1
+            while True:
+                # observe under the engine lock: step() holds it across
+                # pop -> bind -> tick, so a request mid-admission can
+                # never look like "neither waiting nor active" from here
+                with self._lock:
+                    if not self.scheduler.has_work():
+                        break
+                if time.monotonic() > deadline:
                     break
-                self._admit(free.pop(0), req)
-            n = self._tick()
-            self._ticks += 1
-            if self._profile_store is not None and interval \
-                    and self._ticks % interval == 0:
-                self.write_profile_shard()
-            if n == 0 and self.queue.empty():
+                time.sleep(0.002)
+            return self.completed
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and not self.scheduler.has_waiting():
                 break
         self.write_profile_shard()
         return self.completed

@@ -1,0 +1,112 @@
+"""Pooled per-slot sampling — greedy / temperature / top-k / top-p.
+
+Per-REQUEST sampling params live as per-SLOT vectors so ONE jitted
+sampler covers the whole pool every tick regardless of which requests
+occupy which slots — the same static-shape discipline as the decode step
+itself: params are array *values*, not compile-time constants, so
+requests coming and going never retrace.
+
+Determinism: the PRNG key for a token is derived from (request seed,
+absolute context length), so a request's sampled continuation is
+identical whether it decodes alone, batched with arbitrary neighbours,
+or with its prompt chunked differently — the serving-equivalence test
+relies on this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding strategy (all combinable; greedy by default)."""
+    temperature: float = 0.0         # 0 -> greedy (argmax)
+    top_k: int = 0                   # 0 -> full vocab
+    top_p: float = 1.0               # nucleus mass; 1.0 -> no nucleus cut
+    seed: int = 0                    # PRNG stream for this request
+
+
+GREEDY = SamplingParams()
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array,
+                  seed: jax.Array, step: jax.Array) -> jax.Array:
+    """Sample one token per pool row.  logits: [B, V]; all params [B].
+
+    step is the row's absolute context length at sampling time — it salts
+    the per-row PRNG key so token t of a request is a pure function of
+    (seed, t), independent of batch composition.  Rows with
+    temperature <= 0 take the argmax."""
+    B, V = logits.shape
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1)
+    lg = lf / jnp.maximum(temperature, 1e-6)[:, None]
+    # top-k: drop logits below each row's k-th largest (k = 0 keeps all)
+    srt = jnp.sort(lg, axis=-1)[:, ::-1]
+    k = jnp.where(top_k > 0, top_k, V).astype(jnp.int32)
+    kth = jnp.take_along_axis(srt, (k - 1)[:, None], axis=-1)
+    lg = jnp.where(lg < kth, NEG_INF, lg)
+    # top-p nucleus on the post-top-k distribution; the top token always
+    # survives, so top_p -> 0 degenerates to greedy, never empty support
+    probs = jax.nn.softmax(lg, axis=-1)
+    ps = jnp.sort(probs, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(ps, axis=-1)
+    keep_sorted = (cum - ps) < top_p[:, None]        # exclusive-cum mass
+    keep_sorted = keep_sorted.at[:, 0].set(True)
+    thresh = jnp.min(jnp.where(keep_sorted, ps, jnp.inf), axis=-1)
+    lg = jnp.where(probs < thresh[:, None], NEG_INF, lg)
+    keys = jax.vmap(lambda s, t: jax.random.fold_in(jax.random.key(s), t))(
+        seed, step)
+    sampled = jax.vmap(jax.random.categorical)(keys, lg)
+    return jnp.where(temperature <= 0.0, greedy, sampled).astype(jnp.int32)
+
+
+class PooledSampler:
+    """Host-side mirror of per-slot sampling state + the jitted kernel.
+
+    bind/release keep [B] param vectors in step with slot occupancy;
+    __call__ runs the whole pool through one compiled sample_tokens."""
+
+    def __init__(self, max_batch: int) -> None:
+        self.max_batch = max_batch
+        self.temperature = np.zeros((max_batch,), np.float32)
+        self.top_k = np.zeros((max_batch,), np.int32)
+        self.top_p = np.ones((max_batch,), np.float32)
+        self.seed = np.zeros((max_batch,), np.uint32)
+        self._fn = jax.jit(sample_tokens)
+
+    def bind(self, i: int, sp: SamplingParams) -> None:
+        self.temperature[i] = sp.temperature
+        self.top_k[i] = sp.top_k
+        self.top_p[i] = sp.top_p
+        self.seed[i] = np.uint32(sp.seed)
+
+    def release(self, i: int) -> None:
+        self.bind(i, GREEDY)
+
+    def __call__(self, logits, step) -> np.ndarray:
+        """logits: [B, V]; step: [B] context length per row -> tokens [B]."""
+        return np.asarray(self._fn(
+            jnp.asarray(logits), jnp.asarray(self.temperature),
+            jnp.asarray(self.top_k), jnp.asarray(self.top_p),
+            jnp.asarray(self.seed), jnp.asarray(step, jnp.int32)))
+
+    def sample_one(self, logits_row, sp: SamplingParams, step: int) -> int:
+        """Single-sequence sampling (prefill's first token) through the
+        SAME kernel semantics as the pooled path."""
+        out = self._fn(
+            jnp.asarray(logits_row)[None],
+            jnp.full((1,), sp.temperature, jnp.float32),
+            jnp.full((1,), sp.top_k, jnp.int32),
+            jnp.full((1,), sp.top_p, jnp.float32),
+            jnp.full((1,), np.uint32(sp.seed), jnp.uint32),
+            jnp.full((1,), step, jnp.int32))
+        return int(out[0])

@@ -1,0 +1,111 @@
+"""Slot admission + chunked-prefill budgeting for the serving engine.
+
+The scheduler owns the WAITING side of continuous batching: the FCFS
+queue of submitted requests, the fixed slot pool's occupancy bookkeeping
+(which request holds which cache row, at what depth, with how much
+prompt left to feed), and the per-tick admission decision.
+
+Admission is iteration-level (vLLM-style): any tick with free slots may
+admit, bounded by a chunked-prefill token budget so a burst of long
+prompts cannot stall slots that are already decoding (Sarathi-style
+prefill/decode interference control).  A prompt is bulk-prefilled only
+up to `prefill_chunk` tokens; the tail is fed through the pooled decode
+stream one token per tick — each slot's cache row advances at its own
+position — which keeps admission cost O(chunk) instead of O(prompt).
+
+Fairness: strict FCFS.  The budget never reorders the queue, and the
+head-of-line request always fits once a slot is free, so one huge prompt
+is delayed (by the budget) but never starved.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ServeConfig
+
+
+@dataclasses.dataclass
+class Slot:
+    """One row of the batched cache pool."""
+    request: Optional[object] = None   # serving.engine.Request (duck-typed)
+    pos: int = 0                       # next cache position to write
+    pending: Deque[int] = dataclasses.field(default_factory=deque)
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    @property
+    def prefilling(self) -> bool:
+        """Still feeding prompt-tail tokens through the decode stream."""
+        return self.request is not None and bool(self.pending)
+
+
+class Scheduler:
+    """Iteration-level admission control over a fixed slot pool."""
+
+    def __init__(self, scfg: ServeConfig) -> None:
+        self.scfg = scfg
+        self.waiting: Deque = deque()
+        self.slots: List[Slot] = [Slot() for _ in range(scfg.max_batch)]
+
+    # -- queue side ---------------------------------------------------------
+    def add(self, req) -> None:
+        self.waiting.append(req)
+
+    def has_waiting(self) -> bool:
+        return bool(self.waiting)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.active())
+
+    # -- pool side ----------------------------------------------------------
+    def active(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def admit_cost(self, req) -> int:
+        """Bulk-prefill tokens this admission will actually consume —
+        after the engine's truncation to fit the cache row (charging the
+        raw prompt length would overbill truncated requests and block
+        cheap neighbours for no real work)."""
+        limit = self.scfg.max_seq_len \
+            - getattr(req, "max_new_tokens", 0) - 1
+        plen = min(len(req.prompt), max(limit, 1))
+        chunk = self.scfg.prefill_chunk or plen
+        return max(1, min(plen, chunk))
+
+    def schedule(self) -> List[Tuple[int, object]]:
+        """Admissions for this tick: FCFS into free slots under the
+        prefill token budget.  The first admission of a tick always fits
+        regardless of its cost (no starvation of long prompts)."""
+        budget = self.scfg.prefill_budget_tokens
+        out: List[Tuple[int, object]] = []
+        spent = 0
+        free = self.free_slots()
+        while free and self.waiting:
+            cost = self.admit_cost(self.waiting[0])
+            if out and budget and spent + cost > budget:
+                break
+            out.append((free.pop(0), self.waiting.popleft()))
+            spent += cost
+        return out
+
+    def bind(self, idx: int, req, pos: int, pending) -> None:
+        """Occupy slot `idx`: cache holds `pos` tokens, `pending` is the
+        unprefilled prompt tail to merge into the decode stream."""
+        self.slots[idx] = Slot(request=req, pos=pos, pending=deque(pending))
+
+    def release(self, idx: int) -> None:
+        self.slots[idx] = Slot()
+
+    def pos_vector(self) -> np.ndarray:
+        """[max_batch] int32 per-slot cache depths (free slots at 0)."""
+        return np.asarray([s.pos for s in self.slots], np.int32)

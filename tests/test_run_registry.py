@@ -387,3 +387,73 @@ class TestTimeline:
                 ] == [store.shard_stem("aa")]
         assert [t.stem for t in build_timelines(str(tmp_path), min_len=2)
                 ] == [store.shard_stem("bb")]
+
+
+class TestTimelineDiff:
+    """timeline --diff: two runs of the same config, rings aligned by
+    sequence index, per-edge delta-of-deltas (ROADMAP open item)."""
+
+    def _two_runs(self, tmp_path, mults_a=(1, 2, 4), mults_b=(1, 3, 6)):
+        from repro.profile import build_timelines
+        for name, mults in (("a", mults_a), ("b", mults_b)):
+            store = ProfileStore(str(tmp_path / name))
+            for i in mults:
+                store.write_shard(fold_event_log(EVENTS * i), label="t",
+                                  meta={"step": i})
+        return (build_timelines(str(tmp_path / "a")),
+                build_timelines(str(tmp_path / "b")))
+
+    def test_delta_of_deltas(self, tmp_path):
+        from repro.profile import pair_timelines, render_timeline_diff
+        tls_a, tls_b = self._two_runs(tmp_path)
+        [td] = pair_timelines(tls_a, tls_b)
+        key = ("app", "glibc", "read")
+        # A deltas: 1,1,2 ; B deltas: 1,2,3 -> B-minus-A: 0,1,1
+        assert td.delta_of_deltas(key, "count") == [0.0, 1.0, 1.0]
+        out = render_timeline_diff(td, fld="count")
+        assert "timeline diff" in out and "B-minus-A" in out
+        j = td.to_json("count")
+        assert j["aligned"] == 3
+        assert j["edges"]["app -> glibc.read"]["delta_of_deltas"] \
+            == [0.0, 1.0, 1.0]
+
+    def test_unequal_rings_align_on_prefix(self, tmp_path):
+        from repro.profile import pair_timelines, render_timeline_diff
+        tls_a, tls_b = self._two_runs(tmp_path, mults_a=(1, 2, 4, 8),
+                                      mults_b=(2, 2))
+        [td] = pair_timelines(tls_a, tls_b)
+        assert len(td) == 2
+        key = ("app", "glibc", "read")
+        # A deltas: 1,1 ; B deltas: 2,0 -> 1,-1
+        assert td.delta_of_deltas(key, "count") == [1.0, -1.0]
+        assert "ring lengths differ" in render_timeline_diff(td, fld="count")
+
+    def test_retention_trimmed_ring_aligns_by_seq(self, tmp_path):
+        """A ring trimmed by keep-last retention must diff against the
+        other run's SAME seq numbers — position alignment would pair its
+        first entry (a cumulative fold) with the other run's first
+        single-interval delta and report a huge phantom drift."""
+        from repro.profile import RetentionPolicy, pair_timelines
+        a = ProfileStore(str(tmp_path / "a"),
+                         retention=RetentionPolicy(keep_last=2))
+        b = ProfileStore(str(tmp_path / "b"))
+        for i in (1, 2, 4, 8):
+            a.write_shard(fold_event_log(EVENTS * i), label="t")
+            b.write_shard(fold_event_log(EVENTS * i), label="t")
+        from repro.profile import build_timelines
+        [td] = pair_timelines(build_timelines(str(tmp_path / "a")),
+                              build_timelines(str(tmp_path / "b")))
+        # A keeps seqs {3, 4}; common interval is 3 -> 4 only
+        assert td.columns() == [(3, 4)]
+        # identical runs: zero drift (positional pairing would say -3)
+        assert td.delta_of_deltas(("app", "glibc", "read"), "count") == [0.0]
+
+    def test_cli_timeline_diff(self, tmp_path):
+        from repro.profile.__main__ import main
+        self._two_runs(tmp_path)
+        rc = main(["timeline", str(tmp_path / "a"),
+                   "--diff", str(tmp_path / "b"), "--field", "count"])
+        assert rc == 0
+        rc = main(["timeline", str(tmp_path / "a"),
+                   "--diff", str(tmp_path / "b"), "--json"])
+        assert rc == 0

@@ -1,0 +1,397 @@
+"""Continuous-batching serving subsystem tests.
+
+The load-bearing invariant: mixed-length prompts admitted at STAGGERED
+ticks into the pooled engine must produce TOKEN-IDENTICAL outputs to
+per-request sequential decode — which only holds if every slot decodes
+at its own position (per-slot `pos: [B]`: rope angles, cache writes and
+kv-length masks all per-row).  Covered for every model family the
+engine serves (dense, moe/mla, hybrid, ssm; vlm and audio prompts need
+patches/frames at submit, which the token-prompt client API doesn't
+carry).  Plus the scheduler (admission budget, chunked prefill), the
+pooled sampler (determinism under batching), the client API (background
+thread, streaming callbacks, futures), EOS-on-first-token, truncation
+accounting, and the serve latency phases folded into profile shards.
+"""
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.configs.base import ServeConfig
+from repro.models import build_model
+from repro.serving import (SamplingParams, Scheduler, ServingEngine,
+                           sample_tokens)
+
+SERVING_ARCHS = ["tinyllama_1_1b", "deepseek_v2_lite_16b", "zamba2_2_7b",
+                 "xlstm_1_3b"]
+
+
+def tiny(arch):
+    """Extra-reduced smoke config: 2 layers, small vocab, drop-free MoE."""
+    return dataclasses.replace(get_smoke(arch), n_layers=2, vocab=256,
+                               capacity_factor=8.0)
+
+
+def build(arch, seed=0):
+    cfg = tiny(arch)
+    model = build_model(cfg, impl="ref")
+    return cfg, model, model.init(jax.random.key(seed))
+
+
+def sequential_decode(model, params, prompt, max_new, max_seq_len=64,
+                      eos=-1):
+    """Reference: full single-request prefill + one-at-a-time decode,
+    greedy, with the engine's EOS/max_new semantics."""
+    cache = model.init_cache(1, max_seq_len)
+    table = model.table()
+    lg, cache, table = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, table, cache)
+    toks = [int(jnp.argmax(lg[0]))]
+    pos = len(prompt)
+    while len(toks) < max_new and toks[-1] != eos:
+        lg, cache, table = model.decode_step(
+            params, jnp.asarray([toks[-1]], jnp.int32), table, cache,
+            jnp.asarray([pos], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
+def staggered_run(engine, prompts, max_new, sampling=None):
+    """Submit mixed-length prompts at staggered ticks; drain; return reqs."""
+    reqs = [engine.submit(prompts[0], max_new[0], sampling=sampling)]
+    engine.step()
+    engine.step()
+    reqs.append(engine.submit(prompts[1], max_new[1], sampling=sampling))
+    reqs.append(engine.submit(prompts[2], max_new[2], sampling=sampling))
+    engine.step()
+    reqs.append(engine.submit(prompts[3], max_new[3], sampling=sampling))
+    engine.run_until_drained()
+    return reqs
+
+
+def mixed_prompts(cfg, seed=1, lengths=(3, 7, 5, 9)):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lengths]
+
+
+class TestContinuousBatchingEquivalence:
+    @pytest.mark.parametrize("arch", SERVING_ARCHS)
+    def test_staggered_matches_sequential(self, arch):
+        """Pooled decode at per-slot positions == per-request sequential
+        decode, token for token, with requests arriving mid-flight."""
+        cfg, model, params = build(arch)
+        prompts = mixed_prompts(cfg)
+        max_new = [6, 5, 6, 4]
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=3, max_seq_len=64, eos_token=-1, prefill_chunk=64))
+        reqs = staggered_run(engine, prompts, max_new)
+        for r, p, n in zip(reqs, prompts, max_new):
+            assert r.done
+            assert r.output == sequential_decode(model, params, p, n), \
+                f"{arch}: batched != sequential for prompt len {len(p)}"
+
+    @pytest.mark.parametrize("arch", ["tinyllama_1_1b", "xlstm_1_3b"])
+    def test_chunked_prefill_matches_single_slot(self, arch):
+        """Host-chunked prefill (tail fed through the decode stream) is
+        batch-composition independent: a crowded pool reproduces the
+        single-slot engine exactly, chunk boundaries and all."""
+        cfg, model, params = build(arch)
+        prompts = mixed_prompts(cfg, seed=2, lengths=(5, 9, 4, 7))
+        max_new = [5, 4, 6, 5]
+        mk = lambda batch: ServingEngine(model, params, ServeConfig(
+            max_batch=batch, max_seq_len=64, eos_token=-1, prefill_chunk=2))
+        crowded = staggered_run(mk(3), prompts, max_new)
+        for r, p, n in zip(crowded, prompts, max_new):
+            solo = mk(1)
+            ref = solo.submit(p, n)
+            solo.run_until_drained()
+            assert r.output == ref.output, f"{arch}: chunked prefill " \
+                f"depends on batch composition (prompt len {len(p)})"
+
+    def test_sampled_decode_is_batch_independent(self):
+        """Sampling keys derive from (seed, position): a request's sampled
+        continuation is identical batched or solo."""
+        cfg, model, params = build("tinyllama_1_1b")
+        prompts = mixed_prompts(cfg, seed=3)
+        max_new = [6, 6, 6, 6]
+        sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9, seed=7)
+        mk = lambda batch: ServingEngine(model, params, ServeConfig(
+            max_batch=batch, max_seq_len=64, eos_token=-1, prefill_chunk=64))
+        batched = staggered_run(mk(3), prompts, max_new, sampling=sp)
+        for r, p, n in zip(batched, prompts, max_new):
+            solo = mk(1)
+            ref = solo.submit(p, n, sampling=sp)
+            solo.run_until_drained()
+            assert r.output == ref.output
+            assert len(r.output) == n
+
+
+class TestEngineSemantics:
+    def test_first_token_eos_finishes_immediately(self):
+        """A request whose FIRST sampled token is EOS must finish at admit
+        time, not decode max_new_tokens - 1 further ticks."""
+        cfg, model, params = build("tinyllama_1_1b")
+        prompt = mixed_prompts(cfg)[0]
+        first = sequential_decode(model, params, prompt, 1)[0]
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=first, prefill_chunk=64))
+        req = engine.submit(prompt, max_new_tokens=16)
+        ticks_before = engine._ticks
+        engine.run_until_drained()
+        assert req.done and req.output == [first]
+        # the pool never decoded for it: one tick observes the empty pool
+        assert engine._ticks - ticks_before <= 1
+
+    def test_truncated_prompt_flagged_and_counted(self):
+        cfg, model, params = build("tinyllama_1_1b")
+        from repro.core.tracer import TRACER
+        from repro.profile import tracer_folded
+        before = sum(
+            e.count for k, e in tracer_folded().edges.items()
+            if k[2] == "truncated_prompt")
+        rng = np.random.default_rng(0)
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=1, max_seq_len=32, eos_token=-1))
+        req = engine.submit(rng.integers(0, cfg.vocab, 40), max_new_tokens=4)
+        engine.run_until_drained()
+        assert req.done and req.truncated
+        # prompt was cut to fit the cache row alongside max_new_tokens
+        assert len(req.output) == 4
+        after = sum(
+            e.count for k, e in tracer_folded().edges.items()
+            if k[2] == "truncated_prompt")
+        assert after == before + 1
+
+    def test_oversized_max_new_clamped_to_cache_row(self):
+        """max_new_tokens >= max_seq_len must not let a slot's pos run off
+        the end of its cache row (writes would silently clamp and corrupt
+        the newest position); the engine caps the generation budget."""
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=1, max_seq_len=16, eos_token=-1))
+        prompt = mixed_prompts(cfg)[0][:5]
+        req = engine.submit(prompt, max_new_tokens=64)
+        engine.run_until_drained()
+        assert req.done and req.truncated
+        # prompt clamped to 1 token (limit = max(1, 16 - 64 - 1)), then
+        # generation capped to the row's remaining capacity
+        assert len(req.output) == 15
+        slot_positions = [s.pos for s in engine.scheduler.slots]
+        assert max(slot_positions) <= 16
+
+    def test_background_thread_streams_and_futures(self):
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1)).start()
+        try:
+            streamed = []
+            lock = threading.Lock()
+
+            def on_token(req, tok):
+                with lock:
+                    streamed.append(tok)
+
+            prompts = mixed_prompts(cfg)
+            h1 = engine.submit(prompts[0], 5, on_token=on_token)
+            h2 = engine.submit(prompts[1], 4)
+            assert h1.result(timeout=60).done
+            assert h2.result(timeout=60).done
+            assert streamed == h1.output
+            assert h1.output == sequential_decode(model, params,
+                                                  prompts[0], 5)
+        finally:
+            engine.stop()
+        # a second start() resumes service on the same pool
+        engine.start()
+        try:
+            h3 = engine.submit(mixed_prompts(cfg)[2], 3)
+            assert h3.result(timeout=60).done and len(h3.output) == 3
+        finally:
+            engine.stop()
+
+    def test_engine_failure_does_not_strand_clients(self):
+        """An error inside the serve loop must surface on result(), not
+        silently kill the daemon thread while clients block forever."""
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1)).start()
+        try:
+            bad = engine.submit(np.zeros((3, 3), np.int32), 4)  # wrong rank
+            with pytest.raises(RuntimeError):
+                bad.result(timeout=60)
+            assert bad.error is not None
+            # the dead engine rejects instead of enqueueing into a void
+            with pytest.raises(RuntimeError):
+                engine.submit(np.zeros((3,), np.int32), 2)
+        finally:
+            engine.stop()
+
+    def test_sync_mode_failure_wakes_waiters_too(self):
+        """The closed-loop driver shares the background loop's guarantee:
+        an engine error marks every live request failed before raising."""
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1))
+        bad = engine.submit(np.zeros((3, 3), np.int32), 4)  # wrong rank
+        with pytest.raises(Exception):
+            engine.step()
+        assert bad.error is not None and bad._done_event.is_set()
+        with pytest.raises(RuntimeError):
+            engine.submit(np.zeros((3,), np.int32), 2)
+
+    def test_zero_max_new_tokens_rejected(self):
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=1, max_seq_len=64))
+        with pytest.raises(ValueError):
+            engine.submit(np.zeros((3,), np.int32), max_new_tokens=0)
+
+    def test_serve_phases_fold_into_profile_shard(self, tmp_path):
+        cfg, model, params = build("tinyllama_1_1b")
+        run_dir = str(tmp_path / "serve-run")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1,
+            profile_dir=run_dir))
+        for p in mixed_prompts(cfg)[:3]:
+            engine.submit(p, 4)
+        done = engine.run_until_drained()
+        assert len(done) == 3
+        for r in done:
+            assert r.queue_wait_s is not None and r.queue_wait_s >= 0
+            assert r.ttft_s is not None and r.ttft_s > 0
+            assert r.e2e_s is not None and r.e2e_s >= r.ttft_s
+        from repro.profile import ProfileStore, RunRegistry
+        folded = ProfileStore(run_dir).reduce().to_folded()
+        apis = {k[2] for k in folded.edges}
+        for phase in ("queue_wait", "ttft", "decode_token", "e2e",
+                      "prefill_request", "decode_tick"):
+            assert phase in apis, f"missing serve phase {phase}"
+        per_req = {k[2]: e for k, e in folded.edges.items()
+                   if k[1] == "serve"}
+        assert per_req["ttft"].count >= 3
+        assert per_req["e2e"].count >= 3
+        assert per_req["decode_token"].count \
+            >= sum(len(r.output) for r in done) - 3  # first tokens at admit
+        # the run is discoverable the way fleets query serving replicas
+        runs = RunRegistry(str(tmp_path)).query(kind="serve")
+        assert len(runs) == 1 and runs[0].config == cfg.name
+
+
+class TestWorkload:
+    def test_run_workload_closed_and_stats(self):
+        from repro.serving import latency_stats, run_workload
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1))
+        import time
+        t0 = time.monotonic()
+        done = run_workload(engine, mixed_prompts(cfg)[:3], 4, mode="closed")
+        s = latency_stats(done, time.monotonic() - t0)
+        assert s["requests"] == 3 and s["tokens"] == 12
+        assert s["throughput_tok_s"] > 0
+        assert 0 <= s["queue_wait_mean_s"] <= s["ttft_mean_s"]
+        assert s["decode_s_per_tok"] > 0 and s["truncated"] == 0
+        with pytest.raises(ValueError):
+            run_workload(engine, [], 4, mode="bogus")
+
+
+class TestScheduler:
+    def mk(self, **kw):
+        scfg = ServeConfig(max_batch=4, max_seq_len=64, **kw)
+        return Scheduler(scfg)
+
+    class Req:
+        def __init__(self, n):
+            self.prompt = np.zeros((n,), np.int32)
+
+    def test_budget_caps_admissions_per_tick(self):
+        sched = self.mk(prefill_chunk=8, prefill_budget_tokens=8)
+        for n in (6, 6, 6):
+            sched.add(self.Req(n))
+        first = sched.schedule()
+        assert len(first) == 1           # 6 + 6 would blow the 8-token budget
+        sched.bind(first[0][0], first[0][1], pos=6, pending=())
+        assert len(sched.schedule()) == 1
+
+    def test_budget_charges_truncated_length(self):
+        """A prompt that will be truncated to fit its cache row must be
+        billed for the tokens actually prefilled, not its raw length."""
+        sched = self.mk(prefill_chunk=512, prefill_budget_tokens=60)
+        class Req:
+            def __init__(self, n, max_new):
+                self.prompt = np.zeros((n,), np.int32)
+                self.max_new_tokens = max_new
+        # raw len 10_000, truncated to 64 - 16 - 1 = 47 tokens
+        assert sched.admit_cost(Req(10_000, 16)) == 47
+        sched.add(Req(10_000, 16))
+        sched.add(Req(8, 4))
+        picked = sched.schedule()
+        assert len(picked) == 2          # 47 + 8 fits the 60-token budget
+
+    def test_head_of_line_long_prompt_never_starves(self):
+        sched = self.mk(prefill_chunk=64, prefill_budget_tokens=8)
+        sched.add(self.Req(40))          # cost 40 > budget 8
+        picked = sched.schedule()
+        assert len(picked) == 1          # admitted anyway (first of the tick)
+
+    def test_fcfs_into_free_slots(self):
+        sched = self.mk(prefill_chunk=8)
+        reqs = [self.Req(4) for _ in range(6)]
+        for r in reqs:
+            sched.add(r)
+        picked = sched.schedule()
+        assert [r for _, r in picked] == reqs[:4]   # pool size caps at 4
+        assert sched.has_waiting()
+
+
+class TestPooledSampler:
+    def test_greedy_and_degenerate_knobs_match_argmax(self):
+        rng = np.random.default_rng(0)
+        logits = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+        am = np.asarray(jnp.argmax(logits, -1))
+        B = 4
+        vec = lambda x, dt=np.float32: jnp.asarray(np.full((B,), x, dt))
+        seed = jnp.zeros((B,), jnp.uint32)
+        step = jnp.arange(B, dtype=jnp.int32)
+        greedy = sample_tokens(logits, vec(0.0), vec(0, np.int32),
+                               vec(1.0), seed, step)
+        topk1 = sample_tokens(logits, vec(1.3), vec(1, np.int32),
+                              vec(1.0), seed, step)
+        topp0 = sample_tokens(logits, vec(1.3), vec(0, np.int32),
+                              vec(1e-9), seed, step)
+        np.testing.assert_array_equal(np.asarray(greedy), am)
+        np.testing.assert_array_equal(np.asarray(topk1), am)
+        np.testing.assert_array_equal(np.asarray(topp0), am)
+
+    def test_seed_and_step_determine_tokens(self):
+        rng = np.random.default_rng(1)
+        logits = jnp.asarray(rng.standard_normal((3, 64)), jnp.float32)
+        B = 3
+        vec = lambda x, dt=np.float32: jnp.asarray(np.full((B,), x, dt))
+        args = (logits, vec(0.9), vec(8, np.int32), vec(0.95))
+        step = jnp.asarray([4, 4, 9], jnp.int32)
+        a = sample_tokens(*args, jnp.asarray([1, 1, 1], jnp.uint32), step)
+        b = sample_tokens(*args, jnp.asarray([1, 1, 1], jnp.uint32), step)
+        c = sample_tokens(*args, jnp.asarray([1, 2, 1], jnp.uint32), step)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # row 0 and 1 share logits distribution shapes but differ by seed
+        assert not np.array_equal(np.asarray(a), np.asarray(c)) \
+            or np.asarray(a)[1] == np.asarray(c)[1]
+
+    def test_top_k_restricts_support(self):
+        rng = np.random.default_rng(2)
+        logits = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+        top4 = set(np.asarray(jnp.argsort(logits[0])[-4:]))
+        for s in range(24):
+            tok = sample_tokens(logits, jnp.asarray([1.5], jnp.float32),
+                                jnp.asarray([4], jnp.int32),
+                                jnp.asarray([1.0], jnp.float32),
+                                jnp.asarray([s], jnp.uint32),
+                                jnp.asarray([0], jnp.int32))
+            assert int(tok[0]) in top4
