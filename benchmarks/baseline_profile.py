@@ -18,6 +18,13 @@ when calibrating thresholds (ROADMAP: thresholds logged, not yet gating).
 Regenerate the checked-in baseline after a DELIBERATE profile-shape change:
 
     python benchmarks/baseline_profile.py -o tests/data/ci_baseline.xfa.npz
+
+`--thresholds-out` additionally fits per-edge noise bands across `--runs`
+seeds of the same workload (seed, seed+1, ...) via repro.analysis.calibrate
+— the measured-variance replacement for the hand-picked `--threshold`:
+
+    python benchmarks/baseline_profile.py -o /dev/null \
+        --runs 8 --thresholds-out tests/data/ci_thresholds.json
 """
 
 from __future__ import annotations
@@ -89,7 +96,26 @@ def main() -> int:
                     help="multiply all durations (inject a regression)")
     ap.add_argument("--extra-edge", action="store_true",
                     help="add a new hot edge (exercise flag_added)")
+    ap.add_argument("--thresholds-out", default="",
+                    help="also fit per-edge noise bands across --runs "
+                         "seeds and write them as a thresholds json")
+    ap.add_argument("--runs", type=int, default=8,
+                    help="seeds sampled for --thresholds-out calibration")
     args = ap.parse_args()
+
+    if args.thresholds_out:
+        from repro.analysis import calibrate_runs
+        samples = [build_profile(args.steps, args.seed + i, args.scale)
+                   for i in range(args.runs)]
+        thr = calibrate_runs(
+            samples,
+            meta={"workload": "benchmarks/baseline_profile.py",
+                  "steps": args.steps, "seeds": [args.seed + i
+                                                 for i in range(args.runs)],
+                  "scale": args.scale})
+        thr.save(args.thresholds_out)
+        print(f"wrote {args.thresholds_out}: {len(thr)} edge bands "
+              f"from {args.runs} seeded runs")
 
     t = build_profile(args.steps, args.seed, args.scale)
     if args.extra_edge:

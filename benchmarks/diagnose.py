@@ -1,0 +1,119 @@
+"""Diagnosis subsystem cost: graph construction + detector sweep +
+calibration on a fleet-sized profile.
+
+Diagnosis runs offline, but "offline" still has a budget: an operator
+pointing `diagnose` at a registry of nightly runs should get findings in
+seconds, and the ScALPEL argument (diagnostics must stay lightweight)
+deserves a number.  This benchmark builds a 10k-edge profile spread over
+8 shards with 6-deep rings — the shape a day of fleet runs leaves behind
+— and times each layer:
+
+  diagnose.graph_ms        FlowGraph.from_columns on the merged profile
+  diagnose.shards_ms       per-shard graph projection (8 subgraphs)
+  diagnose.detect_ms       full built-in detector sweep over the context
+  diagnose.calibrate_ms    ring-mode noise-band fit over every interval
+  diagnose.e2e_ms          store -> context -> findings, end to end
+  diagnose.findings        finding count (sanity: the injected pathologies
+                           are found, a healthy fleet stays quiet)
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.analysis import (FlowGraph, build_context, builtin_detectors,
+                            calibrate_ring, run_detectors)
+from repro.core.folding import EdgeStats, FoldedTable
+from repro.profile import ProfileStore, build_timelines
+
+N_EDGES = 10_000
+N_SHARDS = 8
+RING_LEN = 6
+
+
+def _fleet_table(seed: int, scale: float = 1.0,
+                 n_edges: int = N_EDGES) -> FoldedTable:
+    rng = np.random.default_rng(seed)
+    durs = rng.integers(1_000, 1_000_000, size=n_edges)
+    counts = rng.integers(1, 100, size=n_edges)
+    edges = {}
+    for j in range(n_edges):
+        key = (f"comp{j % 37}", f"lib{j % 101}", f"api{j}")
+        d = int(durs[j] * scale)
+        edges[key] = EdgeStats(
+            count=int(counts[j]), total_ns=d * int(counts[j]),
+            child_ns=d // 2, min_ns=d // 2, max_ns=d * 2,
+            kind=1 if j % 29 == 0 else 0)
+    # one injected pathology so the sweep has something to find: a
+    # wait-dominated component
+    edges[("app", "hotspot", "sync")] = EdgeStats(
+        count=100, total_ns=900_000_000, min_ns=1, max_ns=9_000_000, kind=1)
+    edges[("app", "hotspot", "work")] = EdgeStats(
+        count=100, total_ns=100_000_000, min_ns=1, max_ns=2_000_000)
+    return FoldedTable(edges)
+
+
+def _build_run(root: str) -> str:
+    store = ProfileStore(root)
+    for s in range(N_SHARDS):
+        for i in range(1, RING_LEN + 1):
+            # cumulative folds: interval activity is one _fleet_table
+            t = FoldedTable.merge_all([_fleet_table(s, scale=1.0)
+                                       for _ in range(i)])
+            store.write_shard(t, label=f"rank-{s}")
+    return root
+
+
+def _best_of(fn, repeats: int = 3):
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3, out
+
+
+def run():
+    with tempfile.TemporaryDirectory() as d:
+        run_dir = _build_run(os.path.join(d, "run"))
+        store = ProfileStore(run_dir)
+        cols = store.reduce().columns
+
+        graph_ms, graph = _best_of(lambda: FlowGraph.from_columns(cols))
+        from repro.analysis import shard_graphs
+        shards_ms, shards = _best_of(lambda: shard_graphs(run_dir))
+        ctx = build_context(run_dir)
+        dets = builtin_detectors()
+        detect_ms, findings = _best_of(lambda: run_detectors(ctx, dets))
+        tls = build_timelines(run_dir)
+        calibrate_ms, thr = _best_of(lambda: calibrate_ring(tls))
+
+        def e2e():
+            from repro.analysis import diagnose
+            return diagnose(run_dir)
+        e2e_ms, diag = _best_of(e2e, repeats=1)
+
+        assert len(graph) == len(cols)
+        assert len(shards) == N_SHARDS
+        assert any(f.detector == "wait-dominance" for f in findings), \
+            "injected pathology not found"
+        assert len(thr) >= N_EDGES
+
+    note = f"{N_SHARDS} shards x {N_EDGES} edges x {RING_LEN} ring"
+    yield "diagnose.graph_ms", graph_ms, note
+    yield "diagnose.shards_ms", shards_ms, note
+    yield "diagnose.detect_ms", detect_ms, f"{len(dets)} detectors"
+    yield "diagnose.calibrate_ms", calibrate_ms, \
+        f"{len(thr)} bands from {RING_LEN - 1} intervals"
+    yield "diagnose.e2e_ms", e2e_ms, "store -> findings"
+    yield "diagnose.findings", float(len(diag.findings)), "count"
+
+
+if __name__ == "__main__":
+    print("name,value,note")
+    for name, val, note in run():
+        print(f"{name},{val:.3f},{note}")

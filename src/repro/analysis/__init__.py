@@ -1,0 +1,38 @@
+"""repro.analysis — automated cross-flow diagnosis over XFA profiles.
+
+Everything repro.profile collects (shadow-table folds -> columnar shards
+-> snapshot rings -> run registry) becomes *interpretable* here: a typed
+Cross Flow Graph, a set of pathology detectors with structured findings,
+noise-band calibration for variance-aware thresholds, and the
+orchestration behind `python -m repro.profile diagnose`.
+
+  graph.py      FlowGraph (typed nodes/edges from EdgeColumns) + per-shard
+                projections (one comparable subgraph per rank/replica)
+  detectors.py  Detector protocol, Finding, and the 6 built-in detectors
+  calibrate.py  per-edge noise bands (mean/std/p95) from baseline runs or
+                a ring, serialized as a thresholds JSON
+  diagnose.py   run selection -> DiagnosisContext -> findings -> report
+"""
+
+from .graph import (FlowEdge, FlowGraph, FlowNode, edge_label, run_graph,
+                    shard_graphs)
+from .calibrate import (CALIBRATE_FIELDS, EdgeBand, Thresholds,
+                        calibrate_ring, calibrate_runs)
+from .detectors import (SEVERITIES, CallAmplification, Detector,
+                        DiagnosisContext, DriftRegression, Finding,
+                        HotEdgeConcentration, QueueSaturation,
+                        RankImbalance, WaitDominance, builtin_detectors,
+                        run_detectors, severity_rank)
+from .diagnose import (Diagnosis, build_context, diagnose, resolve_run_dir)
+
+__all__ = [
+    "FlowEdge", "FlowGraph", "FlowNode", "edge_label", "run_graph",
+    "shard_graphs",
+    "CALIBRATE_FIELDS", "EdgeBand", "Thresholds", "calibrate_ring",
+    "calibrate_runs",
+    "SEVERITIES", "CallAmplification", "Detector", "DiagnosisContext",
+    "DriftRegression", "Finding", "HotEdgeConcentration", "QueueSaturation",
+    "RankImbalance", "WaitDominance", "builtin_detectors", "run_detectors",
+    "severity_rank",
+    "Diagnosis", "build_context", "diagnose", "resolve_run_dir",
+]

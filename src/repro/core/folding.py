@@ -295,6 +295,46 @@ class EdgeColumns:
         return EdgeColumns(keys, count, total_ns, child_ns, min_ns, max_ns,
                            kind, list(mnames), mvals, mmask, group=table.group)
 
+    # -- graph projections ---------------------------------------------------
+    @property
+    def self_ns(self) -> np.ndarray:
+        """Derived per-edge self time column (total - child)."""
+        return self.total_ns - self.child_ns
+
+    def select(self, rows) -> "EdgeColumns":
+        """Row-subset projection (bool mask or index array) keeping every
+        column — including the metric matrix — aligned: the vectorized
+        way to slice a profile (one component's inbound edges, one kind,
+        one caller, ...) without re-boxing EdgeStats."""
+        rows = np.asarray(rows)
+        if rows.dtype == bool:
+            rows = np.nonzero(rows)[0]
+        else:
+            # an empty python list arrives float64; indexing needs ints
+            rows = rows.astype(np.int64)
+        keys = [self.keys[int(i)] for i in rows]
+        m = self.metric_values[:, rows] if len(self.metric_names) \
+            else self.metric_values[:, :0]
+        mm = self.metric_mask[:, rows] if len(self.metric_names) \
+            else self.metric_mask[:, :0]
+        return EdgeColumns(keys, self.count[rows], self.total_ns[rows],
+                           self.child_ns[rows], self.min_ns[rows],
+                           self.max_ns[rows], self.kind[rows],
+                           list(self.metric_names), m, mm, group=self.group)
+
+    def group_rows(self, by: str = "component") -> Dict[str, np.ndarray]:
+        """Edge-row indices grouped by one key part: 'caller' (0),
+        'component' (1) or 'api' (2).  One pass over the keys; the returned
+        index arrays drive whole-column numpy reductions (np.sum over a
+        fancy-indexed column), which is how FlowGraph aggregates nodes
+        without boxing per-edge EdgeStats."""
+        part = {"caller": 0, "component": 1, "api": 2}[by]
+        groups: Dict[str, List[int]] = {}
+        for j, k in enumerate(self.keys):
+            groups.setdefault(k[part], []).append(j)
+        return {name: np.asarray(rows, dtype=np.int64)
+                for name, rows in groups.items()}
+
     def to_folded(self) -> "FoldedTable":
         n = len(self.keys)
         metrics: List[Dict[str, float]] = [{} for _ in range(n)]

@@ -45,6 +45,16 @@ APP_COMPONENT = "app"
 SlotKey = Tuple[str, str, str]  # (caller_component, callee_component, api)
 
 
+def edge_label(key: SlotKey) -> str:
+    """Canonical printable form of an edge key, 'caller -> comp.api'.
+
+    THE one definition: timeline JSON keys, rendered tables, and the
+    thresholds-JSON band index all use it — a divergence would silently
+    orphan every saved calibration, so nobody re-spells this format."""
+    caller, comp, api = key
+    return f"{caller} -> {comp}.{api}"
+
+
 @dataclass(frozen=True)
 class SlotInfo:
     """Static metadata of one shadow entry (the paper's per-API struct)."""

@@ -188,6 +188,24 @@ class Tracer:
         for _ in range(n):
             t.record(slot.slot, int(dur_ns), 0)
 
+    def record_gauge(self, component: str, api: str, value: float,
+                     kind: int = KIND_CALL) -> None:
+        """Fold a dimensionless SAMPLE through the duration columns: count
+        accumulates #observations, total_ns the sum, min/max the extremes
+        — so mean_ns of the edge is the mean gauge value and the timeline
+        view differences per-interval means for free.  Used for state the
+        bracket model can't time (serve queue depth at each tick); the
+        diagnosis layer reads it as saturation evidence."""
+        if not self.enabled:
+            return
+        caller = self.current_component()
+        slot = self.tables.registry.resolve(caller, component, api, kind)
+        t = self.tables.table()
+        if not self.timing:
+            t.record_count(slot.slot)
+            return
+        t.record(slot.slot, int(value), 0)
+
     # -- lifecycle ----------------------------------------------------------
     def reset(self) -> None:
         self.tables = ShadowTableSet()
@@ -206,6 +224,7 @@ wrap = TRACER.wrap
 scope = TRACER.scope
 count_event = TRACER.count_event
 record_duration = TRACER.record_duration
+record_gauge = TRACER.record_gauge
 current_component = TRACER.current_component
 set_thread_group = TRACER.set_thread_group
 

@@ -20,8 +20,14 @@ queryable ("all runs of arch X on mesh Y").
                 two runs' rings by sequence index for per-edge
                 delta-of-deltas (`timeline RUN_A --diff RUN_B`)
   diff.py       run-over-run comparison with per-edge regression flagging
+                (global threshold, or calibrated per-edge noise bands)
   __main__.py   CLI: python -m repro.profile
-                {report,merge,diff,query,gc,timeline}
+                {report,merge,diff,query,gc,timeline,calibrate,diagnose}
+
+Interpretation of all of this — the typed Cross Flow Graph, the detector
+suite behind `diagnose`, and the noise-band calibration behind
+`calibrate`/`diff --thresholds` — lives one package over, in
+repro.analysis.
 
 The merge itself is the vectorized column algebra in core/folding.py
 (merge_columns): registry re-interning + whole-column numpy scatter-adds,

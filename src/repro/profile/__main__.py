@@ -1,20 +1,28 @@
 """CLI for the profile store.
 
-    python -m repro.profile report   RUN_DIR_OR_SNAPSHOT... [--component app]
-    python -m repro.profile merge    SHARD_OR_DIR... -o merged.xfa.npz
-    python -m repro.profile diff     BASELINE CANDIDATE [--threshold 0.25]
-    python -m repro.profile query    ROOT [--config C] [--mesh 4x2] [--label L]
-    python -m repro.profile gc       ROOT... [--keep-last N] [--max-age-s S]
-    python -m repro.profile timeline RUN_DIR [--field total_ns] [--shard S]
+    python -m repro.profile report    RUN_DIR_OR_SNAPSHOT... [--component app]
+    python -m repro.profile merge     SHARD_OR_DIR... -o merged.xfa.npz
+    python -m repro.profile diff      BASELINE CANDIDATE [--threshold 0.25]
+                                      [--thresholds bands.json]
+    python -m repro.profile query     ROOT [--config C] [--mesh 4x2]
+    python -m repro.profile gc        ROOT... [--keep-last N] [--dry-run]
+    python -m repro.profile timeline  RUN_DIR [--field total_ns] [--shard S]
+    python -m repro.profile calibrate INPUT... -o bands.json [--mode ring]
+    python -m repro.profile diagnose  ROOT [--run GLOB] [--baseline B]
+                                      [--thresholds T] [--fail-on warn|crit]
 
 `report` reduces every given shard/dir into one profile and renders the
 paper's component/API views + flow matrix.  `merge` persists that reduction.
 `diff` compares two profiles and exits 1 when any per-edge regression
-exceeds the threshold — wire it into CI as a perf gate.  `query` filters
-the run registry by metadata predicates (exit 1 when nothing matches, so
-it composes in shell pipelines).  `gc` applies a retention policy offline;
-`timeline` renders per-edge count/total_ns/self_ns trajectories across one
-run's sequence-numbered snapshots.
+exceeds its threshold (global, or per-edge calibrated bands via
+`--thresholds`) — wire it into CI as a perf gate.  `query` filters the
+run registry by metadata predicates (exit 1 when nothing matches, so it
+composes in shell pipelines).  `gc` applies a retention policy offline;
+`timeline` renders per-edge count/total_ns/self_ns trajectories across
+one run's sequence-numbered snapshots.  `calibrate` fits per-edge noise
+bands from baseline profiles (or ring intervals) into a thresholds JSON;
+`diagnose` runs the cross-flow detectors (repro.analysis) over a run and
+exits 1 when findings reach `--fail-on` severity.
 """
 
 from __future__ import annotations
@@ -76,11 +84,16 @@ def _cmd_merge(args: argparse.Namespace) -> int:
 def _cmd_diff(args: argparse.Namespace) -> int:
     base = load_profile(args.baseline).to_folded()
     cand = load_profile(args.candidate).to_folded()
+    bands = None
+    if args.thresholds:
+        from ..analysis import Thresholds
+        bands = Thresholds.load(args.thresholds)
     d = diff_profiles(base, cand, threshold=args.threshold,
                       fields=tuple(args.fields.split(",")),
                       min_count=args.min_count,
                       min_total_ns=args.min_total_ns,
-                      flag_added=not args.no_flag_added)
+                      flag_added=not args.no_flag_added,
+                      thresholds=bands)
     if args.json:
         print(json.dumps(d.to_json(), indent=1))
     else:
@@ -114,25 +127,46 @@ def _cmd_query(args: argparse.Namespace) -> int:
 
 
 def _cmd_gc(args: argparse.Namespace) -> int:
+    import os
     policy = RetentionPolicy(keep_last=args.keep_last,
                              max_age_s=args.max_age_s,
                              max_bytes=args.max_bytes)
     report = {}
     for root in args.roots:
         for run_dir in find_run_dirs(root):
-            victims = policy.enforce(run_dir, dry_run=args.dry_run)
-            if victims:
-                report[run_dir] = victims
+            # size up the victims BEFORE enforcement so both the dry-run
+            # preview and the real pass report the bytes at stake
+            victims = policy.doomed(run_dir)
+            sized = []
+            for v in victims:
+                try:
+                    sized.append({"path": v, "bytes": os.path.getsize(v)})
+                except OSError:        # lost a race with another writer
+                    sized.append({"path": v, "bytes": 0})
+            if not args.dry_run:
+                # delete exactly the sized set: re-running the policy scan
+                # could doom additional files (age crossing the bound,
+                # concurrent ring growth) that the report would then miss
+                for e in sized:
+                    try:
+                        os.unlink(e["path"])
+                    except FileNotFoundError:
+                        pass
+            if sized:
+                report[run_dir] = sized
     verb = "would delete" if args.dry_run else "deleted"
+    total = sum(e["bytes"] for v in report.values() for e in v)
     if args.json:
-        print(json.dumps({"dry_run": args.dry_run, "deleted": report},
-                         indent=1))
+        print(json.dumps({"dry_run": args.dry_run, "deleted": report,
+                          "bytes": total}, indent=1))
     else:
         n = sum(len(v) for v in report.values())
-        print(f"gc: {verb} {n} snapshot(s) across {len(report)} run dir(s)")
+        print(f"gc: {verb} {n} snapshot(s) ({total/1024:.1f} KiB) "
+              f"across {len(report)} run dir(s)")
+        tag = "DRY" if args.dry_run else "DEL"
         for run_dir, victims in sorted(report.items()):
-            for v in victims:
-                print(f"  {verb[:3].upper()}  {v}")
+            for e in victims:
+                print(f"  {tag}  {e['path']} ({e['bytes']} B)")
     return 0
 
 
@@ -179,6 +213,51 @@ def _cmd_timeline(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_calibrate(args: argparse.Namespace) -> int:
+    from ..analysis import calibrate_ring, calibrate_runs
+    fields = tuple(args.fields.split(","))
+    if args.mode == "ring":
+        tls = []
+        for root in args.inputs:
+            tls.extend(build_timelines(root, min_len=2))
+        if not tls:
+            print("no input holds a ring with >= 2 snapshots",
+                  file=sys.stderr)
+            return 1
+        thr = calibrate_ring(tls, fields=fields, k_sigma=args.k_sigma,
+                             floor=args.floor,
+                             meta={"inputs": list(map(str, args.inputs))})
+    else:
+        tables = [load_profile(p).to_folded() for p in args.inputs]
+        thr = calibrate_runs(tables, fields=fields, k_sigma=args.k_sigma,
+                             floor=args.floor,
+                             meta={"inputs": list(map(str, args.inputs))})
+    thr.save(args.output)
+    print(f"calibrated {len(thr)} edge band(s) from {len(args.inputs)} "
+          f"input(s) ({thr.meta['mode']} mode) -> {args.output}")
+    return 0
+
+
+def _cmd_diagnose(args: argparse.Namespace) -> int:
+    from ..analysis import diagnose
+    try:
+        diag = diagnose(args.root, run=args.run, baseline=args.baseline,
+                        thresholds_path=args.thresholds)
+    except (FileNotFoundError, LookupError, ValueError) as e:
+        # bad inputs (missing run, ambiguous --run, corrupt/unsupported
+        # --thresholds json) are usage errors: exit 2, never 1 — exit 1
+        # is reserved for real findings under --fail-on
+        print(f"diagnose: {e}", file=sys.stderr)
+        return 2
+    if args.json:
+        print(json.dumps({**diag.to_json(), "fail_on": args.fail_on,
+                          "failed": diag.should_fail(args.fail_on)},
+                         indent=1))
+    else:
+        print(diag.render(top=args.top))
+    return 1 if diag.should_fail(args.fail_on) else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.profile",
                                  description=__doc__)
@@ -209,6 +288,10 @@ def main(argv=None) -> int:
     dif.add_argument("--min-total-ns", type=int, default=0)
     dif.add_argument("--no-flag-added", action="store_true",
                      help="do not fail the gate on significant NEW edges")
+    dif.add_argument("--thresholds", metavar="BANDS_JSON",
+                     help="per-edge calibrated noise bands (from the "
+                          "`calibrate` subcommand); --threshold stays the "
+                          "fallback for uncalibrated edges")
     dif.add_argument("--json", action="store_true")
     dif.set_defaults(fn=_cmd_diff)
 
@@ -257,6 +340,44 @@ def main(argv=None) -> int:
                      help="skip shards with fewer ring entries")
     tml.add_argument("--json", action="store_true")
     tml.set_defaults(fn=_cmd_timeline)
+
+    cal = sub.add_parser("calibrate",
+                         help="fit per-edge noise bands -> thresholds json")
+    cal.add_argument("inputs", nargs="+",
+                     help="runs mode: one profile (snapshot/run dir) per "
+                          "sample; ring mode: run dirs whose ring "
+                          "intervals are the samples")
+    cal.add_argument("-o", "--output", required=True)
+    cal.add_argument("--mode", choices=("runs", "ring"), default="runs")
+    cal.add_argument("--fields", default="count,total_ns,self_ns,mean_ns",
+                     help=f"comma list from {DIFF_FIELDS}")
+    cal.add_argument("--k-sigma", type=float, default=3.0,
+                     help="band width: allowed growth = k*std/mean")
+    cal.add_argument("--floor", type=float, default=0.05,
+                     help="minimum relative threshold even for "
+                          "zero-variance edges")
+    cal.set_defaults(fn=_cmd_calibrate)
+
+    dia = sub.add_parser("diagnose",
+                         help="run cross-flow detectors over one run")
+    dia.add_argument("root", help="a run dir, or a registry root "
+                                  "(then select with --run)")
+    dia.add_argument("--run", help="run-id/label/config glob under ROOT "
+                                   "(must match exactly one run)")
+    dia.add_argument("--baseline", metavar="RUN",
+                     help="baseline run dir or registry glob: enables the "
+                          "cross-run drift-regression detector")
+    dia.add_argument("--thresholds", metavar="BANDS_JSON",
+                     help="calibrated noise bands; detectors use them as "
+                          "per-edge noise floors")
+    dia.add_argument("--fail-on", choices=("none", "warn", "crit"),
+                     default="none",
+                     help="exit 1 when any finding is at/above this "
+                          "severity (CI gate); default: always exit 0")
+    dia.add_argument("--top", type=int, default=50,
+                     help="max findings rendered in text mode")
+    dia.add_argument("--json", action="store_true")
+    dia.set_defaults(fn=_cmd_diagnose)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -64,6 +64,9 @@ class ProfileDiff:
     #: can shift a hot edge's time into an added key — without this, such a
     #: slowdown would slip past the exit-code gate)
     flag_added: bool = True
+    #: True when per-edge calibrated noise bands decided the flags (the
+    #: global `threshold` then only covers uncalibrated edges)
+    calibrated: bool = False
 
     @property
     def has_regressions(self) -> bool:
@@ -71,7 +74,9 @@ class ProfileDiff:
                                           and bool(self.added))
 
     def render(self, max_rows: int = 30) -> str:
-        lines = [f"profile diff (threshold {self.threshold:.0%} on "
+        how = f"calibrated bands, fallback {self.threshold:.0%}" \
+            if self.calibrated else f"threshold {self.threshold:.0%}"
+        lines = [f"profile diff ({how} on "
                  f"{'/'.join(self.fields)}): "
                  f"{len(self.regressions)} regressed, "
                  f"{len(self.improvements)} improved, "
@@ -94,6 +99,7 @@ class ProfileDiff:
     def to_json(self) -> dict:
         return {
             "threshold": self.threshold,
+            "calibrated": self.calibrated,
             "fields": list(self.fields),
             "unchanged": self.unchanged,
             "regressions": [
@@ -113,12 +119,18 @@ def diff_profiles(base: FoldedTable, cand: FoldedTable,
                   fields: Sequence[str] = ("total_ns", "self_ns", "count"),
                   min_count: int = 1,
                   min_total_ns: int = 0,
-                  flag_added: bool = True) -> ProfileDiff:
+                  flag_added: bool = True,
+                  thresholds=None) -> ProfileDiff:
     """Per-edge comparison; an edge regresses when any requested field grew
-    by more than `threshold` relative to baseline.  Edges below `min_count`
-    / `min_total_ns` in BOTH profiles are ignored (noise floor).  With
-    `flag_added` (default), significant new edges also fail the gate —
-    raise `min_total_ns` to tolerate small new edges."""
+    by more than its threshold relative to baseline.  Edges below
+    `min_count` / `min_total_ns` in BOTH profiles are ignored (noise
+    floor).  With `flag_added` (default), significant new edges also fail
+    the gate — raise `min_total_ns` to tolerate small new edges.
+
+    `thresholds` (repro.analysis.Thresholds, from `calibrate`) switches
+    the gate to MEASURED variance: each calibrated edge tolerates
+    k_sigma standard deviations of its own band instead of the global
+    `threshold`, which stays the fallback for never-calibrated edges."""
     for fld in fields:
         if fld not in DIFF_FIELDS:
             raise ValueError(f"unknown diff field {fld!r}; "
@@ -145,20 +157,23 @@ def diff_profiles(base: FoldedTable, cand: FoldedTable,
             removed.append(EdgeDelta(key, b, None))
             continue
         d = EdgeDelta(key, b, c)
-        worst = 0.0
+        improved = False
         for fld in fields:
+            thr = threshold if thresholds is None \
+                else thresholds.rel_threshold(key, fld, threshold)
             bv, cv = _value(b, fld), _value(c, fld)
             if bv == 0.0:
                 rel = float("inf") if cv > 0 else 0.0
             else:
                 rel = (cv - bv) / bv
             d.deltas[fld] = (bv, cv, rel)
-            worst = min(worst, rel)
-            if rel > threshold:
+            if rel > thr:
                 d.flagged.append(fld)
+            elif rel < -thr:
+                improved = True
         if d.flagged:
             regressions.append(d)
-        elif worst < -threshold:
+        elif improved:
             improvements.append(d)
         else:
             unchanged += 1
@@ -167,4 +182,5 @@ def diff_profiles(base: FoldedTable, cand: FoldedTable,
     return ProfileDiff(threshold=threshold, fields=tuple(fields),
                        regressions=regressions, improvements=improvements,
                        added=added, removed=removed, unchanged=unchanged,
-                       flag_added=flag_added)
+                       flag_added=flag_added,
+                       calibrated=thresholds is not None)

@@ -265,6 +265,28 @@ class RunRegistry:
         mesh, label, kind, since, where)."""
         return [m for m in self.runs() if m.matches(**predicates)]
 
+    def find(self, pattern: Optional[str] = None) -> str:
+        """Resolve ONE run dir by a run-id / label / config fnmatch glob
+        (`diagnose --run`, `--baseline`).  No pattern picks the sole
+        registered run; zero or several matches raise LookupError listing
+        the candidates — selection must be explicit, never first-match."""
+        runs = self.runs()
+        if pattern:
+            runs = [m for m in runs
+                    if fnmatch.fnmatchcase(m.run_id, pattern)
+                    or fnmatch.fnmatchcase(m.label, pattern)
+                    or fnmatch.fnmatchcase(m.config, pattern)]
+        what = f"pattern {pattern!r}" if pattern else "an implicit run"
+        if not runs:
+            raise LookupError(f"no registered run under {self.root!r} "
+                              f"matches {what}")
+        if len(runs) > 1:
+            ids = ", ".join(m.run_id for m in runs)
+            raise LookupError(f"{what} is ambiguous under {self.root!r}: "
+                              f"matches [{ids}] — narrow it (--run takes "
+                              f"run-id/label/config globs)")
+        return runs[0].run_dir
+
 
 def glob_manifests(root: str) -> List[str]:
     import glob as _glob

@@ -21,17 +21,12 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
 from ..core.folding import FoldedTable
-from ..core.shadow import SlotKey
+from ..core.shadow import SlotKey, edge_label as _edge_key_str
 from .snapshot import ProfileSnapshot
 from .store import ProfileStore
 
 #: fields a timeline can plot; self_ns/mean_ns derive per snapshot.
 TIMELINE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns")
-
-
-def _edge_key_str(key: SlotKey) -> str:
-    caller, comp, api = key
-    return f"{caller} -> {comp}.{api}"
 
 
 @dataclass
@@ -89,14 +84,29 @@ class ShardTimeline:
             out.append(meta.get("step", meta.get("ticks", seq)))
         return out
 
+    def kind_of(self, key: SlotKey) -> str:
+        """'call' or 'wait' for `key` (from the newest table holding it)."""
+        from ..core.shadow import KIND_NAMES
+        for t in reversed(self.tables):
+            e = t.edges.get(key)
+            if e is not None:
+                return KIND_NAMES[e.kind]
+        return KIND_NAMES[0]
+
     def to_json(self, fld: str = "total_ns") -> dict:
+        """Machine-readable ring: each edge carries its STRUCTURED key
+        ([caller, component, api]) and kind alongside the rendered label,
+        so calibration and external tooling consume rings without parsing
+        'a -> b.c' strings back apart."""
         return {
             "stem": self.stem,
             "seqs": self.seqs,
             "steps": self.steps(),
             "field": fld,
             "edges": {
-                _edge_key_str(k): {"series": self.series(k, fld),
+                _edge_key_str(k): {"key": list(k),
+                                   "kind": self.kind_of(k),
+                                   "series": self.series(k, fld),
                                    "deltas": self.deltas(k, fld)}
                 for k in self.edges()
             },
@@ -195,10 +205,13 @@ class TimelineDiff:
     def to_json(self, fld: str = "total_ns") -> dict:
         cols = self.columns()
         edges = {}
+        b_keys = set(self.b.edges())
         for k in self.edges():
             da = self.deltas(self.a, k, fld)
             db = self.deltas(self.b, k, fld)
             edges[_edge_key_str(k)] = {
+                "key": list(k),
+                "kind": (self.b if k in b_keys else self.a).kind_of(k),
                 "deltas_a": da,
                 "deltas_b": db,
                 "delta_of_deltas": [y - x for x, y in zip(da, db)],

@@ -175,6 +175,12 @@ class ServingEngine:
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the engine "
                              "always samples at least the first token)")
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1 or prompt.size == 0:
+            # reject per-request: a malformed prompt failing inside
+            # _admit would kill the engine loop and every other client
+            raise ValueError(f"prompt must be a non-empty 1-D token "
+                             f"array, got shape {prompt.shape}")
         if sampling is None:
             sampling = SamplingParams(
                 temperature=self.scfg.temperature, top_k=self.scfg.top_k,
@@ -189,7 +195,7 @@ class ServingEngine:
                 raise RuntimeError("serving engine has failed; no further "
                                    "requests accepted") from self._error
             self._uid += 1
-            req = Request(self._uid, np.asarray(prompt, np.int32),
+            req = Request(self._uid, prompt,
                           max_new_tokens, sampling=sampling,
                           submitted_at=submitted_at, on_token=on_token)
             self.scheduler.add(req)
@@ -363,6 +369,12 @@ class ServingEngine:
         exception propagates to whoever drove the step."""
         with self._lock:
             try:
+                # queue depth at tick start, folded as a gauge: its
+                # per-interval mean across the snapshot ring is the
+                # saturation signal `diagnose` reads (a growing mean says
+                # admission is structurally behind the arrival rate)
+                xfa.record_gauge("serve", "queue_depth",
+                                 len(self.scheduler.waiting))
                 picked = self.scheduler.schedule()
                 for k, (idx, req) in enumerate(picked):
                     try:

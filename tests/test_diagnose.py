@@ -1,0 +1,539 @@
+"""Diagnosis subsystem: every built-in detector fires on a synthetic
+profile built to exhibit exactly its pathology and stays silent on the
+healthy baseline; calibration fits bands both the `diff` gate and the
+detectors consume; `diagnose` runs end-to-end (deterministically) on a
+real trainer run and a real serving run."""
+
+import json
+import os
+
+import pytest
+
+from repro.core.folding import EdgeStats, FoldedTable, fold_event_log
+from repro.core.shadow import KIND_WAIT
+from repro.analysis import (CallAmplification, DiagnosisContext,
+                            DriftRegression, EdgeBand, FlowGraph,
+                            HotEdgeConcentration, QueueSaturation,
+                            RankImbalance, Thresholds, WaitDominance,
+                            build_context, builtin_detectors,
+                            calibrate_ring, calibrate_runs, diagnose,
+                            run_detectors)
+from repro.profile import ProfileStore, build_timelines, register_run
+from repro.profile.diff import diff_profiles
+
+MS = 1_000_000
+
+
+def edge(count, total_ns, *, child_ns=0, kind=0):
+    return EdgeStats(count=count, total_ns=total_ns, child_ns=child_ns,
+                     min_ns=1, max_ns=max(total_ns, 1), kind=kind)
+
+
+#: a profile every detector considers healthy: modest wait share, spread
+#: self time, balanced counts.
+def healthy_table(scale=1):
+    return FoldedTable({
+        ("app", "runtime", "dispatch"): edge(100, 90 * MS * scale,
+                                             child_ns=10 * MS * scale),
+        ("app", "runtime", "sync"): edge(100, 10 * MS * scale,
+                                         kind=KIND_WAIT),
+        ("app", "glibc", "read"): edge(500, 30 * MS * scale),
+        ("app", "glibc", "write"): edge(400, 25 * MS * scale),
+        ("runtime", "alloc", "malloc"): edge(200, 5 * MS * scale),
+    })
+
+
+def ctx_of(table, **kw):
+    return DiagnosisContext(graph=FlowGraph.from_folded(table), **kw)
+
+
+def write_ring(root, cumulative_tables, label="t"):
+    store = ProfileStore(str(root))
+    for i, t in enumerate(cumulative_tables, start=1):
+        store.write_shard(t, label=label, meta={"step": i})
+    return str(root)
+
+
+# ------------------------------------------------------------ detectors ----
+class TestWaitDominance:
+    def test_fires_on_wait_heavy_component(self):
+        t = FoldedTable({
+            ("app", "runtime", "dispatch"): edge(100, 100 * MS),
+            ("app", "runtime", "device_sync"): edge(100, 900 * MS,
+                                                    kind=KIND_WAIT),
+        })
+        [f] = WaitDominance().detect(ctx_of(t))
+        assert f.severity == "crit" and f.subject == "component:runtime"
+        assert f.evidence["wait_share"] == pytest.approx(0.9)
+        assert f.evidence["top_wait_edge"] == \
+            ["app", "runtime", "device_sync"]
+
+    def test_warn_between_bounds(self):
+        t = FoldedTable({
+            ("app", "runtime", "dispatch"): edge(100, 500 * MS),
+            ("app", "runtime", "device_sync"): edge(100, 500 * MS,
+                                                    kind=KIND_WAIT),
+        })
+        [f] = WaitDominance().detect(ctx_of(t))
+        assert f.severity == "warn"
+
+    def test_silent_on_healthy_and_below_floor(self):
+        assert WaitDominance().detect(ctx_of(healthy_table())) == []
+        tiny = FoldedTable({  # 90% wait but under the evidence floor
+            ("app", "x", "w"): edge(1, 900, kind=KIND_WAIT),
+            ("app", "x", "c"): edge(1, 100),
+        })
+        assert WaitDominance().detect(ctx_of(tiny)) == []
+
+
+class TestHotEdgeConcentration:
+    def test_fires_when_one_edge_owns_self_time(self):
+        t = FoldedTable({
+            ("app", "glibc", "read"): edge(1000, 95 * MS),
+            ("app", "glibc", "write"): edge(10, 5 * MS),
+        })
+        [f] = HotEdgeConcentration().detect(ctx_of(t))
+        assert f.severity == "crit"
+        assert f.subject == "edge:app -> glibc.read"
+        assert f.evidence["share"] == pytest.approx(0.95)
+
+    def test_silent_on_spread_or_single_edge(self):
+        assert HotEdgeConcentration().detect(ctx_of(healthy_table())) == []
+        solo = FoldedTable({("app", "glibc", "read"): edge(10, 50 * MS)})
+        assert HotEdgeConcentration().detect(ctx_of(solo)) == []
+
+    def test_wait_edges_do_not_count_as_self_time(self):
+        t = FoldedTable({
+            ("app", "runtime", "sync"): edge(10, 900 * MS, kind=KIND_WAIT),
+            ("app", "runtime", "a"): edge(10, 3 * MS),
+            ("app", "runtime", "b"): edge(10, 3 * MS),
+        })
+        assert HotEdgeConcentration().detect(ctx_of(t)) == []
+
+
+class TestRankImbalance:
+    def _shards(self, *scales):
+        return {f"train-r{i}": FlowGraph.from_folded(healthy_table(s))
+                for i, s in enumerate(scales)}
+
+    def test_fires_on_straggler(self):
+        ctx = ctx_of(healthy_table(), shard_graphs=self._shards(1, 1, 2))
+        [f] = RankImbalance().detect(ctx)
+        assert f.subject == "shard:train-r2"
+        assert f.severity == "warn"
+        assert f.evidence["rel_above_mean"] == pytest.approx(0.5)
+        assert f.evidence["widest_component"] == "runtime"
+
+    def test_crit_on_2x_straggler(self):
+        ctx = ctx_of(healthy_table(), shard_graphs=self._shards(1, 1, 1, 3))
+        [f] = RankImbalance().detect(ctx)
+        assert f.severity == "crit"
+
+    def test_silent_when_balanced_or_single_shard(self):
+        ctx = ctx_of(healthy_table(), shard_graphs=self._shards(1, 1, 1))
+        assert RankImbalance().detect(ctx) == []
+        ctx = ctx_of(healthy_table(), shard_graphs=self._shards(5))
+        assert RankImbalance().detect(ctx) == []
+
+
+class TestQueueSaturation:
+    def _ring(self, tmp_path, means):
+        """Cumulative folds whose queue_wait per-interval mean follows
+        `means` (one admit per interval), plus the queue_depth gauge the
+        engine folds from a DIFFERENT caller (the loop, not the admit
+        bracket)."""
+        tables, total = [], 0
+        for i, m in enumerate(means, start=1):
+            total += int(m)
+            tables.append(FoldedTable({
+                ("serve", "serve", "queue_wait"): edge(i, total,
+                                                       kind=KIND_WAIT),
+                ("app", "serve", "queue_depth"): edge(10 * i, 3 * 10 * i),
+                ("app", "serve", "decode_tick"): edge(10 * i, 10 * i * MS),
+            }))
+        return build_timelines(write_ring(tmp_path, tables))
+
+    def test_fires_on_growing_queue_wait(self, tmp_path):
+        tls = self._ring(tmp_path, [10_000, 25_000, 60_000])
+        ctx = ctx_of(healthy_table(), timelines=tls)
+        [f] = QueueSaturation().detect(ctx)
+        assert f.severity == "crit"          # 6x growth >= crit_ratio 4
+        assert f.subject == "edge:serve -> serve.queue_wait"
+        assert f.evidence["means_ns"] == [10_000.0, 25_000.0, 60_000.0]
+        # the gauge corroborates despite its different caller component
+        assert f.evidence["queue_depth_means"] == [3.0, 3.0, 3.0]
+
+    def test_silent_on_flat_or_shrinking_queue(self, tmp_path):
+        tls = self._ring(tmp_path / "flat", [50_000, 52_000, 49_000])
+        assert QueueSaturation().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
+        tls = self._ring(tmp_path / "down", [80_000, 40_000, 20_000])
+        assert QueueSaturation().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
+
+    def test_non_monotone_spike_does_not_fire(self, tmp_path):
+        # a one-interval spike that recovers is not saturation
+        tls = self._ring(tmp_path, [10_000, 90_000, 11_000, 30_000])
+        assert QueueSaturation().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
+
+    def test_trimmed_ring_head_not_used_as_interval(self, tmp_path):
+        """After retention trims the ring, its first snapshot is a
+        cumulative fold — its run-averaged mean is not an interval sample
+        and must not enter the growth baseline."""
+        from repro.profile import RetentionPolicy
+        store = ProfileStore(str(tmp_path),
+                             retention=RetentionPolicy(keep_last=4))
+        means, total = [10_000, 10_000, 20_000, 40_000, 80_000], 0
+        for i, m in enumerate(means, start=1):
+            total += m
+            store.write_shard(FoldedTable({
+                ("serve", "serve", "queue_wait"): edge(i, total,
+                                                       kind=KIND_WAIT)}),
+                label="t")
+        [tl] = build_timelines(str(tmp_path))
+        assert tl.seqs[0] != 1               # ring really was trimmed
+        [f] = QueueSaturation().detect(
+            ctx_of(healthy_table(), timelines=[tl]))
+        # only the 3 TRUE intervals enter: 20k -> 40k -> 80k (4x crit);
+        # the trimmed head's run-averaged 10k mean is excluded
+        assert f.evidence["means_ns"] == [20_000.0, 40_000.0, 80_000.0]
+        assert f.severity == "crit"
+
+
+class TestDriftRegression:
+    def _run(self, root, deltas):
+        tables, tot = [], 0
+        for d in deltas:
+            tot += d
+            tables.append(FoldedTable({
+                ("app", "runtime", "dispatch"): edge(1, tot)}))
+        return write_ring(root, tables)
+
+    def test_fires_on_trending_drift(self, tmp_path):
+        base = self._run(tmp_path / "a", [MS, MS, MS])
+        cand = self._run(tmp_path / "b",
+                         [MS + MS // 5, MS + MS // 2, 2 * MS])
+        ctx = ctx_of(healthy_table(),
+                     timelines=build_timelines(cand),
+                     baseline_timelines=build_timelines(base))
+        [f] = DriftRegression().detect(ctx)
+        assert f.severity == "warn"
+        assert f.subject == "edge:app -> runtime.dispatch"
+        assert f.evidence["growth"] == pytest.approx(1.7 / 3)
+        assert f.evidence["delta_of_deltas_ns"] == \
+            [MS / 5, MS / 2, float(MS)]
+
+    def test_silent_on_flat_offset_and_identical_runs(self, tmp_path):
+        base = self._run(tmp_path / "a", [MS, MS, MS])
+        offset = self._run(tmp_path / "b", [2 * MS, 2 * MS, 2 * MS])
+        ctx = ctx_of(healthy_table(),
+                     timelines=build_timelines(offset),
+                     baseline_timelines=build_timelines(base))
+        # 2x slower but NOT trending up -> drift detector stays quiet
+        # (run-level diff already catches static regressions)
+        assert DriftRegression().detect(ctx) == []
+        same = self._run(tmp_path / "c", [MS, MS, MS])
+        ctx = ctx_of(healthy_table(),
+                     timelines=build_timelines(same),
+                     baseline_timelines=build_timelines(base))
+        assert DriftRegression().detect(ctx) == []
+
+    def test_thresholds_provide_noise_floor(self, tmp_path):
+        base = self._run(tmp_path / "a", [MS, MS, MS])
+        # rises by 3% per interval: a real trend, but within a calibrated
+        # noise band it must NOT fire
+        cand = self._run(tmp_path / "b",
+                         [MS, MS + 3 * MS // 100, MS + 6 * MS // 100])
+        tls_c = build_timelines(cand)
+        tls_b = build_timelines(base)
+        hot = ctx_of(healthy_table(), timelines=tls_c,
+                     baseline_timelines=tls_b)
+        quiet = ctx_of(healthy_table(), timelines=tls_c,
+                       baseline_timelines=tls_b,
+                       thresholds=Thresholds(bands={
+                           "app -> runtime.dispatch": {
+                               "total_ns": EdgeBand(
+                                   n=8, mean=MS, std=MS / 10,
+                                   p95=1.2 * MS, lo=0.8 * MS,
+                                   hi=1.2 * MS)}}))
+        det = DriftRegression(warn_growth=0.01)
+        assert det.detect(hot)               # fires without bands
+        assert det.detect(quiet) == []       # 3σ floor absorbs the trend
+
+
+class TestCallAmplification:
+    def test_fires_on_count_blowup(self):
+        t = FoldedTable({
+            ("app", "db", "query"): edge(10, 10 * MS),
+            ("db", "net", "send"): edge(100_000, 50 * MS),
+        })
+        [f] = CallAmplification().detect(ctx_of(t))
+        assert f.severity == "crit"          # 10_000x >= crit 1000
+        assert f.subject == "chain:app -> db.query => net.send"
+        assert f.evidence["ratio"] == pytest.approx(10_000.0)
+
+    def test_denominator_is_total_inbound(self):
+        # a rare side entrance must not manufacture a blowup: 100k in via
+        # the main edge, 10 via a side edge, 200k out -> ratio 2, silent
+        t = FoldedTable({
+            ("app", "db", "query"): edge(100_000, 10 * MS),
+            ("cron", "db", "query"): edge(10, MS),
+            ("db", "net", "send"): edge(200_000, 50 * MS),
+        })
+        assert CallAmplification().detect(ctx_of(t)) == []
+
+    def test_silent_below_count_floor_and_on_healthy(self):
+        t = FoldedTable({
+            ("app", "db", "query"): edge(1, MS),
+            ("db", "net", "send"): edge(500, MS),   # 500x but < min_count
+        })
+        assert CallAmplification().detect(ctx_of(t)) == []
+        assert CallAmplification().detect(ctx_of(healthy_table())) == []
+
+
+class TestDetectorFramework:
+    def test_every_builtin_silent_on_healthy_run(self, tmp_path):
+        run = write_ring(tmp_path, [healthy_table(1), healthy_table(2),
+                                    healthy_table(3)])
+        ctx = build_context(run)
+        for det in builtin_detectors():
+            assert det.detect(ctx) == [], det.name
+
+    def test_ordering_is_deterministic_and_severity_first(self):
+        t = FoldedTable({
+            # wait dominance (crit) + hot edge (warn via tuned bound)
+            ("app", "runtime", "sync"): edge(10, 900 * MS, kind=KIND_WAIT),
+            ("app", "runtime", "dispatch"): edge(10, 100 * MS),
+            ("app", "glibc", "read"): edge(10, 85 * MS),
+            ("app", "glibc", "write"): edge(10, 15 * MS),
+        })
+        dets = builtin_detectors(hot_edge={"warn_share": 0.8,
+                                           "crit_share": 0.99})
+        fs = run_detectors(ctx_of(t), dets)
+        assert [f.severity for f in fs] == ["crit", "warn"]
+        assert fs[0].detector == "wait-dominance"
+        assert fs[1].detector == "hot-edge"
+        again = run_detectors(ctx_of(t), dets)
+        assert [f.to_json() for f in fs] == [f.to_json() for f in again]
+
+    def test_builtin_overrides_reject_nothing_silently(self):
+        with pytest.raises(TypeError):
+            builtin_detectors(wait_dominance={"nope": 1})
+
+
+# ----------------------------------------------------------- calibration ----
+class TestCalibration:
+    def test_runs_mode_bands_and_rel_threshold(self):
+        thr = calibrate_runs([healthy_table() for _ in range(4)])
+        key = ("app", "glibc", "read")
+        b = thr.band(key, "total_ns")
+        assert b.n == 4 and b.std == 0.0 and b.mean == 30 * MS
+        # zero variance -> the floor, not zero tolerance
+        assert thr.rel_threshold(key, "total_ns", 0.25) == 0.05
+        # uncalibrated edges keep the caller's default
+        assert thr.rel_threshold(("x", "y", "z"), "total_ns", 0.25) == 0.25
+
+    def test_absent_edge_counts_as_zero_sample(self):
+        a = healthy_table()
+        b = healthy_table()
+        extra = ("app", "ckpt", "save")
+        b.edges[extra] = edge(5, 10 * MS)
+        thr = calibrate_runs([a, b])
+        band = thr.band(extra, "count")
+        assert band.n == 2 and band.lo == 0.0 and band.hi == 5.0
+
+    def test_ring_mode_excludes_restarts(self, tmp_path):
+        run = write_ring(tmp_path, [healthy_table(3), healthy_table(1)])
+        thr = calibrate_ring(build_timelines(run))
+        band = thr.band(("app", "glibc", "read"), "total_ns")
+        assert band.n == 1                   # the negative delta dropped
+
+    def test_ring_mode_skips_trimmed_cumulative_head(self, tmp_path):
+        """A retention-trimmed ring's first snapshot is a cumulative fold
+        of the whole run so far — sampling it as one interval would blow
+        the band wide open and blind the gate."""
+        from repro.profile import RetentionPolicy
+        store = ProfileStore(str(tmp_path),
+                             retention=RetentionPolicy(keep_last=3))
+        for i in range(1, 7):                # steady +1x per interval
+            store.write_shard(healthy_table(i), label="t")
+        [tl] = build_timelines(str(tmp_path))
+        assert tl.seqs[0] != 1               # ring really was trimmed
+        thr = calibrate_ring([tl])
+        band = thr.band(("app", "glibc", "read"), "total_ns")
+        # only the 2 true intervals sampled; a steady edge fits a ZERO
+        # -variance band (sampling the seq-4 cumulative head would give
+        # n=3, std>0 and a ~2x-wide tolerance)
+        assert band.n == 2
+        assert band.std == 0.0 and band.mean == 30 * MS
+
+    def test_json_round_trip(self, tmp_path):
+        thr = calibrate_runs([healthy_table(), healthy_table(2)],
+                             meta={"who": "test"})
+        p = str(tmp_path / "thr.json")
+        thr.save(p)
+        back = Thresholds.load(p)
+        assert back.to_json() == thr.to_json()
+        assert back.meta["who"] == "test"
+        with pytest.raises(ValueError, match="schema"):
+            Thresholds.from_json({"schema": 99})
+
+    def test_diff_uses_calibrated_bands(self):
+        base = healthy_table()
+        runs = []
+        for i in range(4):                   # ±10% spread around healthy
+            t = healthy_table()
+            for k in t.edges:
+                t.edges[k].total_ns = int(
+                    t.edges[k].total_ns * (0.9 + 0.2 * (i % 2)))
+            runs.append(t)
+        thr = calibrate_runs(runs, k_sigma=3.0)
+        within = healthy_table()
+        for k in within.edges:               # +15% — inside 3 sigma
+            within.edges[k].total_ns = int(within.edges[k].total_ns * 1.15)
+        beyond = healthy_table()
+        for k in beyond.edges:               # +80% — outside any band
+            beyond.edges[k].total_ns = int(beyond.edges[k].total_ns * 1.8)
+        flat_fields = ("total_ns",)
+        # global 10% threshold would flag the within-band candidate...
+        assert diff_profiles(base, within, threshold=0.10,
+                             fields=flat_fields).has_regressions
+        # ...calibrated bands accept it and still catch the real one
+        d_ok = diff_profiles(base, within, threshold=0.10,
+                             fields=flat_fields, thresholds=thr)
+        assert not d_ok.has_regressions and d_ok.calibrated
+        assert diff_profiles(base, beyond, threshold=0.10,
+                             fields=flat_fields,
+                             thresholds=thr).has_regressions
+
+
+# ------------------------------------------------------------- e2e runs ----
+class TestDiagnoseEndToEnd:
+    def test_pathological_run_and_fail_on(self, tmp_path):
+        run = str(tmp_path / "bad")
+        t = FoldedTable({
+            ("app", "runtime", "dispatch"): edge(100, 100 * MS),
+            ("app", "runtime", "device_sync"): edge(100, 900 * MS,
+                                                    kind=KIND_WAIT),
+        })
+        ProfileStore(run).write_shard(t, label="train-r0")
+        register_run(run, config="c", kind="train", label="train-r0")
+        diag = diagnose(run)
+        assert [f.detector for f in diag.findings] == ["wait-dominance"]
+        assert diag.counts()["crit"] == 1
+        assert diag.should_fail("crit") and diag.should_fail("warn")
+        assert not diag.should_fail("none") and not diag.should_fail(None)
+        assert diag.manifest["config"] == "c"
+        doc = diag.to_json()
+        assert doc == json.loads(json.dumps(doc))    # JSON round trip
+        assert "wait-dominance" in diag.render()
+
+    def test_registry_resolution(self, tmp_path):
+        for name in ("r1", "r2"):
+            run = str(tmp_path / name)
+            ProfileStore(run).write_shard(healthy_table(), label=name)
+            register_run(run, config="cfg", kind="train", label=name)
+        d = diagnose(str(tmp_path), run="r2")
+        assert d.run_dir.endswith("r2") and d.findings == []
+        with pytest.raises(LookupError, match="ambiguous"):
+            diagnose(str(tmp_path), run="r*")
+        with pytest.raises(LookupError, match="no registered run"):
+            diagnose(str(tmp_path), run="nope")
+        # a run dir given directly never needs the registry
+        assert diagnose(str(tmp_path / "r1")).run_dir.endswith("r1")
+
+    def test_baseline_enables_drift_detector(self, tmp_path):
+        def run_with(deltas, name):
+            tables, tot = [], 0
+            for d in deltas:
+                tot += d
+                tables.append(FoldedTable({
+                    ("app", "runtime", "dispatch"): edge(1, tot)}))
+            return write_ring(tmp_path / name, tables)
+
+        base = run_with([MS, MS, MS], "base")
+        cand = run_with([MS, 2 * MS, 4 * MS], "cand")
+        clean = diagnose(cand)
+        assert "drift-regression" not in {f.detector
+                                          for f in clean.findings}
+        drift = diagnose(cand, baseline=base)
+        assert "drift-regression" in {f.detector for f in drift.findings}
+        assert drift.baseline_dir.endswith("base")
+
+    def test_real_trainer_run_is_deterministic(self, tmp_path):
+        """Acceptance: diagnose a REAL trainer run (as in
+        test_run_registry) — findings must be valid, and two diagnoses of
+        the same run dir byte-identical."""
+        import dataclasses
+
+        import jax
+
+        from repro.ckpt.manager import CheckpointManager
+        from repro.configs import get_smoke
+        from repro.configs.base import TrainConfig
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import build_model
+        from repro.runtime.trainer import Trainer
+
+        cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"),
+                                  n_layers=2, d_model=64, d_ff=128,
+                                  vocab=512, n_heads=2, n_kv_heads=2,
+                                  head_dim=32)
+        model = build_model(cfg, impl="ref")
+        run_dir = str(tmp_path / "run")
+        trainer = Trainer(model, TrainConfig(ckpt_interval=0),
+                          CheckpointManager(str(tmp_path / "ckpt")),
+                          profile_dir=run_dir, profile_interval=1)
+        trainer.run(jax.random.key(0), SyntheticLMData(cfg, 2, 32),
+                    n_steps=3, resume=False)
+
+        d1, d2 = diagnose(run_dir), diagnose(run_dir)
+        assert json.dumps(d1.to_json(), sort_keys=True) == \
+            json.dumps(d2.to_json(), sort_keys=True)
+        assert d1.manifest["kind"] == "train"
+        assert d1.graph_stats["rings"] >= 1
+        for f in d1.findings:
+            assert f.severity in ("info", "warn", "crit")
+            assert f.evidence
+
+    def test_real_serving_run_diagnoses(self, tmp_path):
+        """Acceptance: a real serving run (engine + queue_depth gauge)
+        flows through diagnose; the queue_wait/queue_depth edges the
+        saturation detector reads are present in the graph."""
+        import dataclasses
+
+        import jax
+        import numpy as np
+
+        from repro.configs import get_smoke
+        from repro.configs.base import ServeConfig
+        from repro.models import build_model
+        from repro.serving.engine import ServingEngine
+
+        cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"),
+                                  n_layers=2, d_model=64, d_ff=128,
+                                  vocab=512, n_heads=2, n_kv_heads=2,
+                                  head_dim=32)
+        model = build_model(cfg, impl="ref")
+        run_dir = str(tmp_path / "serve-run")
+        engine = ServingEngine(
+            model, model.init(jax.random.key(0)),
+            ServeConfig(max_batch=2, max_seq_len=64,
+                        profile_dir=run_dir, profile_label="serve-0"))
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            engine.submit(rng.integers(0, cfg.vocab, 5), 2)
+        engine.run_until_drained()
+
+        d = diagnose(run_dir)
+        keys = set(d.to_json()["manifest"])          # manifest present
+        assert {"config", "kind"} <= keys
+        g = build_context(run_dir).graph
+        assert ("serve", "serve", "queue_wait") in g.edges
+        assert ("app", "serve", "queue_depth") in g.edges
+        # gauge semantics: one sample per engine step, mean = depth
+        depth = g.edges[("app", "serve", "queue_depth")]
+        assert depth.count >= 1
+        assert json.dumps(diagnose(run_dir).to_json()) == \
+            json.dumps(d.to_json())

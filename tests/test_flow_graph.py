@@ -1,0 +1,210 @@
+"""Cross Flow Graph construction: typed nodes/edges from EdgeColumns,
+mass conservation under arbitrary generated profiles (hypothesis, when
+installed — the same assertions also run on hand-built tables so the
+invariant is checked even where hypothesis is absent), and the per-shard
+projections imbalance detection consumes."""
+
+import numpy as np
+import pytest
+
+from repro.core.folding import EdgeStats, FoldedTable, fold_event_log
+from repro.core.shadow import KIND_CALL, KIND_WAIT
+from repro.analysis import FlowGraph, edge_label, run_graph, shard_graphs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # CI installs it; image may not
+    HAVE_HYPOTHESIS = False
+
+CALLERS = ("app", "moe", "optimizer")
+COMPONENTS = ("glibc", "alloc", "pthread")
+APIS = ("read", "write", "malloc", "lock")
+METRIC_NAMES = ("flops", "bytes")
+
+EVENTS = [
+    ("app", "glibc", "read", 18), ("app", "glibc", "write", 35),
+    ("app", "alloc", "malloc", 10), ("moe", "pthread", "lock", 900),
+]
+
+
+def check_conservation(table: FoldedTable) -> None:
+    """Graph construction loses nothing: edge aggregates equal the folded
+    stats edge-for-edge, graph totals equal the column sums, and every
+    node's inbound/outbound/wait sums equal the sums over its incident
+    edges — including wait-kind and count-0 edges."""
+    cols = table.to_columns()
+    g = FlowGraph.from_columns(cols)
+
+    assert g.edges.keys() == table.edges.keys()
+    for k, e in table.edges.items():
+        fe = g.edges[k]
+        assert (fe.count, fe.total_ns, fe.child_ns, fe.min_ns, fe.max_ns,
+                fe.kind) == (e.count, e.total_ns, e.child_ns, e.min_ns,
+                             e.max_ns, e.kind), k
+        assert fe.metrics == e.metrics, k
+        assert fe.self_ns == e.self_ns
+
+    assert g.total_ns() == int(cols.total_ns.sum())
+    assert g.total_count() == int(cols.count.sum())
+
+    for name, node in g.nodes.items():
+        ins = [e for k, e in table.edges.items() if k[1] == name]
+        outs = [e for k, e in table.edges.items() if k[0] == name]
+        assert node.in_count == sum(e.count for e in ins)
+        assert node.in_total_ns == sum(e.total_ns for e in ins)
+        assert node.wait_ns == sum(e.total_ns for e in ins
+                                   if e.kind == KIND_WAIT)
+        assert node.wait_count == sum(e.count for e in ins
+                                      if e.kind == KIND_WAIT)
+        assert node.out_total_ns == sum(e.total_ns for e in outs)
+        assert node.self_ns == max(node.in_total_ns - node.in_child_ns, 0)
+    # sum over nodes' inbound == sum over edges (each edge has ONE callee)
+    assert sum(n.in_total_ns for n in g.nodes.values()) == g.total_ns()
+
+
+def _handmade_tables():
+    wait_heavy = FoldedTable({
+        ("app", "runtime", "dispatch"): EdgeStats(
+            count=10, total_ns=100, child_ns=40, min_ns=1, max_ns=20),
+        ("app", "runtime", "sync"): EdgeStats(
+            count=10, total_ns=900, min_ns=1, max_ns=100, kind=KIND_WAIT),
+        ("runtime", "alloc", "malloc"): EdgeStats(
+            count=3, total_ns=40, min_ns=1, max_ns=30),
+    })
+    declared_only = FoldedTable({
+        ("app", "moe", "dispatch"): EdgeStats(
+            kind=KIND_CALL, metrics={"flops": 0.0}),   # count-0 + metric
+        ("app", "glibc", "read"): EdgeStats(
+            count=2, total_ns=7, min_ns=3, max_ns=4,
+            metrics={"bytes": 128.0}),
+    })
+    return [FoldedTable(), fold_event_log(EVENTS), wait_heavy,
+            declared_only]
+
+
+@pytest.mark.parametrize("table", _handmade_tables(),
+                         ids=["empty", "events", "wait-heavy", "count0"])
+def test_graph_conserves_mass_handmade(table):
+    check_conservation(table)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def edge_stats_st(draw):
+        """Full field space incl. count == 0 (declared, never timed),
+        wait kind, and explicit metrics — the same envelope the merge
+        algebra is property-tested on."""
+        count = draw(st.integers(0, 50))
+        kind = draw(st.sampled_from((KIND_CALL, KIND_WAIT)))
+        metrics = draw(st.dictionaries(
+            st.sampled_from(METRIC_NAMES),
+            st.floats(min_value=0.0, max_value=1e6, allow_nan=False),
+            max_size=2))
+        if count == 0:
+            return EdgeStats(kind=kind, metrics=metrics)
+        total = draw(st.integers(1, 10**6))
+        return EdgeStats(count=count, total_ns=total,
+                         child_ns=draw(st.integers(0, total)),
+                         min_ns=draw(st.integers(1, total)),
+                         max_ns=draw(st.integers(1, total)),
+                         kind=kind, metrics=metrics)
+
+    folded_table_st = st.dictionaries(
+        st.tuples(st.sampled_from(CALLERS), st.sampled_from(COMPONENTS),
+                  st.sampled_from(APIS)),
+        edge_stats_st(), max_size=12).map(FoldedTable)
+
+    @settings(max_examples=60, deadline=None)
+    @given(folded_table_st)
+    def test_graph_conserves_mass(table):
+        check_conservation(table)
+
+    @settings(max_examples=30, deadline=None)
+    @given(folded_table_st)
+    def test_graph_adjacency_is_consistent(table):
+        g = FlowGraph.from_folded(table)
+        for comp in g.components():
+            for e in g.in_edges(comp):
+                assert e.component == comp
+            for e in g.out_edges(comp):
+                assert e.caller == comp
+            for e in g.in_edges(comp, kind=KIND_WAIT):
+                assert e.kind == KIND_WAIT
+        # every edge endpoint is a node (callers with no inbound included)
+        for (caller, callee, _api) in g.edges:
+            assert caller in g.nodes and callee in g.nodes
+
+
+class TestColumnsProjection:
+    def test_select_mask_and_indices(self):
+        t = fold_event_log(EVENTS)
+        t.edges[("app", "glibc", "read")].metrics = {"flops": 2.0}
+        cols = t.to_columns()
+        mask = np.array([k[1] == "glibc" for k in cols.keys])
+        sub = cols.select(mask)
+        assert {k[1] for k in sub.keys} == {"glibc"}
+        assert sub.total_ns.sum() == 18 + 35
+        # metric columns stay aligned after selection
+        j = sub.keys.index(("app", "glibc", "read"))
+        i = sub.metric_names.index("flops")
+        assert sub.metric_mask[i, j] and sub.metric_values[i, j] == 2.0
+        # int-index spelling selects the same rows
+        same = cols.select(np.nonzero(mask)[0])
+        assert same.keys == sub.keys
+
+    def test_group_rows(self):
+        cols = fold_event_log(EVENTS).to_columns()
+        by_comp = cols.group_rows("component")
+        assert set(by_comp) == {"glibc", "alloc", "pthread"}
+        assert int(cols.total_ns[by_comp["glibc"]].sum()) == 53
+        by_caller = cols.group_rows("caller")
+        assert set(by_caller) == {"app", "moe"}
+        assert cols.self_ns.sum() == cols.total_ns.sum()  # no child time
+
+    def test_select_empty_projection(self):
+        cols = fold_event_log(EVENTS).to_columns()
+        none = cols.select([])               # no rows matched the filter
+        assert len(none) == 0 and none.group == cols.group
+        also_none = cols.select(np.zeros(len(cols), dtype=bool))
+        assert len(also_none) == 0
+
+    def test_two_hop_adjacency(self):
+        t = fold_event_log([("app", "db", "query", 10),
+                            ("db", "net", "send", 1)])
+        g = FlowGraph.from_folded(t)
+        [e1] = g.in_edges("db")
+        [e2] = g.out_edges("db")
+        assert e1.key == ("app", "db", "query")
+        assert e2.key == ("db", "net", "send")
+        assert g.successors("db") == ["net"]
+
+
+class TestRunProjections:
+    def test_shard_graphs_one_subgraph_per_shard(self, tmp_path):
+        from repro.profile import ProfileStore
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS), label="train-r0")
+        store.write_shard(fold_event_log(EVENTS), label="train-r0")  # ring
+        store.write_shard(fold_event_log(EVENTS * 3), label="train-r1")
+        graphs = shard_graphs(str(tmp_path))
+        assert len(graphs) == 2                 # newest per shard, not ring
+        r0 = graphs[store.shard_stem("train-r0")]
+        r1 = graphs[store.shard_stem("train-r1")]
+        assert r1.total_ns() == 3 * r0.total_ns()
+        # the merged run graph conserves the per-shard mass
+        merged = run_graph(str(tmp_path))
+        assert merged.total_ns() == r0.total_ns() + r1.total_ns()
+        assert merged.meta["run_dir"] == str(tmp_path)
+
+    def test_merge_products_excluded(self, tmp_path):
+        from repro.profile import ProfileSnapshot, ProfileStore
+        store = ProfileStore(str(tmp_path))
+        store.write_shard(fold_event_log(EVENTS), label="t")
+        snap = ProfileSnapshot.from_folded(fold_event_log(EVENTS * 9),
+                                           meta={"merged_from": ["x"]})
+        snap.save(str(tmp_path / "merged-out.xfa.npz"))
+        assert len(shard_graphs(str(tmp_path))) == 1
+
+    def test_edge_label_matches_timeline_spelling(self):
+        assert edge_label(("app", "glibc", "read")) == "app -> glibc.read"

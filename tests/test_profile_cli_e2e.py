@@ -220,6 +220,222 @@ class TestCIBaselineLane:
                        "--threshold", "0.25").returncode == 1
 
 
+class TestCalibrateCLI:
+    def test_runs_mode_writes_thresholds_json(self, tmp_path):
+        from repro.analysis import Thresholds
+        snaps = []
+        for i in (1, 2, 3):
+            p = tmp_path / f"run{i}.xfa.npz"
+            ProfileSnapshot.from_folded(fold_event_log(EVENTS)).save(str(p))
+            snaps.append(p)
+        out = tmp_path / "thr.json"
+        p = run_cli("calibrate", *snaps, "-o", out)
+        assert p.returncode == 0, p.stderr
+        assert "3 input(s)" in p.stdout
+        thr = Thresholds.load(str(out))
+        assert len(thr) == len(fold_event_log(EVENTS))
+        assert thr.meta["mode"] == "runs"
+
+    def test_ring_mode_and_empty_input_exit_code(self, registry, tmp_path):
+        out = tmp_path / "thr.json"
+        p = run_cli("calibrate", registry / "train", "-o", out,
+                    "--mode", "ring")
+        assert p.returncode == 0, p.stderr
+        doc = json.loads(out.read_text())
+        assert doc["meta"]["mode"] == "ring"
+        empty = run_cli("calibrate", tmp_path / "nope", "-o", out,
+                        "--mode", "ring")
+        assert empty.returncode == 1
+
+
+class TestDiffThresholdsCLI:
+    """`diff --thresholds`: the calibrated profile-diff gate (the first
+    concrete step toward flipping the CI lane to gating)."""
+
+    BASELINE = os.path.join(os.path.dirname(__file__), "data",
+                            "ci_baseline.xfa.npz")
+    THRESHOLDS = os.path.join(os.path.dirname(__file__), "data",
+                              "ci_thresholds.json")
+
+    def _gen(self, out, *extra):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        script = os.path.join(os.path.dirname(__file__), "..",
+                              "benchmarks", "baseline_profile.py")
+        return subprocess.run(
+            [sys.executable, script, "-o", str(out), *extra],
+            capture_output=True, text=True, timeout=120, env=env)
+
+    def test_checked_in_thresholds_regenerate_identically(self, tmp_path):
+        cand = tmp_path / "thr.json"
+        p = self._gen(tmp_path / "b.xfa.npz", "--thresholds-out", cand)
+        assert p.returncode == 0, p.stderr
+        with open(self.THRESHOLDS) as a, open(cand) as b:
+            assert json.load(a) == json.load(b), \
+                "calibration drifted: regenerate tests/data/" \
+                "ci_thresholds.json deliberately (see " \
+                "benchmarks/baseline_profile.py --thresholds-out)"
+
+    def test_seed_jitter_passes_injected_regression_fails(self, tmp_path):
+        """A different seed of the same workload sits inside the measured
+        bands; a 1.6x slowdown and a new edge do not."""
+        other_seed = tmp_path / "s1.xfa.npz"
+        assert self._gen(other_seed, "--seed", "1").returncode == 0
+        ok = run_cli("diff", self.BASELINE, other_seed,
+                     "--thresholds", self.THRESHOLDS)
+        assert ok.returncode == 0, ok.stdout + ok.stderr
+        assert "calibrated bands" in ok.stdout
+
+        slow = tmp_path / "slow.xfa.npz"
+        assert self._gen(slow, "--scale", "1.6").returncode == 0
+        hot = run_cli("diff", self.BASELINE, slow,
+                      "--thresholds", self.THRESHOLDS, "--json")
+        assert hot.returncode == 1
+        assert json.loads(hot.stdout)["calibrated"] is True
+
+        new_edge = tmp_path / "new.xfa.npz"
+        assert self._gen(new_edge, "--extra-edge").returncode == 0
+        assert run_cli("diff", self.BASELINE, new_edge,
+                       "--thresholds", self.THRESHOLDS).returncode == 1
+
+
+class TestDiagnoseCLI:
+    """`diagnose` as an OS process: text + JSON rendering and the
+    --fail-on exit-code contract CI composes on."""
+
+    def _bad_run(self, root):
+        """Wait-dominated (crit) + hot-edge (warn at tuned default? no —
+        95% share -> crit) pathology run dir."""
+        from repro.core.folding import EdgeStats, FoldedTable
+        t = FoldedTable({
+            ("app", "runtime", "dispatch"): EdgeStats(
+                count=100, total_ns=100_000_000, min_ns=1,
+                max_ns=2_000_000),
+            ("app", "runtime", "device_sync"): EdgeStats(
+                count=100, total_ns=900_000_000, min_ns=1,
+                max_ns=9_000_000, kind=1),
+        })
+        run = os.path.join(str(root), "bad")
+        ProfileStore(run).write_shard(t, label="train-r0")
+        register_run(run, config="cfg", kind="train", label="train-r0")
+        return run
+
+    def _good_run(self, root):
+        run = os.path.join(str(root), "good")
+        ProfileStore(run).write_shard(fold_event_log(EVENTS),
+                                      label="train-r0")
+        register_run(run, config="cfg", kind="train", label="train-r0")
+        return run
+
+    def test_default_reports_without_failing(self, tmp_path):
+        run = self._bad_run(tmp_path)
+        p = run_cli("diagnose", run)
+        assert p.returncode == 0, p.stderr
+        assert "wait-dominance" in p.stdout and "[CRIT]" in p.stdout
+
+    def test_fail_on_exit_codes(self, tmp_path):
+        run = self._bad_run(tmp_path)
+        assert run_cli("diagnose", run, "--fail-on", "crit").returncode == 1
+        assert run_cli("diagnose", run, "--fail-on", "warn").returncode == 1
+        good = self._good_run(tmp_path)
+        for level in ("warn", "crit"):
+            p = run_cli("diagnose", good, "--fail-on", level)
+            assert p.returncode == 0, p.stdout + p.stderr
+        usage = run_cli("diagnose", run, "--fail-on", "nope")
+        assert usage.returncode == 2           # argparse usage error
+
+    def test_corrupt_thresholds_is_a_usage_error_not_a_finding(
+            self, tmp_path):
+        """Exit 1 is the --fail-on contract; a broken bands file must
+        exit 2 with a message, never masquerade as a regression."""
+        run = self._bad_run(tmp_path)
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        p = run_cli("diagnose", run, "--thresholds", bad,
+                    "--fail-on", "crit")
+        assert p.returncode == 2, p.stdout + p.stderr
+        assert "diagnose:" in p.stderr
+        schema = tmp_path / "future.json"
+        schema.write_text(json.dumps({"schema": 99}))
+        p = run_cli("diagnose", run, "--thresholds", schema)
+        assert p.returncode == 2
+        assert "schema" in p.stderr
+
+    def test_json_contract(self, tmp_path):
+        run = self._bad_run(tmp_path)
+        p = run_cli("diagnose", run, "--json", "--fail-on", "crit")
+        assert p.returncode == 1
+        doc = json.loads(p.stdout)
+        assert doc["failed"] is True and doc["fail_on"] == "crit"
+        assert doc["counts"]["crit"] >= 1
+        [f] = [f for f in doc["findings"]
+               if f["detector"] == "wait-dominance"]
+        assert f["severity"] == "crit"
+        assert f["evidence"]["top_wait_edge"] == \
+            ["app", "runtime", "device_sync"]
+        assert doc["manifest"]["config"] == "cfg"
+
+    def test_registry_root_run_selection(self, tmp_path):
+        self._bad_run(tmp_path)
+        self._good_run(tmp_path)
+        p = run_cli("diagnose", tmp_path, "--run", "good")
+        assert p.returncode == 0, p.stderr
+        assert "no findings" in p.stdout
+        amb = run_cli("diagnose", tmp_path, "--run", "*d*")
+        assert amb.returncode == 2
+        assert "ambiguous" in amb.stderr
+        missing = run_cli("diagnose", tmp_path / "void")
+        assert missing.returncode == 2
+
+    def test_baseline_flag_resolves_against_registry(self, tmp_path):
+        bad = self._bad_run(tmp_path)
+        self._good_run(tmp_path)
+        p = run_cli("diagnose", bad, "--baseline",
+                    os.path.join(str(tmp_path), "good"), "--json")
+        assert p.returncode == 0, p.stderr
+        assert json.loads(p.stdout)["baseline_dir"].endswith("good")
+
+
+class TestMachineReadableSatellites:
+    """timeline --json structured keys + gc --dry-run byte accounting."""
+
+    def test_timeline_json_carries_structured_keys(self, registry):
+        p = run_cli("timeline", registry / "train", "--json")
+        assert p.returncode == 0, p.stderr
+        [tl] = json.loads(p.stdout)
+        e = tl["edges"]["moe -> pthread.lock"]
+        assert e["key"] == ["moe", "pthread", "lock"]
+        assert e["kind"] == "call"
+        assert len(e["series"]) == len(tl["seqs"])
+
+    def test_timeline_diff_json_carries_structured_keys(self, registry,
+                                                        tmp_path):
+        other = tmp_path / "other"
+        store = ProfileStore(str(other))
+        for i in range(1, 4):
+            store.write_shard(fold_event_log(EVENTS * i), label="train-r0")
+        p = run_cli("timeline", registry / "train", "--diff", other,
+                    "--json")
+        assert p.returncode == 0, p.stderr
+        [td] = json.loads(p.stdout)
+        e = td["edges"]["app -> glibc.read"]
+        assert e["key"] == ["app", "glibc", "read"]
+        assert e["kind"] == "call"
+        assert len(e["delta_of_deltas"]) == td["aligned"]
+
+    def test_gc_reports_bytes(self, registry):
+        dry = run_cli("gc", registry, "--keep-last", "1", "--dry-run",
+                      "--json")
+        assert dry.returncode == 0, dry.stderr
+        doc = json.loads(dry.stdout)
+        victims = [e for v in doc["deleted"].values() for e in v]
+        assert len(victims) == 2
+        assert all(e["bytes"] > 0 for e in victims)
+        assert doc["bytes"] == sum(e["bytes"] for e in victims)
+        text = run_cli("gc", registry, "--keep-last", "1", "--dry-run")
+        assert "KiB" in text.stdout and "would delete 2" in text.stdout
+
+
 class TestWriterRetentionE2E:
     def test_concurrent_style_writers_stay_bounded(self, tmp_path):
         """Many refreshes through the public writer with a tight policy:

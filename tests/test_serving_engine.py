@@ -148,6 +148,22 @@ class TestEngineSemantics:
         # the pool never decoded for it: one tick observes the empty pool
         assert engine._ticks - ticks_before <= 1
 
+    def test_malformed_prompt_rejected_per_request(self):
+        """An empty or non-1-D prompt must raise at submit() — failing
+        later inside _admit would kill the engine loop and fail every
+        other live client."""
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1))
+        with pytest.raises(ValueError, match="non-empty 1-D"):
+            engine.submit(np.array([], np.int32), 3)
+        with pytest.raises(ValueError, match="non-empty 1-D"):
+            engine.submit(np.zeros((2, 3), np.int32), 3)
+        # the engine is still healthy for well-formed requests
+        req = engine.submit(mixed_prompts(cfg)[0], max_new_tokens=2)
+        engine.run_until_drained()
+        assert req.done and len(req.output) == 2
+
     def test_truncated_prompt_flagged_and_counted(self):
         cfg, model, params = build("tinyllama_1_1b")
         from repro.core.tracer import TRACER
@@ -215,14 +231,24 @@ class TestEngineSemantics:
         finally:
             engine.stop()
 
+    @staticmethod
+    def _break_decode(engine):
+        """Inject a mid-loop failure (malformed prompts no longer reach
+        the loop — submit rejects them — so the decode step is the
+        injection point for loop-failure semantics)."""
+        def boom(*a, **k):
+            raise RuntimeError("injected decode failure")
+        engine._decode = boom
+
     def test_engine_failure_does_not_strand_clients(self):
         """An error inside the serve loop must surface on result(), not
         silently kill the daemon thread while clients block forever."""
         cfg, model, params = build("tinyllama_1_1b")
         engine = ServingEngine(model, params, ServeConfig(
             max_batch=2, max_seq_len=64, eos_token=-1)).start()
+        self._break_decode(engine)
         try:
-            bad = engine.submit(np.zeros((3, 3), np.int32), 4)  # wrong rank
+            bad = engine.submit(mixed_prompts(cfg)[0], 4)
             with pytest.raises(RuntimeError):
                 bad.result(timeout=60)
             assert bad.error is not None
@@ -238,7 +264,8 @@ class TestEngineSemantics:
         cfg, model, params = build("tinyllama_1_1b")
         engine = ServingEngine(model, params, ServeConfig(
             max_batch=2, max_seq_len=64, eos_token=-1))
-        bad = engine.submit(np.zeros((3, 3), np.int32), 4)  # wrong rank
+        self._break_decode(engine)
+        bad = engine.submit(mixed_prompts(cfg)[0], 4)
         with pytest.raises(Exception):
             engine.step()
         assert bad.error is not None and bad._done_event.is_set()
