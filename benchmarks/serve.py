@@ -10,6 +10,22 @@ meaningful under an arrival process), or closed-loop with --mode closed
   serve.ttft_mean_ms / serve.ttft_p95_ms
   serve.queue_wait_mean_ms
   serve.decode_ms_per_tok
+  serve.prefill_tokens / serve.prefill_s / serve.prefill_tok_s
+  serve.decode_tok_s
+  serve.compiled_chunk_widths
+
+The prefill/decode split reads the XFA `serve.prefill_chunk` and
+`serve.decode_token` duration folds — the same edges `diagnose` uses to
+see prefill/decode interference — so the benchmark numbers and the flow
+graph agree by construction.
+
+--long-prompts draws prompts of ~max_seq/2 tokens (many multiples of
+--prefill-chunk): the in-model chunked-prefill stress case.  With
+--compare-tail-feed the same workload runs AGAIN with tail_chunk=1 — the
+legacy one-token-per-tick tail feed reproduced through the unified chunk
+path — and emits serve.ttft_mean_ms_tail_feed next to the chunked
+number; --assert-ttft-improves exits nonzero unless the chunked path
+wins (the serve-bench CI lane runs exactly that).
 
 With --profile-dir the run registers in the run registry (kind=serve)
 and writes its XFA shard there, so
@@ -33,7 +49,6 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.configs.base import ServeConfig
-from repro.models import build_model
 from repro.serving import (SamplingParams, ServingEngine, latency_stats,
                            run_workload)
 
@@ -44,13 +59,37 @@ def tiny_cfg(arch: str):
     return dataclasses.replace(get_smoke(arch), n_layers=2, vocab=512)
 
 
-def run(args) -> dict:
+def _phase_ns(apis) -> dict:
+    """Total folded nanoseconds + counts for the given serve-phase APIs."""
+    from repro.profile import tracer_folded
+    out = {a: [0, 0.0] for a in apis}
+    for (_, comp, api), e in tracer_folded().edges.items():
+        if comp == "serve" and api in out:
+            out[api][0] += e.count
+            out[api][1] += e.total_ns
+    return out
+
+
+def make_prompts(args, cfg, rng) -> list:
+    if args.long_prompts:
+        # many multiples of prefill_chunk: the chunked-prefill stress case
+        lo, hi = args.max_seq // 2, args.max_seq // 2 + args.max_seq // 8
+    else:
+        lo, hi = 4, max(5, args.max_seq // 4)
+    return [rng.integers(0, cfg.vocab, int(rng.integers(lo, hi)))
+            for _ in range(args.requests)]
+
+
+def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
+    from repro.models import build_model
     cfg = tiny_cfg(args.arch)
     model = build_model(cfg, impl="ref")
     params = model.init(jax.random.key(0))
     engine = ServingEngine(model, params, ServeConfig(
         max_batch=args.max_batch, max_seq_len=args.max_seq,
         prefill_chunk=args.prefill_chunk,
+        tail_chunk=tail_chunk,
+        min_chunk_bucket=min_bucket or 8,
         prefill_budget_tokens=args.prefill_budget,
         eos_token=-1,
         profile_dir=args.profile_dir,
@@ -59,21 +98,34 @@ def run(args) -> dict:
         profile_meta=(("bench", "serve"),)))
     sampling = SamplingParams(temperature=args.temperature, seed=1)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, args.max_seq // 4)))
-               for _ in range(args.requests)]
+    prompts = make_prompts(args, cfg, rng)
 
-    # warmup: compile prefill/decode/sampler outside the timed window
-    engine.submit(prompts[0][:4], 2, sampling=sampling)
-    engine.run_until_drained()
+    # warmup: compile the pooled decode/sampler AND every chunk bucket
+    # the engine can schedule (admission, continuation and remainder
+    # chunks all land on one of engine.chunk_buckets()) outside the timed
+    # window — warming only the longest prompt's chunk sequence would
+    # leave other prompts' remainder buckets to compile inside the timed
+    # run and skew the TTFT comparison
+    limit = args.max_seq - args.max_new - 2
+    for w in engine.chunk_buckets() or [args.prefill_chunk]:
+        engine.submit(rng.integers(0, cfg.vocab, min(w, limit)), 2,
+                      sampling=sampling)
+        engine.run_until_drained()
     engine.completed.clear()
 
+    before = _phase_ns(("prefill_chunk", "decode_token"))
     t0 = time.monotonic()
     done = run_workload(engine, prompts, args.max_new, mode=args.mode,
                         rate=args.rate, rng=rng, sampling=sampling)
     s = latency_stats(done, time.monotonic() - t0)
+    after = _phase_ns(("prefill_chunk", "decode_token"))
     if not s["requests"] or "ttft_mean_s" not in s:
         # reachable diagnostic BEFORE any stats key is touched
         raise SystemExit("degenerate serve run: no requests completed")
+    prefill_tokens = int(sum(len(r.prompt) for r in done))
+    prefill_s = (after["prefill_chunk"][1] - before["prefill_chunk"][1]) / 1e9
+    decode_n = after["decode_token"][0] - before["decode_token"][0]
+    decode_s = (after["decode_token"][1] - before["decode_token"][1]) / 1e9
     return {
         "serve.requests": int(s["requests"]),
         "serve.tokens": int(s["tokens"]),
@@ -83,6 +135,13 @@ def run(args) -> dict:
         "serve.ttft_p95_ms": round(s["ttft_p95_s"] * 1e3, 3),
         "serve.queue_wait_mean_ms": round(s["queue_wait_mean_s"] * 1e3, 3),
         "serve.decode_ms_per_tok": round(s["decode_s_per_tok"] * 1e3, 3),
+        "serve.prefill_tokens": prefill_tokens,
+        "serve.prefill_s": round(prefill_s, 4),
+        "serve.prefill_tok_s": round(prefill_tokens / prefill_s, 2)
+        if prefill_s > 0 else 0.0,
+        "serve.decode_tok_s": round(decode_n / decode_s, 2)
+        if decode_s > 0 else 0.0,
+        "serve.compiled_chunk_widths": len(engine.chunk_widths),
     }
 
 
@@ -99,6 +158,16 @@ def main() -> int:
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--prefill-budget", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--long-prompts", action="store_true",
+                    help="prompts of ~max_seq/2 tokens (many chunks each): "
+                         "the chunked-prefill stress scenario")
+    ap.add_argument("--compare-tail-feed", action="store_true",
+                    help="re-run the workload with tail_chunk=1 (legacy "
+                         "one-token-per-tick tail feed) and emit its TTFT "
+                         "as serve.ttft_mean_ms_tail_feed")
+    ap.add_argument("--assert-ttft-improves", action="store_true",
+                    help="with --compare-tail-feed: exit nonzero unless "
+                         "chunked TTFT beats the tail-feed TTFT")
     ap.add_argument("--profile-dir", default="",
                     help="register the run + write its XFA shard here")
     ap.add_argument("-o", "--output", default="",
@@ -106,14 +175,35 @@ def main() -> int:
     args = ap.parse_args()
     if args.requests < 1:
         ap.error("--requests must be >= 1")
+    if args.assert_ttft_improves and not args.compare_tail_feed:
+        ap.error("--assert-ttft-improves requires --compare-tail-feed")
 
     rows = run(args)
+    if args.compare_tail_feed:
+        # same workload through the SAME unified code path, continuation
+        # width forced to 1 token/tick (and no bucket padding, so the
+        # legacy feed is not billed for pad work it never did)
+        tail_args = argparse.Namespace(**{**vars(args), "profile_dir": ""})
+        feed = run(tail_args, tail_chunk=1, min_bucket=1)
+        rows["serve.ttft_mean_ms_tail_feed"] = feed["serve.ttft_mean_ms"]
+        rows["serve.ttft_p95_ms_tail_feed"] = feed["serve.ttft_p95_ms"]
     lines = ["name,value"] + [f"{k},{v}" for k, v in rows.items()]
     out = "\n".join(lines)
     print(out)
     if args.output:
         with open(args.output, "w") as f:
             f.write(out + "\n")
+    if args.assert_ttft_improves:
+        chunked = rows["serve.ttft_mean_ms"]
+        legacy_ttft = rows["serve.ttft_mean_ms_tail_feed"]
+        if chunked >= legacy_ttft:
+            print(f"FAIL: chunked prefill TTFT {chunked}ms did not beat "
+                  f"the one-token-per-tick tail feed {legacy_ttft}ms",
+                  file=sys.stderr)
+            return 1
+        print(f"chunked prefill TTFT {chunked}ms beats tail feed "
+              f"{legacy_ttft}ms ({legacy_ttft / max(chunked, 1e-9):.1f}x)",
+              file=sys.stderr)
     return 0
 
 

@@ -22,8 +22,9 @@ from .detectors import (SEVERITIES, CallAmplification, Detector,
                         DiagnosisContext, DriftRegression, Finding,
                         HotEdgeConcentration, QueueSaturation,
                         RankImbalance, WaitDominance, builtin_detectors,
-                        run_detectors, severity_rank)
-from .diagnose import (Diagnosis, build_context, diagnose, resolve_run_dir)
+                        detector_classes, run_detectors, severity_rank)
+from .diagnose import (Diagnosis, build_context, diagnose,
+                       load_detector_config, resolve_run_dir)
 
 __all__ = [
     "FlowEdge", "FlowGraph", "FlowNode", "edge_label", "run_graph",
@@ -32,7 +33,8 @@ __all__ = [
     "calibrate_runs",
     "SEVERITIES", "CallAmplification", "Detector", "DiagnosisContext",
     "DriftRegression", "Finding", "HotEdgeConcentration", "QueueSaturation",
-    "RankImbalance", "WaitDominance", "builtin_detectors", "run_detectors",
-    "severity_rank",
-    "Diagnosis", "build_context", "diagnose", "resolve_run_dir",
+    "RankImbalance", "WaitDominance", "builtin_detectors",
+    "detector_classes", "run_detectors", "severity_rank",
+    "Diagnosis", "build_context", "diagnose", "load_detector_config",
+    "resolve_run_dir",
 ]

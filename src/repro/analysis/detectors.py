@@ -26,6 +26,7 @@ Built-ins:
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
@@ -358,17 +359,36 @@ class CallAmplification:
         return out
 
 
+def detector_classes() -> Dict[str, type]:
+    """Shipped detector classes keyed by their canonical name."""
+    classes = (WaitDominance, HotEdgeConcentration, RankImbalance,
+               QueueSaturation, DriftRegression, CallAmplification)
+    return {cls().name: cls for cls in classes}
+
+
 def builtin_detectors(**overrides) -> List[Detector]:
     """The shipped detector set.  `overrides` maps a detector name (with
     '-' or '_') to a dict of constructor kwargs, so CLI/config can retune
-    any rule without redefining it."""
-    classes = (WaitDominance, HotEdgeConcentration, RankImbalance,
-               QueueSaturation, DriftRegression, CallAmplification)
-    out = []
+    any rule without redefining it.  Unknown detector names or constructor
+    parameters raise ValueError — the CLI contract surfaces them as usage
+    errors (exit 2), never as a silently-ignored misspelled threshold."""
+    classes = detector_classes()
     norm = {k.replace("_", "-"): v for k, v in overrides.items()}
-    for cls in classes:
-        name = cls().name
-        out.append(cls(**norm.get(name, {})))
+    unknown = sorted(set(norm) - set(classes))
+    if unknown:
+        raise ValueError(
+            f"unknown detector(s): {', '.join(unknown)}; "
+            f"valid: {', '.join(sorted(classes))}")
+    out = []
+    for name, cls in classes.items():
+        kwargs = dict(norm.get(name, {}))
+        params = {f.name for f in dataclasses.fields(cls)} - {"name"}
+        bad = sorted(set(kwargs) - params)
+        if bad:
+            raise ValueError(
+                f"detector {name!r}: unknown parameter(s) "
+                f"{', '.join(bad)}; valid: {', '.join(sorted(params))}")
+        out.append(cls(**kwargs))
     return out
 
 

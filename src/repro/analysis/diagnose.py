@@ -56,6 +56,25 @@ def load_baseline(spec: str, root: str) -> str:
                       f"match under {root!r}")
 
 
+def load_detector_config(path: str) -> Dict[str, Dict]:
+    """Parse a `--detector-config` JSON file: a top-level object mapping
+    detector names ('-' or '_' accepted) to constructor-parameter objects,
+    e.g. {"wait-dominance": {"warn_share": 0.5}}.
+
+    This is the file surface for tuning detector thresholds without code:
+    the result feeds builtin_detectors(**overrides), which rejects unknown
+    detector names and unknown parameters (ValueError -> the CLI exits 2,
+    same contract as a corrupt --thresholds file)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, dict) \
+            or not all(isinstance(v, dict) for v in data.values()):
+        raise ValueError(
+            f"detector config {path!r} must be a JSON object mapping "
+            f"detector names to parameter objects")
+    return data
+
+
 def build_context(run_dir: str, *, baseline_dir: Optional[str] = None,
                   thresholds: Optional[Thresholds] = None
                   ) -> DiagnosisContext:
@@ -84,6 +103,7 @@ class Diagnosis:
     manifest: Dict[str, Any] = field(default_factory=dict)
     baseline_dir: Optional[str] = None
     thresholds_path: Optional[str] = None
+    detector_config_path: Optional[str] = None
 
     def counts(self) -> Dict[str, int]:
         c = {s: 0 for s in SEVERITIES}
@@ -107,6 +127,7 @@ class Diagnosis:
             "run_dir": self.run_dir,
             "baseline_dir": self.baseline_dir,
             "thresholds": self.thresholds_path,
+            "detector_config": self.detector_config_path,
             "detectors": list(self.detectors),
             "graph": dict(self.graph_stats),
             "manifest": self.manifest,
@@ -131,7 +152,9 @@ class Diagnosis:
             + (f"; baseline: {self.baseline_dir}" if self.baseline_dir
                else "")
             + (f"; thresholds: {self.thresholds_path}"
-               if self.thresholds_path else ""),
+               if self.thresholds_path else "")
+            + (f"; detector-config: {self.detector_config_path}"
+               if self.detector_config_path else ""),
             f"  findings: {c['crit']} crit, {c['warn']} warn, "
             f"{c['info']} info",
         ]
@@ -150,14 +173,32 @@ def diagnose(root: str, *, run: Optional[str] = None,
              baseline: Optional[str] = None,
              thresholds_path: Optional[str] = None,
              detectors: Optional[Sequence[Detector]] = None,
-             overrides: Optional[Dict[str, Dict]] = None) -> Diagnosis:
-    """End-to-end diagnosis of one run (the CLI body, importable)."""
+             overrides: Optional[Dict[str, Dict]] = None,
+             detector_config: Optional[str] = None) -> Diagnosis:
+    """End-to-end diagnosis of one run (the CLI body, importable).
+
+    detector_config: path to a JSON file of per-detector constructor
+    parameters (see load_detector_config); programmatic `overrides` win
+    over file values key-by-key."""
     run_dir = resolve_run_dir(root, run)
     baseline_dir = load_baseline(baseline, root) if baseline else None
     thr = Thresholds.load(thresholds_path) if thresholds_path else None
     ctx = build_context(run_dir, baseline_dir=baseline_dir, thresholds=thr)
+    # normalize '-'/'_' spellings BEFORE merging: keyed raw, a file's
+    # "wait-dominance" and a caller's "wait_dominance" would survive as
+    # two entries and builtin_detectors' own normalization would keep
+    # only one of them, silently dropping the other's values
+    norm = lambda k: k.replace("_", "-")
+    over: Dict[str, Dict] = {}
+    if detector_config:
+        over.update({norm(k): dict(v)
+                     for k, v in load_detector_config(detector_config).items()})
+    for name, kwargs in (overrides or {}).items():
+        merged = dict(over.get(norm(name), {}))
+        merged.update(kwargs)
+        over[norm(name)] = merged
     dets = list(detectors) if detectors is not None \
-        else builtin_detectors(**(overrides or {}))
+        else builtin_detectors(**over)
     findings = run_detectors(ctx, dets)
     manifest: Dict[str, Any] = {}
     try:
@@ -175,4 +216,5 @@ def diagnose(root: str, *, run: Optional[str] = None,
                      "rings": len(ctx.timelines)},
         manifest=manifest,
         baseline_dir=os.path.abspath(baseline_dir) if baseline_dir else None,
-        thresholds_path=thresholds_path)
+        thresholds_path=thresholds_path,
+        detector_config_path=detector_config)

@@ -288,11 +288,25 @@ class TrainConfig:
 class ServeConfig:
     max_batch: int = 8
     max_seq_len: int = 2_048
-    #: bulk prefill at admission covers at most this many prompt tokens;
-    #: the tail of a longer prompt is merged into the pooled decode stream
-    #: one token per tick (host-chunked prefill: admission cost is
-    #: O(chunk), never O(prompt))
+    #: prefill proceeds in chunks of at most this many prompt tokens per
+    #: forward_chunk step: the admission chunk AND every continuation
+    #: chunk of a longer prompt's tail (true in-model chunked prefill —
+    #: each chunk lands at the slot's cache offset in one positioned
+    #: forward; admission cost is O(chunk), never O(prompt))
     prefill_chunk: int = 512
+    #: continuation chunks of the prompt tail use this width (0 = same as
+    #: prefill_chunk).  tail_chunk=1 reproduces the legacy
+    #: one-token-per-tick tail feed through the SAME unified code path —
+    #: benchmarks/serve.py uses it as the TTFT comparison baseline
+    tail_chunk: int = 0
+    #: round every prefill-chunk width up to the next power-of-two bucket
+    #: (pad masked in-model via forward_chunk's `valid`): the set of
+    #: compiled chunk programs stays O(log max_seq_len) instead of one
+    #: per distinct prompt length (per-admission recompile hazard)
+    bucket_chunks: bool = True
+    #: smallest chunk bucket (floors the power-of-two rounding so tiny
+    #: prompts of many distinct lengths share one compiled width)
+    min_chunk_bucket: int = 8
     eos_token: int = 2
     # -- scheduler ----------------------------------------------------------
     #: per-tick admission budget in bulk-prefill tokens (0 = unbounded);

@@ -1,4 +1,4 @@
-"""Flash-decode (split-K) attention — Pallas TPU kernel for 1-token decode.
+"""Flash-decode (split-K) + positioned-chunk attention — Pallas TPU kernels.
 
 Decode attention is memory-bound: one query row vs a [S, D] KV cache. The
 kernel streams KV blocks through VMEM with the online-softmax carried in
@@ -11,6 +11,13 @@ Distributed split-K happens ABOVE the kernel: parallel/context.py shards S
 across the mesh, each shard runs this kernel with return-style (o, m, l)
 residuals computed from its local range, and the partials merge with
 ref.combine_decode_partials after one small all-gather.
+
+`chunk_attention` generalizes the same streaming structure from one query
+row to a T-token chunk at per-row cache offsets (in-model chunked prefill):
+the mask becomes OFFSET-CAUSAL — query t of batch row b sees cache columns
+<= pos[b] + t — and the per-row early exit skips KV blocks past
+pos[b] + T, so a slot resuming at depth 40 never streams its neighbour's
+32k-deep cache.  T == 1 with kv_len = pos + 1 is exactly decode attention.
 """
 
 from __future__ import annotations
@@ -151,3 +158,106 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if return_residuals:
         return o, (m[..., 0].reshape(B, Hq), l[..., 0].reshape(B, Hq))
     return o
+
+
+def _chunk_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, sm_scale: float, block_k: int, num_kv_blocks: int,
+                  chunk: int):
+    """Offset-causal flash over the cache for one (batch, kv-head) pair.
+
+    q block is [G*T, D] — all q heads of the kv head × the whole chunk —
+    laid out (g, t) row-major so row r's query index is r % T; its column
+    limit is pos + r % T (the row's own absolute position)."""
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]  # [1]-blocked per batch row (SMEM scalar)
+
+    # per-row early exit: no query of this chunk reaches past pos + T - 1
+    @pl.when(ik * block_k < pos + chunk)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G*T, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [BK, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos + rows % chunk, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    pos: jax.Array, sm_scale: Optional[float] = None,
+                    block_k: int = 512, interpret: bool = False):
+    """q: [B, Hq, T, D] chunk queries; k, v: [B, Hkv, S, D] full cache;
+    pos: [B] int32 per-row offsets -> [B, Hq, T, D].
+
+    Query t of row b attends cache columns <= pos[b] + t — the
+    offset-causal mask of in-model chunked prefill: the chunk's own K/V
+    was just scattered at [pos, pos+T) and everything before pos is prior
+    cache content, so one compiled call serves serving slots resuming
+    their prompts at arbitrary mixed depths."""
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+    nk = S // block_k
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    pos = jnp.asarray(pos, jnp.int32)
+
+    # group q heads by kv head and flatten (g, T) into kernel rows
+    qg = q.reshape(B, Hkv, g, T, D).reshape(B, Hkv, g * T, D)
+
+    kernel = functools.partial(
+        _chunk_kernel, sm_scale=scale, block_k=block_k, num_kv_blocks=nk,
+        chunk=T)
+
+    o = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g * T, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, ik: (b, h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g * T, D), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g * T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * T, D), jnp.float32),
+            pltpu.VMEM((g * T, LANES), jnp.float32),
+            pltpu.VMEM((g * T, LANES), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="xfa_chunk_attention",
+    )(pos, qg, k, v)
+
+    return o.reshape(B, Hq, T, D)

@@ -33,13 +33,15 @@ from .compat import tpu_compiler_params
 LANES = 128
 
 
-def _ssd_kernel(dtx_ref, ldec_ref, b_ref, c_ref, y_ref, h_out_ref, h_ref, *,
-                chunk: int, num_chunks: int):
+def _ssd_kernel(h0_ref, dtx_ref, ldec_ref, b_ref, c_ref, y_ref, h_out_ref,
+                h_ref, *, chunk: int, num_chunks: int):
     ck = pl.program_id(2)
 
     @pl.when(ck == 0)
     def _init():
-        h_ref[...] = jnp.zeros_like(h_ref)
+        # resume from the caller's carried state (in-model chunked prefill:
+        # each prompt chunk continues the scan where the last one stopped)
+        h_ref[...] = h0_ref[0, 0].astype(jnp.float32)
 
     dtx = dtx_ref[0, 0].astype(jnp.float32)               # [T, P]
     ldec = ldec_ref[0, 0, :, 0].astype(jnp.float32)       # [T]
@@ -77,8 +79,9 @@ def _ssd_kernel(dtx_ref, ldec_ref, b_ref, c_ref, y_ref, h_out_ref, h_ref, *,
 
 
 def ssd_scan(dtx: jax.Array, ldec: jax.Array, b: jax.Array, c: jax.Array, *,
-             chunk: int = 128, interpret: bool = False):
-    """dtx: [B, H, L, P]; ldec: [B, H, L]; b, c: [B, L, N].
+             chunk: int = 128, h0: jax.Array = None, interpret: bool = False):
+    """dtx: [B, H, L, P]; ldec: [B, H, L]; b, c: [B, L, N];
+    h0: [B, H, N, P] initial state (None = zeros — fresh sequence).
 
     Returns (y [B, H, L, P], h_final [B, H, N, P])."""
     B, H, L, P = dtx.shape
@@ -88,12 +91,15 @@ def ssd_scan(dtx: jax.Array, ldec: jax.Array, b: jax.Array, c: jax.Array, *,
     nc = L // chunk
     # lane-shape the per-step decay for TPU tiling: [B, H, L, 1]
     ldec4 = ldec[..., None]
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
 
     kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
     y, h = pl.pallas_call(
         kernel,
         grid=(B, H, nc),
         in_specs=[
+            pl.BlockSpec((1, 1, N, P), lambda bb, hh, ck: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, chunk, P), lambda bb, hh, ck: (bb, hh, ck, 0)),
             pl.BlockSpec((1, 1, chunk, 1), lambda bb, hh, ck: (bb, hh, ck, 0)),
             pl.BlockSpec((1, chunk, N), lambda bb, hh, ck: (bb, ck, 0)),
@@ -112,5 +118,5 @@ def ssd_scan(dtx: jax.Array, ldec: jax.Array, b: jax.Array, c: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="xfa_ssd_scan",
-    )(dtx, ldec4, b, c)
+    )(h0.astype(jnp.float32), dtx, ldec4, b, c)
     return y, h

@@ -86,6 +86,31 @@ def decode_attention(q, k, v, *, kv_len=None, sm_scale=None,
                                  return_residuals=return_residuals)
 
 
+def chunk_attention(q, k, v, *, pos, sm_scale=None, impl: str = "auto",
+                    interpret: Optional[bool] = None,
+                    component: str = "attention") -> jax.Array:
+    """Positioned-chunk attention: q [B, Hq, T, D] at per-row cache
+    offsets pos [B]; k, v [B, Hkv, S, D] the full cache (this chunk's
+    rows already scattered at [pos, pos+T)).  Query t of row b attends
+    columns <= pos[b] + t — the offset-causal mask that makes prefill and
+    decode the same operation at different widths."""
+    B, Hq, T, D = q.shape
+    S = k.shape[2]
+    annotate_cost(xfa.current_component(), component, "chunk_attention",
+                  flops=4.0 * B * Hq * T * S * D, bytes=_bytes(k, v))
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.chunk_attention(q, k, v, pos=pos, sm_scale=sm_scale)
+    if mode == "chunked":
+        # flash-pattern jnp path for the dry-run: O(T·block_k) live scores,
+        # same footprint shape as the kernel
+        return ref.chunk_attention_blocked(q, k, v, pos=pos,
+                                           sm_scale=sm_scale)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return _dec.chunk_attention(q, k, v, pos=pos, sm_scale=sm_scale,
+                                interpret=itp)
+
+
 def rmsnorm(x, w, *, eps: float = 1e-5, impl: str = "auto",
             interpret: Optional[bool] = None,
             component: str = "norm") -> jax.Array:
@@ -110,9 +135,12 @@ def rmsnorm_add(x, residual, w, *, eps: float = 1e-5, impl: str = "auto",
     return _rms.rmsnorm_add(x, residual, w, eps=eps, interpret=itp)
 
 
-def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, impl: str = "auto",
-             interpret: Optional[bool] = None, component: str = "ssm"):
-    """Mamba2 SSD: x [B,L,H,P], dt [B,L,H], a [H], b/c [B,L,N].
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, h0=None,
+             impl: str = "auto", interpret: Optional[bool] = None,
+             component: str = "ssm"):
+    """Mamba2 SSD: x [B,L,H,P], dt [B,L,H], a [H], b/c [B,L,N];
+    h0 [B,H,N,P] carried state (None = fresh sequence) — chunked prefill
+    resumes the recurrence exactly where the previous chunk stopped.
     Returns (y [B,L,H,P], h_final [B,H,N,P])."""
     B, L, H, P = x.shape
     N = b.shape[-1]
@@ -129,7 +157,7 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, impl: str = "auto",
                                    for i in range(a.ndim)])
         x, dt, b, c = zp(x), zp(dt), zp(b), zp(c)
     if mode in ("ref", "chunked"):
-        y, h = ref.ssd_chunked(x, dt, a, b, c, chunk=chunk)
+        y, h = ref.ssd_chunked(x, dt, a, b, c, chunk=chunk, h0=h0)
     else:
         itp = (not _on_tpu()) if interpret is None else interpret
         dtf = dt.astype(jnp.float32)
@@ -138,7 +166,8 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, impl: str = "auto",
         # to head-major layout for plain-slice BlockSpecs
         dtx = jnp.moveaxis(dtx, 2, 1)                        # [B, H, L, P]
         ldec = jnp.moveaxis(ldec, 2, 1)                      # [B, H, L]
-        y, h = _ssd.ssd_scan(dtx, ldec, b, c, chunk=chunk, interpret=itp)
+        y, h = _ssd.ssd_scan(dtx, ldec, b, c, chunk=chunk, h0=h0,
+                             interpret=itp)
         y = jnp.moveaxis(y, 1, 2)
     if pad:
         y = y[:, :L]

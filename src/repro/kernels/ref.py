@@ -264,6 +264,100 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o_n
 
 
+def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    pos: jax.Array,
+                    sm_scale: Optional[float] = None) -> jax.Array:
+    """Reference positioned-chunk attention (offset-causal vs cache).
+
+    q: [B, Hq, T, D] — a chunk of T query tokens whose row-b absolute
+    positions are pos[b] .. pos[b]+T-1; k, v: [B, Hkv, S, D] — the FULL
+    cache, whose rows [pos[b], pos[b]+T) were just written with this
+    chunk's K/V.  Query t of row b attends cache columns <= pos[b] + t
+    (its own prefix INCLUDING existing cache content), so one call serves
+    mixed-depth serving slots; T == 1 degenerates to decode attention
+    with kv_len = pos + 1 and pos == 0, T == S to plain causal prefill.
+    Columns past each query's limit get exactly-zero softmax mass, so
+    stale cache content beyond a row's frontier can never leak in.
+    """
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g, T, D)
+    s = jnp.einsum("bhgtd,bhsd->bhgts", qf, k.astype(jnp.float32))
+    limit = pos[:, None, None, None, None] \
+        + jnp.arange(T)[None, None, None, :, None]
+    cols = jnp.arange(S)[None, None, None, None, :]
+    s = jnp.where(cols <= limit, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgts,bhsd->bhgtd", p, v.astype(jnp.float32))
+    return (o / l).reshape(B, Hq, T, D).astype(q.dtype)
+
+
+def chunk_attention_blocked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            pos: jax.Array,
+                            sm_scale: Optional[float] = None,
+                            block_k: int = 1024) -> jax.Array:
+    """Flash-pattern positioned-chunk attention in pure jnp — the dry-run
+    stand-in for the Pallas chunk kernel (same semantics as
+    chunk_attention, O(T·block_k) live scores instead of the [T, S]
+    matrix).  Mirrors attention_chunked's SPMD discipline: q heads padded
+    to the model axis, scan carries and KV blocks pinned to
+    (batch, model) so the online-softmax loop never re-gathers."""
+    from repro.parallel.axes import axis_size, shard_dims
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    msize = axis_size("model")
+    pad_h = (-Hq) % msize if msize > 1 else 0
+    if pad_h:
+        kr = k if g == 1 else jnp.repeat(k, g, axis=1)
+        vr = v if g == 1 else jnp.repeat(v, g, axis=1)
+        padded = [jnp.pad(t, ((0, 0), (0, pad_h), (0, 0), (0, 0)))
+                  for t in (q, kr, vr)]
+        return chunk_attention_blocked(*padded, pos=pos, sm_scale=sm_scale,
+                                       block_k=block_k)[:, :Hq]
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    nk = S // block_k
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    _c = lambda t: shard_dims(t, {0: "batch", 1: "model"})
+    qf = _c(q.astype(jnp.float32) * scale)
+    kr = k if g == 1 else jnp.repeat(k, g, axis=1)
+    vr = v if g == 1 else jnp.repeat(v, g, axis=1)
+    kb = _c(kr.reshape(B, Hq, nk, block_k, D))
+    vb = _c(vr.reshape(B, Hq, nk, block_k, D))
+    limit = pos[:, None] + jnp.arange(T)[None, :]          # [B, T]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kk, vv, ik = inp
+        m, l, acc = _c(m), _c(l), _c(acc)
+        kk, vv = _c(kk), _c(vv)
+        s = jnp.einsum("bhtd,bhkd->bhtk", qf, kk.astype(jnp.float32))
+        cols = ik * block_k + jnp.arange(block_k)
+        s = jnp.where(cols[None, None, None, :]
+                      <= limit[:, None, :, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhtk,bhkd->bhtd", p, vv.astype(jnp.float32))
+        return (_c(m_new), _c(l), _c(acc)), None
+
+    m0 = _c(jnp.full((B, Hq, T), NEG_INF, jnp.float32))
+    l0 = _c(jnp.zeros((B, Hq, T), jnp.float32))
+    a0 = _c(jnp.zeros((B, Hq, T, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), jnp.arange(nk)))
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
 def combine_decode_partials(o_parts, m_parts, l_parts):
     """Numerically-stable split-K combine of per-shard decode partials.
 

@@ -63,10 +63,22 @@ def main() -> int:
                     help="open-loop mean arrival rate, requests/s")
     # -- scheduler -----------------------------------------------------------
     ap.add_argument("--prefill-chunk", type=int, default=512,
-                    help="bulk-prefill at most this many prompt tokens at "
-                         "admission; the tail merges into the decode stream")
+                    help="tokens per in-model prefill chunk: the admission "
+                         "chunk and every continuation chunk of a longer "
+                         "prompt run one positioned forward_chunk each")
+    ap.add_argument("--tail-chunk", type=int, default=0,
+                    help="continuation-chunk width (0: same as "
+                         "--prefill-chunk; 1 reproduces the legacy "
+                         "one-token-per-tick tail feed)")
     ap.add_argument("--prefill-budget", type=int, default=0,
-                    help="per-tick bulk-prefill token budget (0: unbounded)")
+                    help="per-tick prefill token budget across admission "
+                         "and continuation chunks (0: unbounded)")
+    ap.add_argument("--no-bucket-chunks", action="store_true",
+                    help="disable power-of-two chunk-width bucketing "
+                         "(every distinct prompt length compiles its own "
+                         "prefill program)")
+    ap.add_argument("--min-chunk-bucket", type=int, default=8,
+                    help="smallest power-of-two chunk bucket")
     # -- sampling ------------------------------------------------------------
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
@@ -110,7 +122,10 @@ def main() -> int:
     engine = ServingEngine(model, params, ServeConfig(
         max_batch=args.max_batch, max_seq_len=args.max_seq,
         prefill_chunk=args.prefill_chunk,
+        tail_chunk=args.tail_chunk,
         prefill_budget_tokens=args.prefill_budget,
+        bucket_chunks=not args.no_bucket_chunks,
+        min_chunk_bucket=args.min_chunk_bucket,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sample_seed=args.sample_seed,
         profile_dir=args.profile_dir,

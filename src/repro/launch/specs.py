@@ -10,7 +10,12 @@ builds, WITHOUT allocating anything:
 Shape semantics per the assignment: decode_* / long_* lower `serve_step`
 (ONE new token against a seq_len KV cache), not train_step. long_500k runs
 only for the sub-quadratic archs (zamba2 hybrid, xlstm ssm) — skips recorded
-in DESIGN.md §Arch-applicability.
+in DESIGN.md §Arch-applicability.  prefill_* lowers the POSITIONED chunk
+forward (`forward_chunk` with a per-slot pos vector) for token-prompt
+families — prefill and decode are the same operation at different widths,
+so the lowered prefill cell is exactly the program the serving engine
+compiles per chunk bucket; vlm/audio keep the prefill wrapper (their
+multimodal prefix rides on the pos = 0 chunk).
 """
 
 from __future__ import annotations
@@ -177,13 +182,35 @@ def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
                                             *([None] * (len(x.shape) - 1)))),
             batch_like)
 
-        def prefill_step(params, batch, table, cache):
-            return model.prefill(params, batch, table, cache)
+        if cfg.family in ("vlm", "audio"):
+            # multimodal prefixes ride only through the prefill wrapper
+            # (patches/frames are per-family extras of the pos = 0 chunk)
+            def prefill_step(params, batch, table, cache):
+                return model.prefill(params, batch, table, cache)
 
+            return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg,
+                        shape=shape, fn=prefill_step,
+                        args=(params_like, batch_like, table_like,
+                              cache_like),
+                        in_shardings=(ps, bs, rep, cs),
+                        out_shardings=(None, cs, rep), donate=(3,))
+
+        # token-prompt families lower the POSITIONED chunk — the program
+        # serving actually compiles: prompt chunks land at per-slot cache
+        # offsets, bulk prefill being the pos = 0 specialization
+        def chunk_step(params, batch, table, cache, pos):
+            return model.forward_chunk(params, batch["tokens"], table,
+                                       cache, pos)
+
+        pos_like = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos_s = NamedSharding(mesh, P(b_axes) if _div(
+            B, b_axes, dict(zip(mesh.axis_names, mesh.devices.shape)))
+            else P())
         return Cell(name=f"{cfg.name}:{shape.name}", cfg=cfg, shape=shape,
-                    fn=prefill_step,
-                    args=(params_like, batch_like, table_like, cache_like),
-                    in_shardings=(ps, bs, rep, cs),
+                    fn=chunk_step,
+                    args=(params_like, batch_like, table_like, cache_like,
+                          pos_like),
+                    in_shardings=(ps, bs, rep, cs, pos_s),
                     out_shardings=(None, cs, rep), donate=(3,))
 
     # decode / long_decode: one token against a seq_len cache

@@ -6,11 +6,18 @@ launcher, trainer, server, dry-run and benchmarks never dispatch on family:
     model.init(key)                          -> params
     model.loss_fn(params, batch, table)      -> (loss, (metrics, table))
     model.init_cache(batch, max_len)         -> cache pytree
+    model.forward_chunk(params, tokens, table, cache, pos[, valid])
+                                             -> (logits, cache, table)
+        THE serving entry point: tokens [B, T] written at per-slot cache
+        offsets pos [B] int32 (a scalar broadcasts), offset-causal against
+        existing cache content; valid [B] masks a bucket-padded chunk and
+        logits come from each row's last valid token.  Prefill and decode
+        are this operation at different widths.
     model.prefill(params, batch, table, cache) -> (logits, cache, table)
+        = forward_chunk at pos 0 over the whole prompt (carries the
+        family's multimodal extras: vlm patches, audio frames)
     model.decode_step(params, tok, table, cache, pos) -> (logits, cache, table)
-        pos is [B] int32 — PER-SLOT cache depths, each row advancing
-        independently (continuous batching); a scalar broadcasts for
-        single-sequence decode
+        = forward_chunk at width T = 1 (the pooled decode tick)
     model.batch_spec(shape)                  -> ShapeDtypeStruct pytree
     model.fold_spec                          -> frozen DeviceFoldSpec
 """
@@ -38,6 +45,7 @@ class Model:
     init: Callable
     loss_fn: Callable
     init_cache: Callable
+    forward_chunk: Callable
     prefill: Callable
     decode_step: Callable
 
@@ -104,6 +112,13 @@ def build_model(cfg: ModelConfig, impl: str = "auto") -> Model:
             return mamba.init_cache(cfg, batch, max_len)
         return transformer.init_cache(cfg, batch, max_len)
 
+    def forward_chunk(params, tokens, table, cache, pos, valid=None):
+        # tokens: [B, T] chunk at per-slot offsets pos [B]; valid [B]
+        # masks bucket padding.  Each family canonicalizes pos (scalars
+        # broadcast there, so direct module callers get it too).
+        return mod.forward_chunk(params, tokens, rt, table, cache, pos,
+                                 valid=valid)
+
     def prefill(params, batch, table, cache):
         extra = {}
         if cfg.family == "audio":
@@ -111,13 +126,14 @@ def build_model(cfg: ModelConfig, impl: str = "auto") -> Model:
         elif cfg.family == "vlm":
             extra["prefix_embeds"] = transformer._project_patches(
                 params, batch["patches"], rt)
-        return mod.prefill(params, batch["tokens"], rt, table, cache, **extra)
+        zero = jnp.zeros((batch["tokens"].shape[0],), jnp.int32)
+        return mod.forward_chunk(params, batch["tokens"], rt, table, cache,
+                                 zero, **extra)
 
     def decode_step(params, token, table, cache, pos):
-        # pos: [B] per-slot positions; each family canonicalizes (scalars
-        # broadcast there, so direct module callers get it too)
-        return mod.decode_step(params, token, rt, table, cache, pos)
+        return mod.forward_chunk(params, token[:, None], rt, table, cache,
+                                 pos)
 
     return Model(cfg=cfg, rt=rt, fold_spec=spec, init=init, loss_fn=loss_fn,
-                 init_cache=init_cache, prefill=prefill,
-                 decode_step=decode_step)
+                 init_cache=init_cache, forward_chunk=forward_chunk,
+                 prefill=prefill, decode_step=decode_step)

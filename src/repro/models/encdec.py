@@ -27,7 +27,8 @@ from repro.parallel.axes import shard
 
 from .layers import (Params, Runtime, attention, cross_entropy, embed,
                      init_attention, init_embed, init_lm_head, init_mlp,
-                     init_norm, lm_head, linear, mlp, norm, _init, pdtype)
+                     init_norm, last_valid, lm_head, linear, mlp, norm,
+                     _init, pdtype)
 
 
 def init_encoder_layer(key, cfg: ModelConfig) -> Params:
@@ -163,58 +164,26 @@ def _cross_kv(layer_p: Params, enc_out: jax.Array, cfg: ModelConfig):
     return k.swapaxes(1, 2), v.swapaxes(1, 2)
 
 
-def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
-            cache, frames: Optional[jax.Array] = None):
-    """Encode source; run the decoder prompt; fill self + cross caches."""
+def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+                  cache, pos: jax.Array, valid: Optional[jax.Array] = None,
+                  frames: Optional[jax.Array] = None):
+    """Positioned-chunk decoder forward: tokens [B, T] written at per-slot
+    offsets pos [B] (scalar broadcasts); valid [B] masks a bucket-padded
+    chunk.
+
+    Self-attention scatters T K/V rows at each row's own offset and
+    attends offset-causally.  Cross-attention K/V is static per request:
+    when `frames` is given (the pos = 0 chunk of a fresh request) the
+    source is encoded ONCE and its projected K/V replace the cross cache;
+    later chunks and decode ticks reuse the cached xk/xv — the standard
+    enc-dec serving optimization, now uniform across all chunk widths."""
     cfg = rt.cfg
-    enc_out = encode(p, frames, rt)
+    enc_out = encode(p, frames, rt) if frames is not None else None
     x = embed(p, tokens, rt)
-    positions = jnp.arange(x.shape[1])
-
-    def body(carry, inp):
-        x, table = carry
-        layer_p, seg = inp
-        h = norm(layer_p["norm1"], x, rt)
-        a, kv = attention(layer_p, h, rt, positions, causal=True,
-                          return_kv=True)
-        x = x + a
-        with jax.named_scope("cross"):
-            h = norm(layer_p["norm2"], x, rt)
-            a, _ = attention(layer_p["cross"], h, rt, positions,
-                             kv=enc_out, causal=False)
-            x = x + a
-            xk, xv = _cross_kv(layer_p, enc_out, cfg)
-        h = norm(layer_p["norm3"], x, rt)
-        x = x + mlp(layer_p, h, rt)
-        new_seg = {
-            "k": jax.lax.dynamic_update_slice(
-                seg["k"], kv["k"].astype(seg["k"].dtype), (0, 0, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(
-                seg["v"], kv["v"].astype(seg["v"].dtype), (0, 0, 0, 0)),
-            "xk": xk.astype(seg["xk"].dtype),
-            "xv": xv.astype(seg["xv"].dtype),
-        }
-        return (x, table), new_seg
-
-    with scan_multiplier(cfg.dec_layers):
-        (x, table), new_cache = jax.lax.scan(
-            body, (x, table), (p["dec_stack"]["stack"], cache))
-    x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x[:, -1:], rt)[:, 0]
-    return logits, new_cache, table
-
-
-def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
-                cache, pos: jax.Array):
-    """pos: [B] per-slot decoder depths (scalar broadcasts). Self-attention
-    cache writes/masks and rope angles are per-row; the cross-attention
-    K/V is static per request (encoder output), so only its kv_len matters
-    and it is already full-length for every row."""
-    cfg = rt.cfg
-    x = embed(p, token[:, None], rt)
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
-    positions = pos[:, None]                     # [B, 1] per-row rope angles
-    B = x.shape[0]
+    B, T = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(T)[None, :]   # [B, T] per-row rope
+    hd = cfg.head_dim_
 
     def body(carry, inp):
         x, table = carry
@@ -225,25 +194,50 @@ def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
         x = x + a
         with jax.named_scope("cross"):
             h = norm(layer_p["norm2"], x, rt)
+            if enc_out is not None:
+                xk, xv = _cross_kv(layer_p, enc_out, cfg)
+                xk = xk.astype(seg["xk"].dtype)
+                xv = xv.astype(seg["xv"].dtype)
+            else:
+                xk, xv = seg["xk"], seg["xv"]
             ap = layer_p["cross"]["attn"]
-            hd = cfg.head_dim_
-            q = linear(ap["wq"], h).reshape(B, cfg.n_heads, hd)
-            src_len = jnp.full((B,), seg["xk"].shape[2], jnp.int32)
-            o = ops.decode_attention(q, seg["xk"], seg["xv"],
-                                     kv_len=src_len, impl=rt.impl)
-            x = x + linear(ap["wo"], o.reshape(B, 1, cfg.n_heads * hd))
+            q = linear(ap["wq"], h).reshape(B, T, cfg.n_heads, hd)
+            if T == 1:
+                src_len = jnp.full((B,), xk.shape[2], jnp.int32)
+                o = ops.decode_attention(q[:, 0], xk, xv,
+                                         kv_len=src_len, impl=rt.impl)
+                o = o[:, None]                          # [B, 1, Hq, hd]
+            else:
+                o = ops.attention(q.swapaxes(1, 2), xk, xv, causal=False,
+                                  impl=rt.impl).swapaxes(1, 2)
+            x = x + linear(ap["wo"], o.reshape(B, T, cfg.n_heads * hd))
         h = norm(layer_p["norm3"], x, rt)
         x = x + mlp(layer_p, h, rt)
         new_seg = dict(seg)
         new_seg.update(new_kv)
+        new_seg["xk"], new_seg["xv"] = xk, xv
         return (x, table), new_seg
 
     with scan_multiplier(cfg.dec_layers):
         (x, table), new_cache = jax.lax.scan(
             body, (x, table), (p["dec_stack"]["stack"], cache))
     x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x, rt)[:, 0]
+    logits = lm_head(p, last_valid(x, valid), rt)[:, 0]
     return logits, new_cache, table
+
+
+def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            cache, frames: Optional[jax.Array] = None):
+    """Encode source + bulk-prefill the decoder prompt = forward_chunk at
+    offset 0 with T = prompt length and the frames attached."""
+    zero = jnp.zeros((tokens.shape[0],), jnp.int32)
+    return forward_chunk(p, tokens, rt, table, cache, zero, frames=frames)
+
+
+def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
+                cache, pos: jax.Array):
+    """Pooled decode = forward_chunk at width T = 1.  token: [B]."""
+    return forward_chunk(p, token[:, None], rt, table, cache, pos)
 
 
 def declare_fold_slots(spec: DeviceFoldSpec, cfg: ModelConfig) -> None:

@@ -143,18 +143,33 @@ def init_attention(key, cfg: ModelConfig) -> Params:
 
 def update_cache_rows(dst: jax.Array, src: jax.Array, pos: jax.Array,
                       seq_axis: int = 2) -> jax.Array:
-    """Scatter one decode step's rows into a batched cache at PER-ROW
-    positions: row b of `src` (length-1 along `seq_axis`) lands at index
-    pos[b] of `dst`'s seq_axis.  dst: [B, ...]; src: [B, ...]; pos: [B].
+    """Vmapped ROW-RANGE cache scatter at arbitrary per-row offsets: row b
+    of `src` (length T along `seq_axis`, T >= 1) lands at indices
+    [pos[b], pos[b]+T) of `dst`'s seq_axis.  dst: [B, ...]; src: [B, ...];
+    pos: [B].
 
     The vmap'd dynamic_update_slice is what lets every slot of a serving
     pool advance its cache row independently (continuous batching: slots
-    decode at different depths in the same compiled step)."""
+    decode at different depths in the same compiled step), and — with
+    T > 1 — what lets a positioned CHUNK of prompt tokens land mid-row
+    (in-model chunked prefill).  Callers must keep pos[b] + T within the
+    row: dynamic_update_slice clamps the start index, so an overrun would
+    silently shift the write onto earlier valid entries."""
     def one(d, s, p):
         idx = [jnp.int32(0)] * d.ndim
         idx[seq_axis - 1] = p        # batch dim vmapped away
         return jax.lax.dynamic_update_slice(d, s, tuple(idx))
     return jax.vmap(one)(dst, src.astype(dst.dtype), pos)
+
+
+def last_valid(x: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
+    """x: [B, T, d] -> [B, 1, d] at each row's last VALID position.  A
+    bucket-padded chunk carries valid: [B] real-token counts; the logits a
+    caller samples from must come from the last real token, not the pad."""
+    if valid is None:
+        return x[:, -1:]
+    last = jnp.clip(jnp.asarray(valid, jnp.int32) - 1, 0, x.shape[1] - 1)
+    return jnp.take_along_axis(x, last[:, None, None], axis=1)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
@@ -182,10 +197,13 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
     """GQA/MQA (optionally qk-norm) attention.
 
     x: [B, S, d]; kv: cross-attention source [B, Sk, d] (None = self-attn);
-    cache+pos: single-layer KV cache for decode (S == 1) — pos is [B]
-    int32, each batch row's own cache depth (a scalar broadcasts), so a
-    serving pool's slots decode at independent positions;
-    positions: [S] shared rope positions, or [B, S] per-row (decode);
+    cache+pos: single-layer KV cache in positioned-chunk mode — pos is [B]
+    int32, each batch row's own cache depth (a scalar broadcasts): the S
+    fresh K/V rows are scattered at [pos, pos+S) of each row's cache and
+    queries attend offset-causally against the row's full prefix.  S == 1
+    is the pooled decode step, S > 1 an in-model prefill chunk — the same
+    operation at different widths;
+    positions: [S] shared rope positions, or [B, S] per-row (chunk/decode);
     return_kv: return this call's post-rope K/V (prefill cache building).
     Returns (y [B, S, d], cache-or-kv).
     """
@@ -223,17 +241,20 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
                   None, None)
 
         if cache is not None:
-            # decode: append each row's k/v at its own `pos`, attend to the
-            # row's own prefix (kv_len is per-row)
-            assert S == 1
+            # positioned chunk: append each row's S fresh k/v rows at its
+            # own `pos`, attend to the row's own prefix (offset-causal)
             pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
             ck = update_cache_rows(cache["k"], k, pos, seq_axis=2)
             cv = update_cache_rows(cache["v"], v, pos, seq_axis=2)
-            kv_len = pos + 1
-            o = ops.decode_attention(q[:, :, 0], ck, cv, kv_len=kv_len,
-                                     impl=rt.impl)
-            o = o[:, None] if o.ndim == 3 else o   # [B,1,Hq,h] fmt below
-            o = o.reshape(B, 1, cfg.n_heads, h)
+            if S == 1:                 # decode width: flash-decode kernel
+                kv_len = pos + 1
+                o = ops.decode_attention(q[:, :, 0], ck, cv, kv_len=kv_len,
+                                         impl=rt.impl)
+                o = o[:, None] if o.ndim == 3 else o   # [B,1,Hq,h] fmt below
+                o = o.reshape(B, 1, cfg.n_heads, h)
+            else:                      # prefill chunk at per-row offsets
+                o = ops.chunk_attention(q, ck, cv, pos=pos, impl=rt.impl)
+                o = o.swapaxes(1, 2)                   # [B,S,Hq,h]
             new_cache = {"k": ck, "v": cv}
         else:
             o = ops.attention(q, k, v, causal=causal and kv is None,
@@ -280,26 +301,35 @@ def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
         wk_b, wv_b = wkv_b[..., :dn], wkv_b[..., dn:]      # [r,nh,dn],[r,nh,dv]
 
         if cache is not None:
-            assert S == 1
+            # positioned chunk in LATENT space: scatter this chunk's S
+            # latent rows at per-row offsets, matrix-absorb the queries,
+            # run the decode kernel (S == 1) or the offset-causal chunk
+            # kernel (S > 1) over the single latent 'kv head'
             pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
             cc = update_cache_rows(cache["ckv"], c_kv, pos, seq_axis=1)
             cr = update_cache_rows(cache["krope"], k_rope[:, 0], pos,
                                    seq_axis=1)
-            # absorb: q_latent = q_nope @ wk_b^T  -> [B,nh,r]
-            q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+            # absorb: q_latent = q_nope @ wk_b^T  -> [B,nh,S,r]
+            q_lat = jnp.einsum("bhtd,rhd->bhtr",
+                               q_nope.swapaxes(1, 2).astype(jnp.float32),
                                wk_b.astype(jnp.float32)).astype(x.dtype)
-            q_full = jnp.concatenate([q_lat, q_rope[:, :, 0]], -1)  # [B,nh,r+dr]
-            k_full = jnp.concatenate([cc, cr], -1)[:, None]         # [B,1,S,r+dr]
+            q_full = jnp.concatenate([q_lat, q_rope], -1)   # [B,nh,S,r+dr]
+            k_full = jnp.concatenate([cc, cr], -1)[:, None]  # [B,1,Smax,r+dr]
             # v = c_kv (latent); pad to r+dr so k/v share a kernel shape
             v_lat = jnp.pad(cc, ((0, 0), (0, 0), (0, dr)))[:, None]
-            kv_len = pos + 1
             scale = (dn + dr) ** -0.5
-            o_lat = ops.decode_attention(q_full, k_full, v_lat, kv_len=kv_len,
-                                         sm_scale=scale, impl=rt.impl)
-            o_lat = o_lat[..., :r]                                  # [B,nh,r]
-            o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(jnp.float32),
+            if S == 1:
+                kv_len = pos + 1
+                o_lat = ops.decode_attention(
+                    q_full[:, :, 0], k_full, v_lat, kv_len=kv_len,
+                    sm_scale=scale, impl=rt.impl)[:, None]   # [B,1,nh,r+dr]
+            else:
+                o_lat = ops.chunk_attention(
+                    q_full, k_full, v_lat, pos=pos, sm_scale=scale,
+                    impl=rt.impl).swapaxes(1, 2)             # [B,S,nh,r+dr]
+            o_lat = o_lat[..., :r]
+            o = jnp.einsum("bthr,rhd->bthd", o_lat.astype(jnp.float32),
                            wv_b.astype(jnp.float32)).astype(x.dtype)
-            o = o[:, None]                                          # [B,1,nh,dv]
             new_cache = {"ckv": cc, "krope": cr}
         else:
             from repro.parallel.axes import shard_dims

@@ -32,7 +32,8 @@ from repro.parallel.axes import shard
 
 from .layers import (Params, Runtime, _init, attention, cross_entropy, embed,
                      init_attention, init_embed, init_lm_head, init_mlp,
-                     init_norm, lm_head, linear, mlp, norm, pdtype)
+                     init_norm, last_valid, lm_head, linear, mlp, norm,
+                     pdtype)
 
 
 # ------------------------------------------------------------ mamba block ----
@@ -72,28 +73,36 @@ def _causal_conv(x: jax.Array, w: jax.Array,
 
 
 def mamba_block(p: Params, x: jax.Array, rt: Runtime,
-                state: Optional[Params] = None, return_state: bool = False):
+                state: Optional[Params] = None, return_state: bool = False,
+                valid: Optional[jax.Array] = None):
     """x: [B, L, d] -> (y, new_state).
 
-    state None = full-sequence mode (training/prefill); return_state=True
-    additionally materializes the post-sequence (conv tail, SSD h) state so
-    prefill can hand off to decode."""
+    state None = full-sequence mode (training / fresh prefill);
+    state + L == 1 = O(1) decode recurrence; state + L > 1 = positioned
+    prefill CHUNK — the SSD scan resumes from the carried h, the causal
+    conv from the carried tail, so feeding a prompt in chunks is the same
+    recurrence as feeding it whole.  valid: [B] real-token counts of a
+    bucket-padded chunk — pad steps get dt = 0 (decay 1, zero injection:
+    state untouched) and the conv tail is gathered at each row's own
+    valid frontier.  return_state=True materializes the post-sequence
+    state so prefill can hand off to decode."""
     cfg = rt.cfg
     sp = p["ssm"]
     B, L, d = x.shape
     di, n, heads = cfg.d_inner_, cfg.ssm_state, cfg.n_ssm_heads
     ph = cfg.ssm_head_dim
+    K = cfg.conv_kernel
     with jax.named_scope("ssm"):
         h = norm(p["norm1"], x, rt)
         proj = linear(sp["in_proj"], h)
         z = proj[..., :di]
-        xbc = proj[..., di:di + di + 2 * n]
+        raw_xbc = proj[..., di:di + di + 2 * n]
         dt_raw = proj[..., -heads:]
         annotate_cost("ssm", "ssm", "in_proj",
                       flops=2.0 * B * L * d * (2 * di + 2 * n + heads))
 
         conv_state = state["conv"] if state is not None else None
-        xbc, new_conv = _causal_conv(xbc, sp["conv_w"].astype(x.dtype),
+        xbc, new_conv = _causal_conv(raw_xbc, sp["conv_w"].astype(x.dtype),
                                      conv_state)
         xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
         xs = xbc[..., :di].reshape(B, L, heads, ph)
@@ -102,17 +111,24 @@ def mamba_block(p: Params, x: jax.Array, rt: Runtime,
 
         dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
                              + sp["dt_bias"][None, None])
+        if valid is not None:
+            # pad steps must not advance the state: dt = 0 decays by
+            # exp(0) = 1 and injects 0 (the same trick ops.ssd_scan uses
+            # for its own internal chunk-multiple padding)
+            real = jnp.arange(L)[None, :, None] \
+                < jnp.asarray(valid, jnp.int32)[:, None, None]
+            dt = jnp.where(real, dt, 0.0)
         a = -jnp.exp(sp["a_log"])
 
-        if state is None:
+        if state is None or L > 1:
             y, h_final = ops.ssd_scan(xs, dt, a, b_mat, c_mat,
                                       chunk=min(cfg.ssm_chunk, L),
+                                      h0=state["h"] if state is not None
+                                      else None,
                                       impl=rt.impl)
             new_ssm = h_final
-            if return_state:
-                # conv tail must be the PRE-silu raw conv inputs
-                raw_tail = proj[..., di:di + di + 2 * n][:, -(cfg.conv_kernel - 1):]
-                conv_tail = raw_tail
+            if return_state or state is not None:
+                conv_tail = _conv_tail(raw_xbc, conv_state, K, valid)
         else:
             # single-step recurrence (decode): L == 1
             h_prev = state["h"]                           # [B, H, N, P] f32
@@ -126,6 +142,7 @@ def mamba_block(p: Params, x: jax.Array, rt: Runtime,
                            h_new)[:, None].astype(x.dtype)
             new_ssm = h_new
             y = y.reshape(B, 1, heads, ph)
+            conv_tail = new_conv
 
         y = y.astype(jnp.float32) + sp["d_skip"][None, None, :, None] \
             * xs.astype(jnp.float32)
@@ -136,13 +153,30 @@ def mamba_block(p: Params, x: jax.Array, rt: Runtime,
         out = linear(sp["out_proj"], y)
         annotate_cost("ssm", "ssm", "out_proj", flops=2.0 * B * L * di * d)
         if state is not None:
-            new_state = {"conv": new_conv.astype(state["conv"].dtype),
+            new_state = {"conv": conv_tail.astype(state["conv"].dtype),
                          "h": new_ssm}
         elif return_state:
             new_state = {"conv": conv_tail, "h": new_ssm}
         else:
             new_state = None
         return shard(out, "batch", "seq", None), new_state
+
+
+def _conv_tail(raw_xbc: jax.Array, conv_state: Optional[jax.Array], K: int,
+               valid: Optional[jax.Array]) -> jax.Array:
+    """The K-1 PRE-silu conv inputs ending at each row's valid frontier.
+
+    raw_xbc: [B, L, ch] this chunk's raw conv inputs; conv_state: the
+    previous chunk's tail (None = fresh sequence) — needed when L < K-1;
+    valid: [B] per-row real-token counts (None = L)."""
+    B, L, ch = raw_xbc.shape
+    pad = (jnp.zeros((B, K - 1, ch), raw_xbc.dtype) if conv_state is None
+           else conv_state.astype(raw_xbc.dtype))
+    xp = jnp.concatenate([pad, raw_xbc], axis=1)         # [B, K-1+L, ch]
+    if valid is None:
+        return xp[:, -(K - 1):]
+    take = lambda row, v: jax.lax.dynamic_slice_in_dim(row, v, K - 1, axis=0)
+    return jax.vmap(take)(xp, jnp.asarray(valid, jnp.int32))
 
 
 def init_mamba_state(cfg: ModelConfig, batch: int, n_layers: int,
@@ -244,70 +278,24 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     }
 
 
-def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
-            cache: Params, prefix_embeds=None):
+def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+                  cache: Params, pos: jax.Array,
+                  valid: Optional[jax.Array] = None):
+    """Positioned-chunk forward: tokens [B, T] written at per-slot offsets
+    pos [B] (scalar broadcasts); valid [B] masks a bucket-padded chunk.
+
+    The SSM stacks resume their recurrences from the carried (conv, h)
+    state — position-free, row-independent by construction — while the
+    shared attention block scatters T K/V rows at each row's own offset
+    and attends offset-causally; T = 1 is the pooled decode recurrence,
+    pos = 0 with T = prompt length is bulk prefill."""
     cfg = rt.cfg
     n_super = cfg.n_layers // cfg.attn_every
     k = cfg.attn_every
     x = embed(p, tokens, rt)
-    S = x.shape[1]
-    positions = jnp.arange(S)
-    shared = p["shared_attn"]
-    ssm0 = jax.tree.map(
-        lambda a: a.reshape((n_super, k) + a.shape[1:]), cache["ssm"])
-
-    def super_body(carry, inp):
-        x, table = carry
-        super_p, ssm_seg = inp
-
-        def inner(carry2, inp2):
-            x2, = carry2
-            layer_p, st = inp2
-            y, new_st = mamba_block(layer_p, x2, rt, return_state=True)
-            new_st = {"conv": new_st["conv"].astype(st["conv"].dtype),
-                      "h": new_st["h"]}
-            return (x2 + y,), new_st
-
-        with scan_multiplier(k):
-            (x,), new_seg = jax.lax.scan(inner, (x,), (super_p, ssm_seg))
-        h2 = norm(shared["norm1"], x, rt)
-        a, kv = attention(shared, h2, rt, positions, return_kv=True)
-        x = x + a
-        h2 = norm(shared["norm2"], x, rt)
-        x = x + mlp(shared, h2, rt)
-        return (x, table), (new_seg, kv)
-
-    with scan_multiplier(n_super):
-        (x, table), (new_ssm, kvs) = jax.lax.scan(
-            super_body, (x, table), (p["stack"]["stack"], ssm0))
-
-    x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x[:, -1:], rt)[:, 0]
-    ck = jax.lax.dynamic_update_slice(
-        cache["attn_k"], kvs["k"].astype(cache["attn_k"].dtype),
-        (0, 0, 0, 0, 0))
-    cv = jax.lax.dynamic_update_slice(
-        cache["attn_v"], kvs["v"].astype(cache["attn_v"].dtype),
-        (0, 0, 0, 0, 0))
-    new_cache = {
-        "ssm": jax.tree.map(
-            lambda a: a.reshape((n_super * k,) + a.shape[2:]), new_ssm),
-        "attn_k": ck, "attn_v": cv,
-    }
-    return logits, new_cache, table
-
-
-def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
-                cache: Params, pos: jax.Array):
-    """pos: [B] per-slot depths (scalar broadcasts) — the shared attention
-    block's KV writes/masks and rope angles are per-row; the SSM states
-    are position-free and row-independent by construction."""
-    cfg = rt.cfg
-    n_super = cfg.n_layers // cfg.attn_every
-    k = cfg.attn_every
-    x = embed(p, token[:, None], rt)
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
-    positions = pos[:, None]                     # [B, 1] per-row rope angles
+    B, T = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(T)[None, :]   # [B, T] per-row rope
     shared = p["shared_attn"]
     ssm0 = jax.tree.map(
         lambda a: a.reshape((n_super, k) + a.shape[1:]), cache["ssm"])
@@ -319,7 +307,7 @@ def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
         def inner(carry2, inp2):
             x2, = carry2
             layer_p, st = inp2
-            y, new_st = mamba_block(layer_p, x2, rt, state=st)
+            y, new_st = mamba_block(layer_p, x2, rt, state=st, valid=valid)
             return (x2 + y,), new_st
 
         with scan_multiplier(k):
@@ -334,13 +322,26 @@ def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
             (p["stack"]["stack"], ssm0, cache["attn_k"], cache["attn_v"]))
 
     x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x, rt)[:, 0]
+    logits = lm_head(p, last_valid(x, valid), rt)[:, 0]
     new_cache = {
         "ssm": jax.tree.map(
             lambda a: a.reshape((n_super * k,) + a.shape[2:]), new_ssm),
         "attn_k": nk, "attn_v": nv,
     }
     return logits, new_cache, table
+
+
+def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            cache: Params, prefix_embeds=None):
+    """Bulk prefill = forward_chunk at offset 0 with T = prompt length."""
+    zero = jnp.zeros((tokens.shape[0],), jnp.int32)
+    return forward_chunk(p, tokens, rt, table, cache, zero)
+
+
+def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
+                cache: Params, pos: jax.Array):
+    """Pooled decode = forward_chunk at width T = 1.  token: [B]."""
+    return forward_chunk(p, token[:, None], rt, table, cache, pos)
 
 
 def declare_fold_slots(spec: DeviceFoldSpec, cfg: ModelConfig) -> None:

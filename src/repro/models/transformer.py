@@ -8,8 +8,10 @@ Structure decisions that matter at scale:
     data-dependent metrics into it.
   * trace-time static costs use core.device_fold.scan_multiplier so one
     traced body registers L layers' worth of analytic FLOPs.
-  * KV caches are stacked [L, ...] pytrees scanned together with the params
-    (decode) or emitted as scan ys (prefill).
+  * KV caches are stacked [L, ...] pytrees scanned together with the params;
+    prefill and decode share ONE positioned-chunk body (forward_chunk) — a
+    chunk of T tokens lands at per-row cache offsets, T = 1 being the pooled
+    decode tick and pos = 0, T = S being bulk prefill.
 """
 
 from __future__ import annotations
@@ -27,7 +29,7 @@ from repro.parallel.axes import shard
 from . import moe as moe_lib
 from .layers import (Params, Runtime, attention, cross_entropy, embed,
                      init_attention, init_embed, init_kv_cache, init_lm_head,
-                     init_mlp, init_norm, lm_head, mlp, norm)
+                     init_mlp, init_norm, last_valid, lm_head, mlp, norm)
 
 
 # ------------------------------------------------------------ one layer ----
@@ -174,73 +176,32 @@ def _split_cache(cache: Params, boundaries) -> Tuple[Params, ...]:
     return tuple(outs)
 
 
-def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
-            cache: Params, prefix_embeds: Optional[jax.Array] = None):
-    """Run the full prompt, fill the cache, return last-token logits.
+def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+                  cache: Params, pos: jax.Array,
+                  valid: Optional[jax.Array] = None,
+                  prefix_embeds: Optional[jax.Array] = None):
+    """THE serving entry point: write a T-token chunk at per-slot offsets.
 
-    cache: stacked [L, B, ...] pytree (init_cache), written in place
-    (functionally) at positions [0, S)."""
+    tokens: [B, T]; pos: [B] int32 per-slot cache depths (scalar
+    broadcasts); valid: [B] tokens of the chunk that are real (None = T;
+    bucket-padded chunks mask the pad — pad K/V rows are written past the
+    frontier but the NEXT chunk overwrites them and no query ever attends
+    them).  Returns (last-valid-token logits [B, V], new stacked cache,
+    table).
+
+    Prefill and decode are this operation at different widths: pos = 0,
+    T = prompt length is bulk prefill; T = 1 is the pooled decode tick;
+    anything between is a mid-prompt prefill chunk.  Every batch row
+    advances independently — rope angles, row-range cache scatters and
+    offset-causal masks are all per-row — so one compiled call serves
+    slots at arbitrary mixed depths."""
     cfg = rt.cfg
     x = embed(p, tokens, rt)
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
-    S = x.shape[1]
-    positions = jnp.arange(S)
-    counts = [c for _, c in _layer_kinds(cfg)]
-    cache_segs = _split_cache(cache, counts)
-
-    new_segs = []
-    for (kind, count, stack), seg in zip(_stacks(p, cfg), cache_segs):
-        def body(carry, inp, kind=kind):
-            x, table = carry
-            layer_p, layer_cache = inp
-            h = norm(layer_p["norm1"], x, rt)
-            a, kv = attention(layer_p, h, rt, positions, return_kv=True)
-            new_cache = _place_prefill_kv(layer_cache, kv)
-            x = x + a
-            h2 = norm(layer_p["norm2"], x, rt)
-            if kind == "moe":
-                y, table, _ = moe_lib.moe(layer_p, h2, rt, table)
-            else:
-                y = mlp(layer_p, h2, rt)
-            return (x + y, table), new_cache
-
-        with scan_multiplier(count):
-            (x, table), new_seg = jax.lax.scan(body, (x, table), (stack, seg))
-        new_segs.append(new_seg)
-
-    x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x[:, -1:], rt)[:, 0]
-    new_cache = jax.tree.map(
-        lambda *segs: jnp.concatenate(segs, 0), *new_segs) \
-        if len(new_segs) > 1 else new_segs[0]
-    return logits, new_cache, table
-
-
-def _place_prefill_kv(layer_cache, kv):
-    """Place the prompt's fresh K/V (from attention(return_kv=True)) into the
-    front of this layer's cache slice."""
-    out = {}
-    for name, fresh in kv.items():
-        dst = layer_cache[name]
-        idx = (0,) * fresh.ndim
-        out[name] = jax.lax.dynamic_update_slice(
-            dst, fresh.astype(dst.dtype), idx)
-    return out
-
-
-def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
-                cache: Params, pos: jax.Array):
-    """token: [B], pos: [B] per-slot cache depths (scalar broadcasts)
-    -> (logits [B, V], new stacked cache, table).
-
-    Every batch row advances independently: rope angles, cache writes and
-    kv-length masks are all per-row, so a serving pool can decode slots
-    at arbitrary mixed positions in ONE compiled call."""
-    cfg = rt.cfg
-    x = embed(p, token[:, None], rt)
-    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
-    positions = pos[:, None]                     # [B, 1] per-row rope angles
+    B, T = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos[:, None] + jnp.arange(T)[None, :]   # [B, T] per-row rope
     counts = [c for _, c in _layer_kinds(cfg)]
     cache_segs = _split_cache(cache, counts)
 
@@ -259,11 +220,25 @@ def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
         new_segs.append(new_seg)
 
     x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x, rt)[:, 0]
+    logits = lm_head(p, last_valid(x, valid), rt)[:, 0]
     new_cache = jax.tree.map(
         lambda *segs: jnp.concatenate(segs, 0), *new_segs) \
         if len(new_segs) > 1 else new_segs[0]
     return logits, new_cache, table
+
+
+def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+            cache: Params, prefix_embeds: Optional[jax.Array] = None):
+    """Bulk prefill = forward_chunk at offset 0 with T = prompt length."""
+    zero = jnp.zeros((tokens.shape[0],), jnp.int32)
+    return forward_chunk(p, tokens, rt, table, cache, zero,
+                         prefix_embeds=prefix_embeds)
+
+
+def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
+                cache: Params, pos: jax.Array):
+    """Pooled decode = forward_chunk at width T = 1.  token: [B]."""
+    return forward_chunk(p, token[:, None], rt, table, cache, pos)
 
 
 # -------------------------------------------------------------- vlm stub ----

@@ -33,8 +33,8 @@ from repro.kernels import ops
 from repro.parallel.axes import shard
 
 from .layers import (Params, Runtime, _init, cross_entropy, embed,
-                     init_embed, init_lm_head, init_norm, lm_head, linear,
-                     norm, pdtype)
+                     init_embed, init_lm_head, init_norm, last_valid,
+                     lm_head, linear, norm, pdtype)
 
 
 # --------------------------------------------------------------- mLSTM ----
@@ -197,8 +197,14 @@ def _mlstm_cell_step(q, k, v, logf, logi, state):
 
 
 def mlstm_block(p: Params, x: jax.Array, rt: Runtime,
-                state=None, return_state: bool = False):
-    """x: [B, L, d] -> (y, new_state)."""
+                state=None, return_state: bool = False,
+                valid: Optional[jax.Array] = None):
+    """x: [B, L, d] -> (y, new_state).
+
+    valid: [B] real-token counts of a bucket-padded chunk — pad steps get
+    log f = 0 (no decay) and log i = -inf (no injection), so (C, n, m)
+    pass through them untouched: the SAME trick the chunked cell already
+    uses for its internal chunk-multiple padding."""
     cfg = rt.cfg
     mp = p["mlstm"]
     B, L, d = x.shape
@@ -212,6 +218,11 @@ def mlstm_block(p: Params, x: jax.Array, rt: Runtime,
         gates = linear(mp["w_gates"], h).astype(jnp.float32)  # [B,L,2H]
         logf = jax.nn.log_sigmoid(gates[..., :H]).swapaxes(1, 2)  # [B,H,L]
         logi = gates[..., H:].swapaxes(1, 2)
+        if valid is not None:
+            real = jnp.arange(L)[None, None, :] \
+                < jnp.asarray(valid, jnp.int32)[:, None, None]
+            logf = jnp.where(real, logf, 0.0)
+            logi = jnp.where(real, logi, -1e30)
         xh = xin.reshape(B, L, H, ph).transpose(0, 2, 1, 3)   # [B,H,L,ph]
         q = jnp.einsum("bhld,hde->bhle", xh, mp["w_q"].astype(xh.dtype))
         k = jnp.einsum("bhld,hde->bhle", xh, mp["w_k"].astype(xh.dtype)) \
@@ -266,8 +277,15 @@ def init_slstm_block(key, cfg: ModelConfig) -> Params:
     return {"norm1": init_norm(cfg), "norm2": init_norm(cfg), "slstm": p}
 
 
-def _slstm_scan(sp: Params, x: jax.Array, cfg: ModelConfig, state):
-    """x: [B, L, d]; sequential stabilized sLSTM. Returns (y, state)."""
+def _slstm_scan(sp: Params, x: jax.Array, cfg: ModelConfig, state,
+                mask: Optional[jax.Array] = None):
+    """x: [B, L, d]; sequential stabilized sLSTM. Returns (y, state).
+
+    mask: [B, L] — True on real tokens of a bucket-padded chunk; at pad
+    steps EVERY carry (c, n, m, h) passes through unchanged, so the state
+    handed to the next chunk is the one after each row's last real token
+    (the hidden-to-hidden recurrence means h itself is state here — gate
+    tricks alone can't protect it)."""
     B, L, d = x.shape
     H = cfg.n_heads
     ph = d // H
@@ -286,24 +304,33 @@ def _slstm_scan(sp: Params, x: jax.Array, cfg: ModelConfig, state):
         m_new = jnp.maximum(lf + m, it)
         i_eff = jnp.exp(it - m_new)
         f_eff = jnp.exp(lf + m - m_new)
-        c = f_eff * c + i_eff * jnp.tanh(zt)
-        n = f_eff * n + i_eff
-        hnew = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
-        return (c, n, m_new, hnew), hnew
+        c_new = f_eff * c + i_eff * jnp.tanh(zt)
+        n_new = f_eff * n + i_eff
+        hnew = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        if mask is not None:
+            mb = mask[:, t][:, None]
+            c_new = jnp.where(mb, c_new, c)
+            n_new = jnp.where(mb, n_new, n)
+            m_new = jnp.where(mb, m_new, m)
+            hnew = jnp.where(mb, hnew, hprev)
+        return (c_new, n_new, m_new, hnew), hnew
 
     (c, n, m, hlast), ys = jax.lax.scan(step, state, jnp.arange(L))
     return jnp.moveaxis(ys, 0, 1), (c, n, m, hlast)
 
 
 def slstm_block(p: Params, x: jax.Array, rt: Runtime,
-                state=None, return_state: bool = False):
+                state=None, return_state: bool = False,
+                valid: Optional[jax.Array] = None):
     cfg = rt.cfg
     sp = p["slstm"]
     B, L, d = x.shape
     with jax.named_scope("slstm"):
         h = norm(p["norm1"], x, rt)
         st = state if state is not None else init_slstm_state(cfg, B)
-        y, new_state = _slstm_scan(sp, h, cfg, st)
+        mask = None if valid is None else (
+            jnp.arange(L)[None, :] < jnp.asarray(valid, jnp.int32)[:, None])
+        y, new_state = _slstm_scan(sp, h, cfg, st, mask=mask)
         annotate_cost("slstm", "slstm", "cell",
                       flops=2.0 * B * L * (4 * d * d + 4 * d * d
                                            / max(cfg.n_heads, 1)))
@@ -396,7 +423,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None):
             "slstm": stacks(init_slstm_state(cfg, batch))}
 
 
-def _run_with_state(p, x, rt, cache, table, single_step: bool):
+def _run_with_state(p, x, rt, cache, table,
+                    valid: Optional[jax.Array] = None):
     cfg = rt.cfg
     n_super = cfg.n_layers // cfg.slstm_every
     n_m = cfg.slstm_every - 1
@@ -408,12 +436,12 @@ def _run_with_state(p, x, rt, cache, table, single_step: bool):
         def inner(c2, inp2):
             x2, = c2
             layer_p, st = inp2
-            y, new_st = mlstm_block(layer_p, x2, rt, state=st)
+            y, new_st = mlstm_block(layer_p, x2, rt, state=st, valid=valid)
             return (x2 + y,), new_st
 
         with scan_multiplier(n_m):
             (x,), new_m = jax.lax.scan(inner, (x,), (m_stack, m_state))
-        x, new_s = slstm_block(s_p, x, rt, state=s_state)
+        x, new_s = slstm_block(s_p, x, rt, state=s_state, valid=valid)
         return (x, table), (new_m, new_s)
 
     with scan_multiplier(n_super):
@@ -424,25 +452,33 @@ def _run_with_state(p, x, rt, cache, table, single_step: bool):
     return x, table, {"mlstm": new_m, "slstm": new_s}
 
 
+def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
+                  cache, pos: jax.Array, valid: Optional[jax.Array] = None):
+    """Positioned-chunk forward: tokens [B, T] continue each row's
+    recurrent state; pos [B] is accepted for API uniformity — xLSTM state
+    is recurrent and position-free, and every state update is
+    row-independent, so mixed-depth slots need no masking beyond the
+    bucket-pad `valid` counts.  T = 1 is the pooled decode recurrence;
+    a fresh cache with T = prompt length is bulk prefill."""
+    x = embed(p, tokens, rt)
+    x, table, new_cache = _run_with_state(p, x, rt, cache, table,
+                                          valid=valid)
+    x = norm(p["final_norm"], x, rt)
+    logits = lm_head(p, last_valid(x, valid), rt)[:, 0]
+    return logits, new_cache, table
+
+
 def prefill(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
             cache, prefix_embeds=None):
-    x = embed(p, tokens, rt)
-    x, table, new_cache = _run_with_state(p, x, rt, cache, table, False)
-    x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x[:, -1:], rt)[:, 0]
-    return logits, new_cache, table
+    """Bulk prefill = forward_chunk over the whole prompt (fresh state)."""
+    zero = jnp.zeros((tokens.shape[0],), jnp.int32)
+    return forward_chunk(p, tokens, rt, table, cache, zero)
 
 
 def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache, pos: jax.Array):
-    """pos: [B] per-slot depths (scalar broadcasts) — accepted for API
-    uniformity; xLSTM state is recurrent and position-free, and every
-    state update is row-independent, so per-slot decode needs no masking."""
-    x = embed(p, token[:, None], rt)
-    x, table, new_cache = _run_with_state(p, x, rt, cache, table, True)
-    x = norm(p["final_norm"], x, rt)
-    logits = lm_head(p, x, rt)[:, 0]
-    return logits, new_cache, table
+    """Pooled decode = forward_chunk at width T = 1.  token: [B]."""
+    return forward_chunk(p, token[:, None], rt, table, cache, pos)
 
 
 def declare_fold_slots(spec: DeviceFoldSpec, cfg: ModelConfig) -> None:

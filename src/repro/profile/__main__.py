@@ -9,7 +9,8 @@
     python -m repro.profile timeline  RUN_DIR [--field total_ns] [--shard S]
     python -m repro.profile calibrate INPUT... -o bands.json [--mode ring]
     python -m repro.profile diagnose  ROOT [--run GLOB] [--baseline B]
-                                      [--thresholds T] [--fail-on warn|crit]
+                                      [--thresholds T] [--detector-config C]
+                                      [--fail-on warn|crit]
 
 `report` reduces every given shard/dir into one profile and renders the
 paper's component/API views + flow matrix.  `merge` persists that reduction.
@@ -22,7 +23,9 @@ composes in shell pipelines).  `gc` applies a retention policy offline;
 one run's sequence-numbered snapshots.  `calibrate` fits per-edge noise
 bands from baseline profiles (or ring intervals) into a thresholds JSON;
 `diagnose` runs the cross-flow detectors (repro.analysis) over a run and
-exits 1 when findings reach `--fail-on` severity.
+exits 1 when findings reach `--fail-on` severity; `--detector-config`
+loads per-detector constructor parameters from JSON so projects tune
+thresholds without code (unknown keys exit 2).
 """
 
 from __future__ import annotations
@@ -242,11 +245,13 @@ def _cmd_diagnose(args: argparse.Namespace) -> int:
     from ..analysis import diagnose
     try:
         diag = diagnose(args.root, run=args.run, baseline=args.baseline,
-                        thresholds_path=args.thresholds)
+                        thresholds_path=args.thresholds,
+                        detector_config=args.detector_config)
     except (FileNotFoundError, LookupError, ValueError) as e:
         # bad inputs (missing run, ambiguous --run, corrupt/unsupported
-        # --thresholds json) are usage errors: exit 2, never 1 — exit 1
-        # is reserved for real findings under --fail-on
+        # --thresholds json, unknown --detector-config keys) are usage
+        # errors: exit 2, never 1 — exit 1 is reserved for real findings
+        # under --fail-on
         print(f"diagnose: {e}", file=sys.stderr)
         return 2
     if args.json:
@@ -370,6 +375,11 @@ def main(argv=None) -> int:
     dia.add_argument("--thresholds", metavar="BANDS_JSON",
                      help="calibrated noise bands; detectors use them as "
                           "per-edge noise floors")
+    dia.add_argument("--detector-config", metavar="CONFIG_JSON",
+                     help="per-detector constructor parameters, e.g. "
+                          '{"wait-dominance": {"warn_share": 0.5}} — '
+                          "tune thresholds without code; unknown detector "
+                          "names or parameters exit 2")
     dia.add_argument("--fail-on", choices=("none", "warn", "crit"),
                      default="none",
                      help="exit 1 when any finding is at/above this "

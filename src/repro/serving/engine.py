@@ -2,21 +2,26 @@
 
 Layering of this package:
 
-    scheduler.py  admission — FCFS queue -> free slots under a per-tick
-                  chunked-prefill token budget
+    scheduler.py  admission + prefill planning — FCFS queue -> free slots
+                  and continuation chunks under a per-tick prefill budget
     sampling.py   per-request sampling params as per-slot vectors, ONE
                   jitted pooled sampler (greedy/temperature/top-k/top-p)
-    engine.py     the slot pool + compiled per-slot-position decode tick,
-                  the background serving thread, and the client handles
+    engine.py     the slot pool + compiled positioned-chunk forward, the
+                  background serving thread, and the client handles
 
-Decode runs ONE compiled decode_step per tick over the whole pool with a
-per-slot position vector `pos: [B] int32` — every slot's KV/state row
-advances independently (rope angles, cache writes and kv-length masks
-are per-row in the model layer), so mixed-length requests admitted at
-staggered ticks decode at their own depths: true iteration-level
-batching with zero recompilation as requests come and go.  Prompt tails
-beyond `prefill_chunk` are merged into the decode stream one token per
-tick (host-chunked prefill).
+EVERY model step is one `forward_chunk` — a T-token chunk written at
+per-slot cache offsets: admission bulk prefill, mid-prompt continuation
+chunks and the pooled decode tick are the same operation at different
+widths (the model layer's rope angles, row-range cache scatters and
+offset-causal masks are all per-row).  A prompt longer than
+`prefill_chunk` advances chunk-by-chunk through its OWN batch=1 cache
+stash — each chunk a single compiled call, in-model, never one token per
+tick — and scatters into the pool when complete; decode then runs ONE
+compiled width-1 chunk over the whole pool at per-slot positions: true
+iteration-level batching with zero recompilation as requests come and
+go.  Chunk widths round up to power-of-two buckets (pad masked in-model
+via `valid`), so the set of compiled prefill programs is
+O(log max_seq_len), not one per distinct prompt length.
 
 Client API: `submit()` returns a Request handle immediately; tokens
 stream through an optional `on_token` callback and `handle.result()`
@@ -25,11 +30,13 @@ thread (open-loop serving); without it, `run_until_drained()` drives the
 same loop synchronously (closed-loop benchmarks, tests).
 
 XFA instrumentation ('serve'): prefill_request and decode_tick are
-traced boundaries; queue_wait (Wait kind), ttft, decode_token and e2e
-latency phases fold via tracer.record_duration; truncated_prompt is a
-count event.  Shards land in the profile store exactly like trainer
-shards — `repro.profile query --kind serve`, report/diff/timeline all
-apply to serving runs natively.
+traced boundaries and every chunk step folds a `prefill_chunk` duration,
+so the flow graph separates prefill cost from decode cost per tick;
+queue_wait (Wait kind), ttft, decode_token and e2e latency phases fold
+via tracer.record_duration; truncated_prompt is a count event.  Shards
+land in the profile store exactly like trainer shards —
+`repro.profile query --kind serve`, report/diff/timeline all apply to
+serving runs natively.
 """
 
 from __future__ import annotations
@@ -132,6 +139,11 @@ class ServingEngine:
         self.table = model.table()
         self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
         self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+        # one compiled program per CHUNK WIDTH (bucketed powers of two);
+        # _chunk_widths tracks the issued set — tests assert it stays
+        # bounded regardless of how many distinct prompt lengths arrive
+        self._chunk = jax.jit(model.forward_chunk, donate_argnums=(3,))
+        self._chunk_widths: set = set()
         self._uid = 0
         self.completed: List[Request] = []
         self._lock = threading.RLock()
@@ -249,11 +261,90 @@ class ServingEngine:
         return True
 
     # -- engine internals ---------------------------------------------------
+    def chunk_buckets(self) -> list:
+        """Every chunk width this engine schedules under bucketing — the
+        warmup surface for benchmarks (compile these outside any timed
+        window).  End-of-row chunks may additionally bucket DOWN to
+        smaller powers of two; all widths stay powers of two, so the
+        compiled-program count is O(log) regardless of prompt lengths."""
+        scfg = self.scfg
+        if not scfg.bucket_chunks:
+            return []                  # unbounded: one program per length
+        out, w = [], max(scfg.min_chunk_bucket, 1)
+        top = max(scfg.prefill_chunk or 1, scfg.tail_chunk or 1)
+        while w < top:
+            out.append(w)
+            w *= 2
+        out.append(w)
+        return out
+
+    @property
+    def chunk_widths(self) -> frozenset:
+        """Chunk widths compiled so far (tests assert this stays bounded
+        no matter how many distinct prompt lengths arrive)."""
+        return frozenset(self._chunk_widths)
+
+    def _chunk_width(self, n: int, pos: int) -> int:
+        """Compiled width for a chunk of <= n tokens starting at cache
+        offset `pos`: the next power-of-two bucket (>= min_chunk_bucket),
+        bucketed DOWN while a padded write would run past the row end (a
+        clamped scatter would shift garbage onto valid entries).  May
+        return less than n — the caller then consumes fewer tokens and
+        leaves the rest pending, keeping every width a power of two: the
+        compiled-program set stays O(log) even for non-power-of-two
+        max_seq_len rows."""
+        scfg = self.scfg
+        if not scfg.bucket_chunks:
+            return n
+        w = max(scfg.min_chunk_bucket, 1)
+        while w < n:
+            w *= 2
+        room = scfg.max_seq_len - pos          # >= n: the engine clamps
+        while w > room and w > 1:
+            w //= 2
+        return w
+
+    def _prefill_chunk(self, slot_idx: int, n: int) -> None:
+        """One positioned prefill chunk: advance slot `slot_idx`'s prompt
+        by its next n tokens through a single forward_chunk at the slot's
+        cache offset (bucket-padded width, pad masked in-model).  When
+        the prompt completes, the batch=1 stash scatters into the pool
+        and the FIRST token samples from this chunk's last-valid logits —
+        the TTFT win over the old one-token-per-tick tail feed."""
+        slot = self.scheduler.slots[slot_idx]
+        width = self._chunk_width(n, slot.pos)
+        n = min(n, width)      # end-of-row chunks bucket DOWN: take fewer
+        toks = [slot.pending.popleft() for _ in range(n)]
+        padded = np.zeros((1, width), np.int32)
+        padded[0, :n] = toks
+        t0 = time.perf_counter_ns()
+        logits, slot.stash, self.table = self._chunk(
+            self.params, jnp.asarray(padded), self.table, slot.stash,
+            jnp.asarray([slot.pos], jnp.int32), jnp.asarray([n], jnp.int32))
+        # sync before the end timestamp: jitted calls return unready
+        # arrays, and mid-prompt chunks have no downstream host read to
+        # block on — without this the fold times dispatch, not compute
+        jax.block_until_ready(logits)
+        # its own flow-graph edge: diagnose separates prefill interference
+        # from decode cost per tick (wait-dominance / hot-edge detectors)
+        xfa.record_duration("serve", "prefill_chunk",
+                            time.perf_counter_ns() - t0)
+        self._chunk_widths.add(width)
+        slot.pos += n
+        if not slot.pending:
+            self.cache = _scatter_slot(self.cache, slot.stash, slot_idx)
+            slot.stash = None
+            # the first token is EOS-checked — a first-token EOS finishes
+            # without any decode ticks instead of burning max_new - 1
+            tok = self.sampler.sample_one(
+                np.asarray(logits[0]), slot.request.sampling, step=slot.pos)
+            self._emit(slot_idx, tok, time.monotonic())
+
     @xfa.api("serve", "prefill_request")
     def _admit(self, slot_idx: int, req: Request) -> None:
-        """Bulk-prefill up to prefill_chunk tokens of `req` into slot
-        `slot_idx`'s cache rows; the prompt tail (if any) is left pending
-        for the decode stream."""
+        """Bind `req` to slot `slot_idx` and run its first prefill chunk
+        (up to prefill_chunk tokens) into a fresh batch=1 stash; the
+        remainder advances chunk-by-chunk on subsequent ticks."""
         model, scfg = self.model, self.scfg
         now = time.monotonic()
         req.admitted_at = now
@@ -276,43 +367,23 @@ class ServingEngine:
             req.max_new_tokens = cap
             req.truncated = True
             xfa.count_event("serve", "clamped_max_new")
-        chunk = self.scheduler.admit_cost(req)
-        head, tail = prompt[:chunk], prompt[chunk:]
-        # single-slot prefill: run the chunk at batch=1 and scatter the
-        # resulting rows into the pool cache at slot_idx
-        tiny_cache = model.init_cache(1, scfg.max_seq_len)
-        batch = {"tokens": jnp.asarray(head[None])}
-        logits, tiny_cache, self.table = model.prefill(
-            self.params, batch, self.table, tiny_cache)
-        self.cache = _scatter_slot(self.cache, tiny_cache, slot_idx)
-        self.scheduler.bind(slot_idx, req, pos=len(head), pending=tail)
+        self.scheduler.bind(slot_idx, req, pos=0, pending=prompt,
+                            stash=model.init_cache(1, scfg.max_seq_len))
         self.sampler.bind(slot_idx, req.sampling)
-        if len(tail) == 0:
-            # whole prompt prefilled: the first token samples NOW (and is
-            # EOS-checked — a first-token EOS finishes without any decode
-            # ticks instead of burning max_new_tokens - 1 of them)
-            tok = self.sampler.sample_one(np.asarray(logits[0]),
-                                          req.sampling, step=len(head))
-            self._emit(slot_idx, tok, time.monotonic())
+        self._prefill_chunk(slot_idx, self.scheduler.admit_cost(req))
 
     @xfa.api("serve", "decode_tick")
     def _tick(self) -> int:
-        """One pooled decode step at per-slot positions; returns #active."""
+        """One pooled width-1 forward_chunk at per-slot positions over the
+        slots past prefill; returns #decoding."""
         slots = self.scheduler.slots
-        active = self.scheduler.active()
+        active = self.scheduler.decoding()
         if not active:
             return 0
         tokens = np.zeros((self.scfg.max_batch,), np.int32)
         pos = self.scheduler.pos_vector()
-        feeding = {}           # idx -> prompt tokens REMAIN after this tick
         for i in active:
-            s = slots[i]
-            if s.pending:
-                tokens[i] = s.pending.popleft()
-                feeding[i] = bool(s.pending)
-            else:
-                tokens[i] = s.request.output[-1]
-                feeding[i] = False
+            tokens[i] = slots[i].request.output[-1]
         t0 = time.perf_counter_ns()
         logits, self.cache, self.table = self._decode(
             self.params, jnp.asarray(tokens), self.table, self.cache,
@@ -320,16 +391,12 @@ class ServingEngine:
         nxt = self.sampler(logits, step=pos + 1)
         tick_ns = time.perf_counter_ns() - t0
         now = time.monotonic()
-        emitted = 0
         for i in active:
             slots[i].pos += 1
-            if feeding[i]:     # mid-prompt: the sampled token is discarded
-                continue
-            emitted += 1
             self._emit(i, int(nxt[i]), now)
-        if emitted:
+        if active:
             xfa.record_duration("serve", "decode_token",
-                                tick_ns / emitted, n=emitted)
+                                tick_ns / len(active), n=len(active))
         return len(active)
 
     def _emit(self, slot_idx: int, tok: int, now: float) -> None:
@@ -360,8 +427,10 @@ class ServingEngine:
         req._done_event.set()
 
     def step(self) -> int:
-        """One engine iteration: admit under the budget, then one pooled
-        decode tick.  Returns the number of active slots ticked.
+        """One engine iteration: continuation prefill chunks for
+        mid-prompt slots (oldest first), admissions under the leftover
+        budget, then one pooled decode tick.  Returns the number of
+        slots still active afterwards.
 
         Failure handling lives HERE, not in the background loop, so the
         synchronous (closed-loop) driver gets the same guarantee: an
@@ -375,7 +444,14 @@ class ServingEngine:
                 # admission is structurally behind the arrival rate)
                 xfa.record_gauge("serve", "queue_depth",
                                  len(self.scheduler.waiting))
-                picked = self.scheduler.schedule()
+                cont, deferred = self.scheduler.continuation_plan()
+                for idx, n in cont:
+                    self._prefill_chunk(idx, n)
+                # strict FCFS: if any mid-prefill slot (older than every
+                # waiting request) was deferred by the budget, nothing
+                # younger may spend the leftover this tick
+                picked = [] if deferred else self.scheduler.schedule(
+                    spent=sum(n for _, n in cont))
                 for k, (idx, req) in enumerate(picked):
                     try:
                         self._admit(idx, req)
@@ -391,13 +467,13 @@ class ServingEngine:
                         for _, later in reversed(picked[k + 1:]):
                             self.scheduler.waiting.appendleft(later)
                         raise
-                n = self._tick()
+                self._tick()
                 self._ticks += 1
                 interval = self.scfg.profile_interval_ticks
                 if self._profile_store is not None and interval \
                         and self._ticks % interval == 0:
                     self.write_profile_shard()
-                return n
+                return len(self.scheduler.active())
             except Exception as e:      # noqa: BLE001 — fail loud AND clean
                 self._fail_outstanding(e)
                 raise

@@ -3,26 +3,30 @@
 The scheduler owns the WAITING side of continuous batching: the FCFS
 queue of submitted requests, the fixed slot pool's occupancy bookkeeping
 (which request holds which cache row, at what depth, with how much
-prompt left to feed), and the per-tick admission decision.
+prompt left to feed), and the per-tick prefill plan.
 
 Admission is iteration-level (vLLM-style): any tick with free slots may
 admit, bounded by a chunked-prefill token budget so a burst of long
 prompts cannot stall slots that are already decoding (Sarathi-style
-prefill/decode interference control).  A prompt is bulk-prefilled only
-up to `prefill_chunk` tokens; the tail is fed through the pooled decode
-stream one token per tick — each slot's cache row advances at its own
-position — which keeps admission cost O(chunk) instead of O(prompt).
+prefill/decode interference control).  Prefill is IN-MODEL chunked: the
+admission chunk and every continuation chunk of a longer prompt's tail
+run through the same positioned `forward_chunk` step at the slot's cache
+offset, up to `prefill_chunk` (continuations: `tail_chunk`) tokens per
+step — one code path from first prompt token to pooled decode.
 
-Fairness: strict FCFS.  The budget never reorders the queue, and the
-head-of-line request always fits once a slot is free, so one huge prompt
-is delayed (by the budget) but never starved.
+Fairness: strict FCFS.  Continuation chunks belong to requests admitted
+BEFORE anything still waiting, so each tick plans continuations first
+(oldest admission first), then admissions with whatever budget remains.
+The budget never reorders the queue, and the first prefill step of a
+tick always fits, so one huge prompt is delayed (by the budget) but
+never starved — and neither is a long tail mid-prefill.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Any, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,6 +39,8 @@ class Slot:
     request: Optional[object] = None   # serving.engine.Request (duck-typed)
     pos: int = 0                       # next cache position to write
     pending: Deque[int] = dataclasses.field(default_factory=deque)
+    seq: int = 0                       # admission order (continuation FCFS)
+    stash: Any = None                  # batch=1 cache pytree while prefilling
 
     @property
     def free(self) -> bool:
@@ -42,17 +48,18 @@ class Slot:
 
     @property
     def prefilling(self) -> bool:
-        """Still feeding prompt-tail tokens through the decode stream."""
+        """Still owed prompt chunks (not yet in the pooled decode)."""
         return self.request is not None and bool(self.pending)
 
 
 class Scheduler:
-    """Iteration-level admission control over a fixed slot pool."""
+    """Iteration-level admission + chunk planning over a fixed slot pool."""
 
     def __init__(self, scfg: ServeConfig) -> None:
         self.scfg = scfg
         self.waiting: Deque = deque()
         self.slots: List[Slot] = [Slot() for _ in range(scfg.max_batch)]
+        self._admit_seq = 0
 
     # -- queue side ---------------------------------------------------------
     def add(self, req) -> None:
@@ -68,11 +75,21 @@ class Scheduler:
     def active(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.request is not None]
 
+    def decoding(self) -> List[int]:
+        """Slots past prefill: they join the pooled decode tick."""
+        return [i for i, s in enumerate(self.slots)
+                if s.request is not None and not s.pending]
+
+    def prefilling_slots(self) -> List[int]:
+        """Slots owed continuation chunks, oldest admission first."""
+        out = [i for i, s in enumerate(self.slots) if s.prefilling]
+        return sorted(out, key=lambda i: self.slots[i].seq)
+
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.free]
 
     def admit_cost(self, req) -> int:
-        """Bulk-prefill tokens this admission will actually consume —
+        """Prefill tokens the ADMISSION chunk will actually consume —
         after the engine's truncation to fit the cache row (charging the
         raw prompt length would overbill truncated requests and block
         cheap neighbours for no real work)."""
@@ -82,26 +99,62 @@ class Scheduler:
         chunk = self.scfg.prefill_chunk or plen
         return max(1, min(plen, chunk))
 
-    def schedule(self) -> List[Tuple[int, object]]:
+    @property
+    def tail_chunk(self) -> int:
+        """Continuation chunk width (tokens per forward_chunk step)."""
+        return self.scfg.tail_chunk or self.scfg.prefill_chunk or 1
+
+    def continuation_plan(self) -> Tuple[List[Tuple[int, int]], bool]:
+        """((slot_idx, n_tokens) continuation chunks for this tick,
+        deferred?): every mid-prefill slot advances by up to `tail_chunk`
+        tokens, oldest admission first, under the per-tick prefill token
+        budget.  The first chunk of the tick always fits (a long tail can
+        be slowed by the budget, never starved); an oversized chunk is
+        skipped, not a barrier, so smaller chunks of LATER-admitted
+        (but still older-than-any-waiting) slots may consume the
+        leftover.  `deferred` reports whether any mid-prefill slot got
+        nothing — admissions must then wait a tick (every mid-prefill
+        request predates everything in the waiting queue)."""
+        budget = self.scfg.prefill_budget_tokens
+        out: List[Tuple[int, int]] = []
+        spent = 0
+        deferred = False
+        for idx in self.prefilling_slots():
+            n = min(len(self.slots[idx].pending), self.tail_chunk)
+            if out and budget and spent + n > budget:
+                deferred = True
+                continue
+            out.append((idx, n))
+            spent += n
+        return out, deferred
+
+    def schedule(self, spent: int = 0) -> List[Tuple[int, object]]:
         """Admissions for this tick: FCFS into free slots under the
-        prefill token budget.  The first admission of a tick always fits
-        regardless of its cost (no starvation of long prompts)."""
+        prefill token budget.  `spent` is what this tick's continuation
+        chunks already consumed — waiting requests arrived after every
+        mid-prefill request, so they only see the leftover budget.  The
+        first prefill step of a tick (spent == 0, nothing admitted yet)
+        always fits regardless of cost (no starvation of long prompts)."""
         budget = self.scfg.prefill_budget_tokens
         out: List[Tuple[int, object]] = []
-        spent = 0
         free = self.free_slots()
         while free and self.waiting:
             cost = self.admit_cost(self.waiting[0])
-            if out and budget and spent + cost > budget:
+            if (out or spent) and budget and spent + cost > budget:
                 break
             out.append((free.pop(0), self.waiting.popleft()))
             spent += cost
         return out
 
-    def bind(self, idx: int, req, pos: int, pending) -> None:
+    def bind(self, idx: int, req, pos: int, pending, stash: Any = None
+             ) -> None:
         """Occupy slot `idx`: cache holds `pos` tokens, `pending` is the
-        unprefilled prompt tail to merge into the decode stream."""
-        self.slots[idx] = Slot(request=req, pos=pos, pending=deque(pending))
+        not-yet-prefilled prompt remainder (fed through forward_chunk
+        steps), `stash` the batch=1 cache being filled until the prompt
+        completes and scatters into the pool."""
+        self._admit_seq += 1
+        self.slots[idx] = Slot(request=req, pos=pos, pending=deque(pending),
+                               seq=self._admit_seq, stash=stash)
 
     def release(self, idx: int) -> None:
         self.slots[idx] = Slot()

@@ -318,8 +318,83 @@ class TestDetectorFramework:
         assert [f.to_json() for f in fs] == [f.to_json() for f in again]
 
     def test_builtin_overrides_reject_nothing_silently(self):
-        with pytest.raises(TypeError):
+        """Unknown detector names AND unknown constructor params raise
+        ValueError (the CLI maps it to exit 2) — a misspelled threshold
+        must never be silently ignored."""
+        with pytest.raises(ValueError, match="unknown parameter"):
             builtin_detectors(wait_dominance={"nope": 1})
+        with pytest.raises(ValueError, match="unknown detector"):
+            builtin_detectors(wait_dominanse={"warn_share": 0.5})
+        # 'name' is not tunable (renaming would break the override map)
+        with pytest.raises(ValueError, match="unknown parameter"):
+            builtin_detectors(hot_edge={"name": "other"})
+
+
+class TestDetectorConfig:
+    """`diagnose --detector-config` — the file surface for detector
+    constructor parameters (tune thresholds without code)."""
+
+    @staticmethod
+    def _wait_heavy(root):
+        return write_ring(root, [FoldedTable({
+            ("app", "runtime", "sync"): edge(10, 500 * MS, kind=KIND_WAIT),
+            ("app", "runtime", "dispatch"): edge(10, 500 * MS),
+        })])
+
+    def test_load_and_apply_changes_severity(self, tmp_path):
+        run = self._wait_heavy(tmp_path)
+        base = diagnose(run)
+        assert [f.detector for f in base.findings] == ["wait-dominance"]
+        assert base.findings[0].severity == "warn"      # 50% share
+        cfgf = tmp_path / "det.json"
+        cfgf.write_text(json.dumps({"wait-dominance": {"crit_share": 0.4}}))
+        tuned = diagnose(run, detector_config=str(cfgf))
+        assert tuned.findings[0].severity == "crit"
+        assert tuned.detector_config_path == str(cfgf)
+        assert tuned.to_json()["detector_config"] == str(cfgf)
+        relaxed = tmp_path / "relaxed.json"
+        relaxed.write_text(json.dumps(
+            {"wait_dominance": {"warn_share": 0.9}}))  # '_' normalizes too
+        assert diagnose(run, detector_config=str(relaxed)).findings == []
+
+    def test_structural_and_key_errors_raise_value_error(self, tmp_path):
+        from repro.analysis import load_detector_config
+        run = write_ring(tmp_path, [healthy_table()])
+        notdict = tmp_path / "list.json"
+        notdict.write_text("[1, 2]")
+        with pytest.raises(ValueError, match="JSON object"):
+            load_detector_config(str(notdict))
+        scalar = tmp_path / "scalar.json"
+        scalar.write_text(json.dumps({"wait-dominance": 0.5}))
+        with pytest.raises(ValueError, match="JSON object"):
+            load_detector_config(str(scalar))
+        unknown = tmp_path / "unknown.json"
+        unknown.write_text(json.dumps({"wait-dominance": {"bogus": 1}}))
+        with pytest.raises(ValueError, match="unknown parameter"):
+            diagnose(run, detector_config=str(unknown))
+
+    def test_programmatic_overrides_win_over_file(self, tmp_path):
+        run = self._wait_heavy(tmp_path)
+        cfgf = tmp_path / "det.json"
+        cfgf.write_text(json.dumps({"wait-dominance": {"warn_share": 0.9}}))
+        d = diagnose(run, detector_config=str(cfgf),
+                     overrides={"wait-dominance": {"warn_share": 0.3}})
+        assert [f.detector for f in d.findings] == ["wait-dominance"]
+
+    def test_merge_normalizes_dash_underscore_spellings(self, tmp_path):
+        """A file's 'wait-dominance' and a caller's 'wait_dominance' are
+        the SAME detector: their kwargs must merge key-by-key, not
+        survive as two entries of which only one wins."""
+        run = self._wait_heavy(tmp_path)           # 50% wait share
+        cfgf = tmp_path / "det.json"
+        cfgf.write_text(json.dumps({"wait-dominance": {"warn_share": 0.6}}))
+        # file alone silences the 50%-share warn
+        assert diagnose(run, detector_config=str(cfgf)).findings == []
+        # an underscore-spelled override of a DIFFERENT param must not
+        # drop the file's warn_share back to its 0.4 default
+        d = diagnose(run, detector_config=str(cfgf),
+                     overrides={"wait_dominance": {"crit_share": 0.95}})
+        assert d.findings == []
 
 
 # ----------------------------------------------------------- calibration ----

@@ -96,6 +96,67 @@ def test_decode_attention_pallas(shape, dtype):
                                atol=tol(dtype), rtol=tol(dtype))
 
 
+# ---------------------------------------------------------- chunk attention --
+CHUNK_SHAPES = [
+    # B, Hq, Hkv, T, S, D
+    (1, 1, 1, 4, 128, 32),
+    (2, 4, 2, 8, 256, 64),
+    (2, 8, 1, 16, 512, 32),    # MQA, multi-block cache
+]
+
+
+@pytest.mark.parametrize("shape", CHUNK_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_attention_pallas(shape, dtype):
+    """Offset-causal positioned-chunk kernel vs the oracle at mixed
+    per-row offsets (each row's chunk lands at its own cache depth)."""
+    B, Hq, Hkv, T, S, D = shape
+    q = arr(B, Hq, T, D, dtype=dtype)
+    k, v = arr(B, Hkv, S, D, dtype=dtype), arr(B, Hkv, S, D, dtype=dtype)
+    pos = jnp.asarray(RNG.integers(0, S - T + 1, B), jnp.int32)
+    got = ops.chunk_attention(q, k, v, pos=pos, impl="pallas",
+                              interpret=True)
+    want = ref.chunk_attention(q, k, v, pos=pos)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_chunk_attention_width1_is_decode():
+    """T == 1 at offset pos must match decode attention with
+    kv_len = pos + 1 — prefill and decode are one operation."""
+    B, Hq, Hkv, S, D = 2, 4, 2, 128, 32
+    q = arr(B, Hq, 1, D)
+    k, v = arr(B, Hkv, S, D), arr(B, Hkv, S, D)
+    pos = jnp.asarray([5, 77], jnp.int32)
+    chunk = ref.chunk_attention(q, k, v, pos=pos)
+    dec = ref.decode_attention(q[:, :, 0], k, v, kv_len=pos + 1)
+    np.testing.assert_allclose(chunk[:, :, 0], dec, atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_attention_blocked_matches_oracle():
+    q, k, v = arr(2, 4, 8, 32), arr(2, 2, 256, 32), arr(2, 2, 256, 32)
+    pos = jnp.asarray([3, 200], jnp.int32)
+    got = ref.chunk_attention_blocked(q, k, v, pos=pos, block_k=64)
+    want = ref.chunk_attention(q, k, v, pos=pos)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_chunk_attention_ignores_stale_cache_past_frontier():
+    """Columns beyond pos + t must get exactly-zero mass: poisoning them
+    with huge values may not change the output (a serving slot's row
+    holds a neighbour request's stale K/V past its own frontier)."""
+    B, Hq, Hkv, T, S, D = 1, 2, 2, 4, 64, 16
+    q = arr(B, Hq, T, D)
+    k, v = arr(B, Hkv, S, D), arr(B, Hkv, S, D)
+    pos = jnp.asarray([10], jnp.int32)
+    clean = ref.chunk_attention(q, k, v, pos=pos)
+    k_bad = k.at[:, :, 20:].set(1e4)
+    v_bad = v.at[:, :, 20:].set(-1e4)
+    poisoned = ref.chunk_attention(q, k_bad, v_bad, pos=pos)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(poisoned))
+
+
 def test_decode_attention_residuals_combine():
     """Split-K: shard the KV, merge partials == unsharded decode."""
     B, Hq, Hkv, S, D = 2, 4, 2, 256, 32
@@ -196,5 +257,27 @@ def test_ssd_state_handoff():
                                 c[:, :32], chunk=16)
     y2, h2 = ref.ssd_naive(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
                            h0=h_half)
+    np.testing.assert_allclose(y_full[:, 32:], y2, atol=2e-5, rtol=2e-4)
+    np.testing.assert_allclose(h_full, h2, atol=2e-5, rtol=2e-4)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_ssd_h0_resume_matches_full_run(impl):
+    """ops.ssd_scan(h0=...) — the chunked-prefill resume path — run over
+    two half-prompts equals one full-prompt scan, for both the oracle and
+    the Pallas kernel (interpret mode)."""
+    B, L, H, P, N = 2, 64, 2, 16, 8
+    x = arr(B, L, H, P)
+    dt = jnp.abs(arr(B, L, H)) * 0.1
+    a = -jnp.abs(arr(H))
+    b, c = arr(B, L, N), arr(B, L, N)
+    kw = dict(chunk=16, impl=impl)
+    if impl == "pallas":
+        kw["interpret"] = True
+    y_full, h_full = ops.ssd_scan(x, dt, a, b, c, **kw)
+    y1, h1 = ops.ssd_scan(x[:, :32], dt[:, :32], a, b[:, :32], c[:, :32],
+                          **kw)
+    y2, h2 = ops.ssd_scan(x[:, 32:], dt[:, 32:], a, b[:, 32:], c[:, 32:],
+                          h0=h1, **kw)
     np.testing.assert_allclose(y_full[:, 32:], y2, atol=2e-5, rtol=2e-4)
     np.testing.assert_allclose(h_full, h2, atol=2e-5, rtol=2e-4)

@@ -103,6 +103,42 @@ def test_prefill_decode_matches_forward(arch):
                                np.asarray(full[:, 32]), atol=2e-3, rtol=1e-3)
 
 
+@pytest.mark.parametrize("arch", ["seamless_m4t_large_v2", "internvl2_1b"])
+def test_multimodal_chunked_prefill_matches_bulk(arch):
+    """forward_chunk continuation == bulk prefill for the families the
+    token-prompt engine can't serve: the multimodal prefix (audio frames /
+    vlm patches) rides the pos=0 chunk via the prefill wrapper, later
+    chunks continue token-only at the cache offset — including a
+    bucket-padded chunk whose pad is masked via `valid`."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg, impl="ref")
+    params = model.init(jax.random.key(0))
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S)
+    tok = batch["tokens"][:, :24]
+    src = {"src_len": S} if cfg.family == "audio" else {}
+    prefix = cfg.n_patches if cfg.family == "vlm" else 0
+
+    bulk = dict(batch)
+    bulk["tokens"] = tok
+    logits_bulk, _, _ = model.prefill(params, bulk, model.table(),
+                                      model.init_cache(B, 96, **src))
+
+    head = dict(batch)
+    head["tokens"] = tok[:, :10]
+    cache = model.init_cache(B, 96, **src)
+    _, cache, table = model.prefill(params, head, model.table(), cache)
+    # 14-token continuation bucket-padded to 16, valid = 14
+    padded = jnp.zeros((B, 16), jnp.int32).at[:, :14].set(tok[:, 10:24])
+    logits_chunk, _, _ = model.forward_chunk(
+        params, padded, table, cache,
+        jnp.full((B,), prefix + 10, jnp.int32), jnp.full((B,), 14,
+                                                         jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_chunk),
+                               np.asarray(logits_bulk),
+                               atol=2e-3, rtol=1e-3)
+
+
 def test_decode_is_causal_wrt_future():
     """Changing tokens after position p must not change decode at p."""
     cfg = get_smoke("tinyllama_1_1b")

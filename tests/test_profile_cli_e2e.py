@@ -361,6 +361,32 @@ class TestDiagnoseCLI:
         assert p.returncode == 2
         assert "schema" in p.stderr
 
+    def test_detector_config_tunes_and_rejects(self, tmp_path):
+        """--detector-config is the no-code tuning surface: valid files
+        change detector behavior; unknown detector names or parameters
+        are usage errors (exit 2), per the CLI contract."""
+        run = self._bad_run(tmp_path)
+        # default: 90% wait share -> crit -> exit 1 under --fail-on crit
+        assert run_cli("diagnose", run, "--fail-on", "crit").returncode == 1
+        relaxed = tmp_path / "relaxed.json"
+        relaxed.write_text(json.dumps(
+            {"wait-dominance": {"warn_share": 0.95, "crit_share": 0.99}}))
+        p = run_cli("diagnose", run, "--fail-on", "crit",
+                    "--detector-config", relaxed)
+        assert p.returncode == 0, p.stdout + p.stderr
+        assert "detector-config" in p.stdout
+        for bad in ({"wait-dominance": {"bogus": 1}},
+                    {"not-a-detector": {"warn_share": 0.5}}):
+            f = tmp_path / "bad.json"
+            f.write_text(json.dumps(bad))
+            p = run_cli("diagnose", run, "--detector-config", f)
+            assert p.returncode == 2, p.stdout + p.stderr
+            assert "diagnose:" in p.stderr
+        notjson = tmp_path / "corrupt.json"
+        notjson.write_text("{nope")
+        assert run_cli("diagnose", run, "--detector-config",
+                       notjson).returncode == 2
+
     def test_json_contract(self, tmp_path):
         run = self._bad_run(tmp_path)
         p = run_cli("diagnose", run, "--json", "--fail-on", "crit")

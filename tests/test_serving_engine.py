@@ -2,14 +2,19 @@
 
 The load-bearing invariant: mixed-length prompts admitted at STAGGERED
 ticks into the pooled engine must produce TOKEN-IDENTICAL outputs to
-per-request sequential decode — which only holds if every slot decodes
-at its own position (per-slot `pos: [B]`: rope angles, cache writes and
-kv-length masks all per-row).  Covered for every model family the
-engine serves (dense, moe/mla, hybrid, ssm; vlm and audio prompts need
-patches/frames at submit, which the token-prompt client API doesn't
-carry).  Plus the scheduler (admission budget, chunked prefill), the
-pooled sampler (determinism under batching), the client API (background
-thread, streaming callbacks, futures), EOS-on-first-token, truncation
+per-request sequential decode — which only holds if every slot advances
+at its own position (per-slot `pos: [B]`: rope angles, row-range cache
+scatters and offset-causal masks all per-row).  Prefill and decode are
+ONE positioned-chunk operation (`forward_chunk`) at different widths, so
+the equivalence is checked at chunk widths {1, 3, bucket, whole-prompt}
+— including bucket-padded chunks whose pad is masked in-model — for
+every model family the engine serves (dense, moe/mla, hybrid, ssm; vlm
+and audio prompts need patches/frames at submit, which the token-prompt
+client API doesn't carry; their chunk equivalence lives in
+test_models.py).  Plus the scheduler (admission + continuation budget),
+the bounded compiled-chunk-width guarantee, the pooled sampler
+(determinism under batching), the client API (background thread,
+streaming callbacks, futures), EOS-on-first-token, truncation
 accounting, and the serve latency phases folded into profile shards.
 """
 
@@ -80,25 +85,81 @@ def mixed_prompts(cfg, seed=1, lengths=(3, 7, 5, 9)):
     return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lengths]
 
 
+def chunked_prefill_decode(model, params, prompt, max_new, width,
+                           max_seq_len=64, pad_to=None):
+    """Reference driver for forward_chunk: feed the prompt in `width`-token
+    chunks at the running cache offset (optionally bucket-padding each
+    chunk to `pad_to` with the pad masked via `valid`), then greedy-decode
+    through width-1 chunks."""
+    cache = model.init_cache(1, max_seq_len)
+    table = model.table()
+    pos = 0
+    for start in range(0, len(prompt), width):
+        seg = prompt[start:start + width]
+        n = len(seg)
+        w = max(pad_to or n, n)
+        padded = np.zeros((w,), np.int32)
+        padded[:n] = seg
+        lg, cache, table = model.forward_chunk(
+            params, jnp.asarray(padded[None]), table, cache,
+            jnp.asarray([pos], jnp.int32), jnp.asarray([n], jnp.int32))
+        pos += n
+    toks = [int(jnp.argmax(lg[0]))]
+    while len(toks) < max_new:
+        lg, cache, table = model.decode_step(
+            params, jnp.asarray([toks[-1]], jnp.int32), table, cache,
+            jnp.asarray([pos], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return toks
+
+
 class TestContinuousBatchingEquivalence:
-    @pytest.mark.parametrize("arch", SERVING_ARCHS)
-    def test_staggered_matches_sequential(self, arch):
-        """Pooled decode at per-slot positions == per-request sequential
+    # chunk=64: every prompt fits one admission chunk (all families);
+    # chunk=3: prompts prefill through bucket-padded 3-token continuation
+    # chunks at mixed slot depths — engine-level, covered for one
+    # KV-cache family and the hybrid (SSM state + shared attention KV);
+    # the other families' chunk math is pinned by the model-level width-
+    # equivalence test below (keeps tier-1 wall time in check)
+    @pytest.mark.parametrize("arch,chunk", [
+        *[(a, 64) for a in SERVING_ARCHS],
+        ("tinyllama_1_1b", 3), ("zamba2_2_7b", 3),
+    ])
+    def test_staggered_matches_sequential(self, arch, chunk):
+        """Pooled per-slot-position serving == per-request sequential
         decode, token for token, with requests arriving mid-flight."""
         cfg, model, params = build(arch)
         prompts = mixed_prompts(cfg)
         max_new = [6, 5, 6, 4]
         engine = ServingEngine(model, params, ServeConfig(
-            max_batch=3, max_seq_len=64, eos_token=-1, prefill_chunk=64))
+            max_batch=3, max_seq_len=64, eos_token=-1, prefill_chunk=chunk,
+            min_chunk_bucket=4))
         reqs = staggered_run(engine, prompts, max_new)
         for r, p, n in zip(reqs, prompts, max_new):
             assert r.done
             assert r.output == sequential_decode(model, params, p, n), \
                 f"{arch}: batched != sequential for prompt len {len(p)}"
 
+    @pytest.mark.parametrize("arch", SERVING_ARCHS)
+    def test_forward_chunk_width_equivalence(self, arch):
+        """forward_chunk is width-invariant: feeding a prompt at widths
+        {1, 3, bucket-padded 4, whole-prompt} produces token-identical
+        greedy continuations to the sequential prefill+decode path.  The
+        width-3-padded-to-4 case exercises the in-model pad mask (valid)
+        every bucketed engine chunk relies on."""
+        cfg, model, params = build(arch)
+        prompt = mixed_prompts(cfg, seed=5, lengths=(9,))[0]
+        ref = sequential_decode(model, params, prompt, 5)
+        for width, pad_to in ((1, None), (3, None), (3, 4), (len(prompt),
+                                                            None)):
+            got = chunked_prefill_decode(model, params, prompt, 5, width,
+                                         pad_to=pad_to)
+            assert got == ref, (f"{arch}: width {width} (pad {pad_to}) "
+                                f"!= sequential: {got} vs {ref}")
+
     @pytest.mark.parametrize("arch", ["tinyllama_1_1b", "xlstm_1_3b"])
     def test_chunked_prefill_matches_single_slot(self, arch):
-        """Host-chunked prefill (tail fed through the decode stream) is
+        """In-model chunked prefill (2-token continuation chunks) is
         batch-composition independent: a crowded pool reproduces the
         single-slot engine exactly, chunk boundaries and all."""
         cfg, model, params = build(arch)
@@ -113,6 +174,20 @@ class TestContinuousBatchingEquivalence:
             solo.run_until_drained()
             assert r.output == ref.output, f"{arch}: chunked prefill " \
                 f"depends on batch composition (prompt len {len(p)})"
+
+    def test_tail_chunk_one_reproduces_token_feed(self):
+        """tail_chunk=1 (the legacy one-token-per-tick comparison mode)
+        still produces sequential-identical tokens through the unified
+        chunk path."""
+        cfg, model, params = build("tinyllama_1_1b")
+        prompts = mixed_prompts(cfg, seed=7, lengths=(11, 6, 9, 8))
+        max_new = [4, 5, 4, 5]
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=3, max_seq_len=64, eos_token=-1, prefill_chunk=4,
+            tail_chunk=1, min_chunk_bucket=1))
+        reqs = staggered_run(engine, prompts, max_new)
+        for r, p, n in zip(reqs, prompts, max_new):
+            assert r.output == sequential_decode(model, params, p, n)
 
     def test_sampled_decode_is_batch_independent(self):
         """Sampling keys derive from (seed, position): a request's sampled
@@ -147,6 +222,53 @@ class TestEngineSemantics:
         assert req.done and req.output == [first]
         # the pool never decoded for it: one tick observes the empty pool
         assert engine._ticks - ticks_before <= 1
+
+    def test_bounded_compiled_chunk_widths(self):
+        """The per-admission recompile hazard: distinct prompt lengths
+        must NOT each compile their own prefill program.  With
+        power-of-two bucketing (pad masked in-model via `valid`), 12
+        distinct lengths share O(log max_seq_len) compiled widths; with
+        bucketing off, every distinct length is its own program."""
+        cfg, model, params = build("tinyllama_1_1b")
+        rng = np.random.default_rng(4)
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1, prefill_chunk=32,
+            min_chunk_bucket=8))
+        lengths = list(range(3, 27, 2))          # 12 distinct prompt lengths
+        for n in lengths:
+            engine.submit(rng.integers(0, cfg.vocab, n).astype(np.int32), 2)
+        done = engine.run_until_drained()
+        assert len(done) == len(lengths)
+        assert engine.chunk_widths <= {8, 16, 32}, engine.chunk_widths
+        assert set(engine.chunk_buckets()) == {8, 16, 32}
+        raw = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=64, eos_token=-1, prefill_chunk=32,
+            bucket_chunks=False))
+        for n in lengths[:4]:
+            raw.submit(rng.integers(0, cfg.vocab, n).astype(np.int32), 2)
+        raw.run_until_drained()
+        assert len(raw.chunk_widths) == 4
+
+    def test_widths_stay_pow2_on_non_pow2_rows(self):
+        """End-of-row chunks must bucket DOWN (consuming fewer tokens),
+        never compile an exact remainder width: a non-power-of-two
+        max_seq_len row with near-full prompts stays on power-of-two
+        compiled widths."""
+        cfg, model, params = build("tinyllama_1_1b")
+        rng = np.random.default_rng(6)
+        # prefill_chunk 35 on a 50-row: the admission bucket (64) always
+        # overshoots the row and must bucket down to 32
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=2, max_seq_len=50, eos_token=-1, prefill_chunk=35,
+            min_chunk_bucket=4))
+        for n in (47, 45, 43):                   # near-full, distinct tails
+            req = engine.submit(
+                rng.integers(0, cfg.vocab, n).astype(np.int32), 2)
+        engine.run_until_drained()
+        assert req.done
+        assert all(w & (w - 1) == 0 for w in engine.chunk_widths), \
+            engine.chunk_widths
+        assert len(engine.chunk_widths) <= 4, engine.chunk_widths
 
     def test_malformed_prompt_rejected_per_request(self):
         """An empty or non-1-D prompt must raise at submit() — failing
@@ -297,7 +419,7 @@ class TestEngineSemantics:
         folded = ProfileStore(run_dir).reduce().to_folded()
         apis = {k[2] for k in folded.edges}
         for phase in ("queue_wait", "ttft", "decode_token", "e2e",
-                      "prefill_request", "decode_tick"):
+                      "prefill_request", "prefill_chunk", "decode_tick"):
             assert phase in apis, f"missing serve phase {phase}"
         per_req = {k[2]: e for k, e in folded.edges.items()
                    if k[1] == "serve"}
@@ -375,6 +497,49 @@ class TestScheduler:
         picked = sched.schedule()
         assert [r for _, r in picked] == reqs[:4]   # pool size caps at 4
         assert sched.has_waiting()
+
+    def test_continuation_chunks_share_the_budget(self):
+        """Mid-prefill slots advance by tail_chunk-sized chunks under the
+        SAME per-tick budget admissions draw from; admissions only see
+        the leftover (continuations belong to older requests) and wait
+        entirely when an older continuation was deferred."""
+        sched = self.mk(prefill_chunk=8, prefill_budget_tokens=10)
+        sched.bind(0, self.Req(20), pos=8, pending=range(12))
+        sched.bind(1, self.Req(13), pos=8, pending=range(5))
+        plan, deferred = sched.continuation_plan()
+        assert plan == [(0, 8)]       # 8 + 5 would blow the 10-token budget
+        assert deferred               # slot 1 got nothing: admissions wait
+        sched.add(self.Req(6))
+        assert sched.schedule(spent=8) == []        # leftover can't fit 6
+        assert len(sched.schedule()) == 1           # fresh tick: admits
+
+    def test_oversized_continuation_is_not_a_barrier(self):
+        """A mid-prefill chunk too big for the leftover budget is skipped,
+        not a wall: a smaller OLDER-than-waiting chunk behind it still
+        runs this tick (and the skip is reported as deferred)."""
+        sched = self.mk(prefill_chunk=8, prefill_budget_tokens=10)
+        sched.bind(0, self.Req(20), pos=8, pending=range(8))
+        sched.bind(1, self.Req(20), pos=8, pending=range(8))
+        sched.bind(2, self.Req(13), pos=8, pending=range(2))
+        plan, deferred = sched.continuation_plan()
+        assert plan == [(0, 8), (2, 2)] and deferred
+
+    def test_continuation_order_is_admission_fcfs(self):
+        sched = self.mk(prefill_chunk=4)
+        sched.bind(2, self.Req(9), pos=4, pending=range(5))    # older
+        sched.bind(0, self.Req(9), pos=4, pending=range(5))    # newer
+        plan, deferred = sched.continuation_plan()
+        assert [i for i, _ in plan] == [2, 0] and not deferred
+
+    def test_first_continuation_never_starves(self):
+        sched = self.mk(prefill_chunk=16, prefill_budget_tokens=4)
+        sched.bind(0, self.Req(40), pos=16, pending=range(24))
+        plan, deferred = sched.continuation_plan()
+        assert plan == [(0, 16)] and not deferred   # first always fits
+
+    def test_tail_chunk_defaults_to_prefill_chunk(self):
+        assert self.mk(prefill_chunk=8).tail_chunk == 8
+        assert self.mk(prefill_chunk=8, tail_chunk=1).tail_chunk == 1
 
 
 class TestPooledSampler:
