@@ -13,6 +13,16 @@ meaningful under an arrival process), or closed-loop with --mode closed
   serve.prefill_tokens / serve.prefill_s / serve.prefill_tok_s
   serve.decode_tok_s
   serve.compiled_chunk_widths
+  serve.e2e_p50_ms / serve.e2e_p95_ms / serve.e2e_p99_ms
+  serve.e2e_jitter_ms  (p99 - p50)
+  serve.deadline_tracked / serve.deadline_missed / serve.slo_miss_rate
+
+The percentile columns read the schema-v2 log-bucket latency histogram
+folded on the `serve.e2e` edge (delta over the timed window, warmup
+excluded) — the same counters `report` renders and the slo-violation
+detector gates on.  --deadline-ms arms per-request deadline tracking in
+the engine; --slo-p99-ms N exits nonzero when the measured e2e p99
+exceeds N (the serve-bench CI lane runs both).
 
 The prefill/decode split reads the XFA `serve.prefill_chunk` and
 `serve.decode_token` duration folds — the same edges `diagnose` uses to
@@ -70,6 +80,30 @@ def _phase_ns(apis) -> dict:
     return out
 
 
+def _phase_hists(apis) -> dict:
+    """Summed latency histograms (schema v2) for the given serve APIs.
+
+    None for an API with no folded histogram yet — percentile columns
+    then read 0.0, same convention as the report view."""
+    from repro.profile import tracer_folded
+    out = {a: None for a in apis}
+    for (_, comp, api), e in tracer_folded().edges.items():
+        if comp == "serve" and api in out and e.hist is not None:
+            out[api] = e.hist.copy() if out[api] is None \
+                else out[api] + e.hist
+    return out
+
+
+def _hist_delta(before, after):
+    """after - before for cumulative bucket counts (None-aware)."""
+    if after is None:
+        return None
+    if before is None:
+        return after
+    d = after.astype(np.int64) - before.astype(np.int64)
+    return np.maximum(d, 0).astype(np.uint64)
+
+
 def make_prompts(args, cfg, rng) -> list:
     if args.long_prompts:
         # many multiples of prefill_chunk: the chunked-prefill stress case
@@ -92,6 +126,7 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
         min_chunk_bucket=min_bucket or 8,
         prefill_budget_tokens=args.prefill_budget,
         eos_token=-1,
+        deadline_ms=args.deadline_ms,
         profile_dir=args.profile_dir,
         profile_interval_ticks=64,
         profile_label="serve-bench",
@@ -114,11 +149,13 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
     engine.completed.clear()
 
     before = _phase_ns(("prefill_chunk", "decode_token"))
+    hist_before = _phase_hists(("e2e",))
     t0 = time.monotonic()
     done = run_workload(engine, prompts, args.max_new, mode=args.mode,
                         rate=args.rate, rng=rng, sampling=sampling)
     s = latency_stats(done, time.monotonic() - t0)
     after = _phase_ns(("prefill_chunk", "decode_token"))
+    hist_after = _phase_hists(("e2e",))
     if not s["requests"] or "ttft_mean_s" not in s:
         # reachable diagnostic BEFORE any stats key is touched
         raise SystemExit("degenerate serve run: no requests completed")
@@ -126,6 +163,13 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
     prefill_s = (after["prefill_chunk"][1] - before["prefill_chunk"][1]) / 1e9
     decode_n = after["decode_token"][0] - before["decode_token"][0]
     decode_s = (after["decode_token"][1] - before["decode_token"][1]) / 1e9
+    # e2e tail latency from the run's histogram delta (warmup excluded):
+    # the same log-bucket counters `report` and the slo-violation
+    # detector read, so the CSV and the flow graph agree by construction
+    from repro.core.histogram import jitter_ns, percentile_ns
+    e2e = _hist_delta(hist_before["e2e"], hist_after["e2e"])
+    tracked = [r for r in done if r.deadline_missed is not None]
+    missed = sum(1 for r in tracked if r.deadline_missed)
     return {
         "serve.requests": int(s["requests"]),
         "serve.tokens": int(s["tokens"]),
@@ -142,6 +186,14 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
         "serve.decode_tok_s": round(decode_n / decode_s, 2)
         if decode_s > 0 else 0.0,
         "serve.compiled_chunk_widths": len(engine.chunk_widths),
+        "serve.e2e_p50_ms": round(percentile_ns(e2e, 0.50) / 1e6, 3),
+        "serve.e2e_p95_ms": round(percentile_ns(e2e, 0.95) / 1e6, 3),
+        "serve.e2e_p99_ms": round(percentile_ns(e2e, 0.99) / 1e6, 3),
+        "serve.e2e_jitter_ms": round(jitter_ns(e2e) / 1e6, 3),
+        "serve.deadline_tracked": len(tracked),
+        "serve.deadline_missed": missed,
+        "serve.slo_miss_rate": round(missed / len(tracked), 4)
+        if tracked else 0.0,
     }
 
 
@@ -168,6 +220,14 @@ def main() -> int:
     ap.add_argument("--assert-ttft-improves", action="store_true",
                     help="with --compare-tail-feed: exit nonzero unless "
                          "chunked TTFT beats the tail-feed TTFT")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request e2e deadline fed to the engine "
+                         "(ServeConfig.deadline_ms); emits deadline-miss "
+                         "counts + serve.slo_miss_rate, and arms the "
+                         "slo-violation detector on the profile shard")
+    ap.add_argument("--slo-p99-ms", type=float, default=0.0,
+                    help="exit nonzero if the measured e2e p99 (from the "
+                         "run's latency histogram) exceeds this bound")
     ap.add_argument("--profile-dir", default="",
                     help="register the run + write its XFA shard here")
     ap.add_argument("-o", "--output", default="",
@@ -204,6 +264,14 @@ def main() -> int:
         print(f"chunked prefill TTFT {chunked}ms beats tail feed "
               f"{legacy_ttft}ms ({legacy_ttft / max(chunked, 1e-9):.1f}x)",
               file=sys.stderr)
+    if args.slo_p99_ms > 0:
+        p99 = rows["serve.e2e_p99_ms"]
+        if p99 > args.slo_p99_ms:
+            print(f"FAIL: e2e p99 {p99}ms exceeds --slo-p99-ms "
+                  f"{args.slo_p99_ms}ms", file=sys.stderr)
+            return 1
+        print(f"e2e p99 {p99}ms within --slo-p99-ms {args.slo_p99_ms}ms "
+              f"bound", file=sys.stderr)
     return 0
 
 

@@ -8,7 +8,7 @@ orchestration behind `python -m repro.profile diagnose`.
 
   graph.py      FlowGraph (typed nodes/edges from EdgeColumns) + per-shard
                 projections (one comparable subgraph per rank/replica)
-  detectors.py  Detector protocol, Finding, and the 6 built-in detectors
+  detectors.py  Detector protocol, Finding, and the 7 built-in detectors
   calibrate.py  per-edge noise bands (mean/std/p95) from baseline runs or
                 a ring, serialized as a thresholds JSON
   diagnose.py   run selection -> DiagnosisContext -> findings -> report
@@ -21,8 +21,9 @@ from .calibrate import (CALIBRATE_FIELDS, EdgeBand, Thresholds,
 from .detectors import (SEVERITIES, CallAmplification, Detector,
                         DiagnosisContext, DriftRegression, Finding,
                         HotEdgeConcentration, QueueSaturation,
-                        RankImbalance, WaitDominance, builtin_detectors,
-                        detector_classes, run_detectors, severity_rank)
+                        RankImbalance, SloViolation, WaitDominance,
+                        builtin_detectors, detector_classes, run_detectors,
+                        severity_rank)
 from .diagnose import (Diagnosis, build_context, diagnose,
                        load_detector_config, resolve_run_dir)
 
@@ -33,7 +34,7 @@ __all__ = [
     "calibrate_runs",
     "SEVERITIES", "CallAmplification", "Detector", "DiagnosisContext",
     "DriftRegression", "Finding", "HotEdgeConcentration", "QueueSaturation",
-    "RankImbalance", "WaitDominance", "builtin_detectors",
+    "RankImbalance", "SloViolation", "WaitDominance", "builtin_detectors",
     "detector_classes", "run_detectors", "severity_rank",
     "Diagnosis", "build_context", "diagnose", "load_detector_config",
     "resolve_run_dir",

@@ -29,8 +29,11 @@ from ..core.folding import FoldedTable
 from ..core.shadow import SlotKey
 from .graph import edge_label
 
-#: fields a band can be fitted on (self_ns/mean_ns derive per sample).
-CALIBRATE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns")
+#: fields a band can be fitted on (self_ns/mean_ns derive per sample; the
+#: percentile/jitter fields read schema-v2 latency histograms and fit 0.0
+#: bands over hist-less edges, matching diff's 0.0-valued percentiles).
+CALIBRATE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns",
+                    "p50_ns", "p95_ns", "p99_ns", "jitter_ns")
 
 THRESHOLDS_SCHEMA = 1
 
@@ -222,6 +225,13 @@ def calibrate_ring(timelines, *, fields: Sequence[str] = CALIBRATE_FIELDS,
                 "mean_ns": [t / c if c > 0 else (-1.0 if c < 0 else 0.0)
                             for t, c in zip(dt, dc)],
             }
+            for fld in fields:
+                if fld not in derived:
+                    # percentile/jitter: per-interval quantiles off the
+                    # differenced histograms (ShardTimeline handles the
+                    # hist algebra; restarts come back as -1.0 and are
+                    # dropped by the v >= 0 filter below)
+                    derived[fld] = tl.deltas(key, fld)
             per = samples.setdefault(key, {f: [] for f in fields})
             for fld in fields:
                 per[fld].extend(v for v in derived[fld][start:] if v >= 0)

@@ -22,6 +22,10 @@ Built-ins:
   drift-regression     per-interval delta-of-deltas vs a baseline run
                        trends up (cost grows run-over-run AND over time)
   call-amplification   count blowup along a caller -> B -> callee chain
+  slo-violation        deadline-miss rate against the per-request deadlines
+                       the serving engine folds (deadline_met/deadline_miss
+                       count edges), with e2e latency percentiles from the
+                       schema-v2 histograms as evidence
 """
 
 from __future__ import annotations
@@ -30,6 +34,9 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
+import numpy as np
+
+from ..core.histogram import jitter_ns as _hist_jitter, percentile_ns
 from ..core.shadow import KIND_CALL, KIND_WAIT
 from .calibrate import Thresholds
 from .graph import FlowGraph, edge_label
@@ -359,10 +366,68 @@ class CallAmplification:
         return out
 
 
+@dataclass
+class SloViolation:
+    """Deadline-miss rate against per-request deadlines.
+
+    The serving engine (serving/engine.py) folds one `deadline_met` or
+    `deadline_miss` count event per finished request that carried a
+    deadline (Request.deadline_ms / ServeConfig.deadline_ms); this
+    detector reads those counts off the merged graph and converts the
+    miss RATE into severity — an SLO is a rate contract, not a one-off.
+    The component's e2e latency histogram (schema v2) supplies the
+    percentile spread as evidence, so a firing finding shows WHERE the
+    tail sits, not just that it crossed."""
+
+    name: str = "slo-violation"
+    component: str = "serve"
+    miss_api: str = "deadline_miss"
+    met_api: str = "deadline_met"
+    latency_api: str = "e2e"
+    warn_rate: float = 0.01
+    crit_rate: float = 0.05
+    min_tracked: int = 10
+
+    def detect(self, ctx: DiagnosisContext) -> List[Finding]:
+        ins = ctx.graph.in_edges(self.component)
+        missed = sum(e.count for e in ins if e.api == self.miss_api)
+        met = sum(e.count for e in ins if e.api == self.met_api)
+        tracked = missed + met
+        if tracked < self.min_tracked:
+            return []
+        rate = missed / tracked
+        if rate < self.warn_rate:
+            return []
+        evidence: Dict[str, Any] = {"miss_rate": rate, "missed": missed,
+                                    "tracked": tracked}
+        spread = ""
+        lat = [e.hist for e in ins
+               if e.api == self.latency_api and e.hist is not None]
+        if lat:
+            h = np.sum(lat, axis=0, dtype=np.uint64) if len(lat) > 1 \
+                else lat[0]
+            p50, p95, p99 = (percentile_ns(h, q)
+                             for q in (0.50, 0.95, 0.99))
+            evidence.update({"e2e_p50_ns": p50, "e2e_p95_ns": p95,
+                             "e2e_p99_ns": p99,
+                             "e2e_jitter_ns": _hist_jitter(h)})
+            spread = (f"; e2e p50/p95/p99 = {_ms(p50)}/{_ms(p95)}/"
+                      f"{_ms(p99)} (jitter {_ms(p99 - p50)})")
+        return [Finding(
+            self.name,
+            "crit" if rate >= self.crit_rate else "warn",
+            f"component:{self.component}",
+            f"{missed} of {tracked} deadline-tracked requests "
+            f"({_pct(rate)}) missed their deadline in component "
+            f"'{self.component}'{spread}",
+            evidence=evidence)]
+
+
 def detector_classes() -> Dict[str, type]:
     """Shipped detector classes keyed by their canonical name."""
     classes = (WaitDominance, HotEdgeConcentration, RankImbalance,
-               QueueSaturation, DriftRegression, CallAmplification)
+               QueueSaturation, DriftRegression, CallAmplification,
+               SloViolation)
     return {cls().name: cls for cls in classes}
 
 

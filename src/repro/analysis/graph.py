@@ -27,6 +27,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from ..core.folding import EdgeColumns, FoldedTable
+from ..core.histogram import jitter_ns as _hist_jitter, percentile_ns
 from ..core.shadow import KIND_NAMES, KIND_WAIT, SlotKey, edge_label
 
 
@@ -42,6 +43,10 @@ class FlowEdge:
     min_ns: int
     max_ns: int
     metrics: Dict[str, float] = field(default_factory=dict)
+    #: optional latency histogram (schema v2); compare=False keeps the
+    #: frozen dataclass' == well-defined despite the ndarray
+    hist: Optional[np.ndarray] = field(default=None, compare=False,
+                                       repr=False)
 
     @property
     def caller(self) -> str:
@@ -62,6 +67,23 @@ class FlowEdge:
     @property
     def mean_ns(self) -> float:
         return self.total_ns / self.count if self.count else 0.0
+
+    # -- histogram read-out (0.0 for hist-less edges) ---------------------
+    @property
+    def p50_ns(self) -> float:
+        return percentile_ns(self.hist, 0.50)
+
+    @property
+    def p95_ns(self) -> float:
+        return percentile_ns(self.hist, 0.95)
+
+    @property
+    def p99_ns(self) -> float:
+        return percentile_ns(self.hist, 0.99)
+
+    @property
+    def jitter_ns(self) -> float:
+        return _hist_jitter(self.hist)
 
     def to_json(self) -> dict:
         return {
@@ -143,12 +165,15 @@ class FlowGraph:
                 folded_metrics[j][name] = float(cols.metric_values[i, j])
         edges: Dict[SlotKey, FlowEdge] = {}
         for j, k in enumerate(cols.keys):
+            hist = None
+            if cols.hist is not None and cols.hist[j].any():
+                hist = cols.hist[j]
             edges[k] = FlowEdge(
                 key=k, kind=int(cols.kind[j]), count=int(cols.count[j]),
                 total_ns=int(cols.total_ns[j]),
                 child_ns=int(cols.child_ns[j]),
                 min_ns=int(cols.min_ns[j]), max_ns=int(cols.max_ns[j]),
-                metrics=folded_metrics[j])
+                metrics=folded_metrics[j], hist=hist)
         nodes: Dict[str, FlowNode] = {}
         wait = cols.kind == KIND_WAIT
         for name, rows in cols.group_rows("component").items():

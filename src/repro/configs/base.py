@@ -308,6 +308,11 @@ class ServeConfig:
     #: prompts of many distinct lengths share one compiled width)
     min_chunk_bucket: int = 8
     eos_token: int = 2
+    #: default per-request e2e deadline in ms (0 = deadlines untracked);
+    #: submit(deadline_ms=...) overrides per request.  Tracked requests
+    #: fold deadline_met/deadline_miss count events at finish, which the
+    #: slo-violation detector turns into a miss-rate finding.
+    deadline_ms: float = 0.0
     # -- scheduler ----------------------------------------------------------
     #: per-tick admission budget in bulk-prefill tokens (0 = unbounded);
     #: bounds prefill/decode interference — a burst of long prompts cannot

@@ -6,15 +6,30 @@ Memory is O(#edges), not O(#events).  The fold keeps the *relation* — the same
 API invoked from two components stays two edges — so per-component accuracy
 survives the folding.
 
-This module provides the pure-data half: `EdgeStats` (one folded edge),
-`FoldedTable` (edge → stats mapping with a commutative, associative merge),
-and constructors from per-thread ShadowTables and from device fold vectors.
-The merge algebra is property-tested (tests/test_xfa_properties.py):
+This module provides the pure-data half:
+
+  * `EdgeStats` — one folded edge: count/total/child/min/max, optional
+    folded metrics, and an optional bounded latency histogram
+    (core.histogram) from which p50/p95/p99 and jitter derive.
+  * `FoldedTable` — edge → stats mapping with a commutative, associative
+    merge, plus constructors from per-thread ShadowTables and device
+    fold vectors.
+  * `EdgeColumns` — the struct-of-arrays twin of FoldedTable: aligned
+    numpy columns (plus the optional [N, HIST_BUCKETS] histogram block),
+    row projections (`select`), key-part grouping for graph aggregation
+    (`group_rows`), and round-trips to/from FoldedTable.  This is the
+    shape the snapshot format serializes.
+  * `merge_columns` — the vectorized N-way merge over EdgeColumns that
+    the snapshot reducer uses instead of per-edge boxing.
+
+The merge algebra is property-tested (tests/test_xfa_properties.py,
+tests/test_histograms.py):
 
     merge(a, merge(b, c)) == merge(merge(a, b), c)      (associativity)
     merge(a, b) == merge(b, a)                          (commutativity)
     merge(a, empty) == a                                (identity)
     total_ns / count conservation under arbitrary splits of an event stream
+    histogram merge = exact bucket-wise add (loss-free, order-independent)
 """
 
 from __future__ import annotations
@@ -25,6 +40,7 @@ from typing import Dict, Iterable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from .histogram import HIST_BUCKETS, jitter_ns as _hist_jitter, percentile_ns
 from .shadow import (KIND_CALL, KIND_NAMES, KIND_WAIT, ShadowTable,
                      ShadowTableSet, SlotInfo, SlotKey)
 
@@ -43,6 +59,11 @@ class EdgeStats:
     kind: int = KIND_CALL
     # extra folded metrics from the device layer (flops, bytes, tokens, ...)
     metrics: Dict[str, float] = field(default_factory=dict)
+    #: optional [HIST_BUCKETS] uint64 latency histogram (core.histogram);
+    #: compare=False keeps dataclass == well-defined (ndarray eq is
+    #: elementwise) — conftest.assert_tables_equal compares hists explicitly
+    hist: Optional[np.ndarray] = field(default=None, compare=False,
+                                       repr=False)
 
     @property
     def self_ns(self) -> int:
@@ -53,10 +74,38 @@ class EdgeStats:
     def mean_ns(self) -> float:
         return self.total_ns / self.count if self.count else 0.0
 
+    # -- histogram read-out (0.0 when the edge carries no histogram) ------
+    def percentile_ns(self, q: float) -> float:
+        return percentile_ns(self.hist, q)
+
+    @property
+    def p50_ns(self) -> float:
+        return percentile_ns(self.hist, 0.50)
+
+    @property
+    def p95_ns(self) -> float:
+        return percentile_ns(self.hist, 0.95)
+
+    @property
+    def p99_ns(self) -> float:
+        return percentile_ns(self.hist, 0.99)
+
+    @property
+    def jitter_ns(self) -> float:
+        """Tail jitter as a percentile delta: p99 - p50."""
+        return _hist_jitter(self.hist)
+
     def merge(self, other: "EdgeStats") -> "EdgeStats":
         metrics = dict(self.metrics)
         for k, v in other.metrics.items():
             metrics[k] = metrics.get(k, 0.0) + v
+        hist = None
+        if self.hist is not None or other.hist is not None:
+            hist = np.zeros(HIST_BUCKETS, dtype=np.uint64)
+            if self.hist is not None:
+                hist += self.hist
+            if other.hist is not None:
+                hist += other.hist
         return EdgeStats(
             count=self.count + other.count,
             total_ns=self.total_ns + other.total_ns,
@@ -65,10 +114,11 @@ class EdgeStats:
             max_ns=max(self.max_ns, other.max_ns),
             kind=self.kind if self.count else other.kind,
             metrics=metrics,
+            hist=hist,
         )
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "count": int(self.count),
             "total_ns": int(self.total_ns),
             "child_ns": int(self.child_ns),
@@ -77,10 +127,21 @@ class EdgeStats:
             "kind": KIND_NAMES[self.kind],
             "metrics": self.metrics,
         }
+        if self.hist is not None and self.hist.any():
+            # sparse {bucket: count} — 160 mostly-zero ints don't belong in
+            # a human-inspected json dump
+            out["hist"] = {str(int(b)): int(self.hist[b])
+                           for b in np.nonzero(self.hist)[0]}
+        return out
 
     @staticmethod
     def from_json(d: dict) -> "EdgeStats":
         kind = KIND_WAIT if d.get("kind") == "wait" else KIND_CALL
+        hist = None
+        if d.get("hist"):
+            hist = np.zeros(HIST_BUCKETS, dtype=np.uint64)
+            for b, c in d["hist"].items():
+                hist[int(b)] = int(c)
         return EdgeStats(
             count=d["count"],
             total_ns=d["total_ns"],
@@ -89,6 +150,7 @@ class EdgeStats:
             max_ns=d["max_ns"],
             kind=kind,
             metrics=dict(d.get("metrics", {})),
+            hist=hist,
         )
 
 
@@ -114,6 +176,9 @@ class FoldedTable:
             s = info.slot
             if s >= table.capacity or table.count[s] == 0:
                 continue
+            hist = None
+            if table.hist is not None and table.hist[s].any():
+                hist = table.hist[s].copy()
             edges[info.key] = EdgeStats(
                 count=int(table.count[s]),
                 total_ns=int(table.total_ns[s]),
@@ -121,6 +186,7 @@ class FoldedTable:
                 min_ns=int(table.min_ns[s]),
                 max_ns=int(table.max_ns[s]),
                 kind=info.kind,
+                hist=hist,
             )
         return FoldedTable(edges, group=table.group)
 
@@ -183,7 +249,11 @@ class FoldedTable:
         return sum(e.total_ns for e in self.edges.values())
 
     def scale_time(self, factor: float) -> "FoldedTable":
-        """Scale all times (serial/parallel attribution divides by #threads)."""
+        """Scale all times (serial/parallel attribution divides by #threads).
+
+        Histograms are DROPPED: scaling is an attribution heuristic over
+        aggregates, and a per-sample distribution whose buckets no longer
+        match its values would be worse than none."""
         edges = {
             k: EdgeStats(
                 count=v.count,
@@ -242,6 +312,12 @@ class EdgeColumns:
     serializes.  `metric_mask` preserves metric *presence*: an edge that
     never emitted metric m stays absent after a round-trip, it does not
     become m=0.0.
+
+    `hist` is the optional latency-histogram block ([N, HIST_BUCKETS]
+    uint64, schema v2): None when no edge carries a distribution; an
+    all-zero row means *that* edge carries none (every recorded sample
+    lands in a bucket, so a zero row cannot be a real distribution —
+    no presence mask needed).
     """
 
     keys: List[SlotKey]
@@ -255,6 +331,7 @@ class EdgeColumns:
     metric_values: np.ndarray          # float64 [M, N]
     metric_mask: np.ndarray            # bool    [M, N]
     group: str = "main"
+    hist: Optional[np.ndarray] = None  # uint64 [N, HIST_BUCKETS] or None
 
     @staticmethod
     def empty(group: str = "main") -> "EdgeColumns":
@@ -280,6 +357,9 @@ class EdgeColumns:
                 mnames.setdefault(m, len(mnames))
         mvals = np.zeros((len(mnames), n), dtype=np.float64)
         mmask = np.zeros((len(mnames), n), dtype=bool)
+        hist = None
+        if any(e.hist is not None for e in table.edges.values()):
+            hist = np.zeros((n, HIST_BUCKETS), dtype=np.uint64)
         for j, k in enumerate(keys):
             e = table.edges[k]
             count[j] = e.count
@@ -288,12 +368,15 @@ class EdgeColumns:
             min_ns[j] = e.min_ns
             max_ns[j] = e.max_ns
             kind[j] = e.kind
+            if hist is not None and e.hist is not None:
+                hist[j] = e.hist
             for m, v in e.metrics.items():
                 i = mnames[m]
                 mvals[i, j] = v
                 mmask[i, j] = True
         return EdgeColumns(keys, count, total_ns, child_ns, min_ns, max_ns,
-                           kind, list(mnames), mvals, mmask, group=table.group)
+                           kind, list(mnames), mvals, mmask,
+                           group=table.group, hist=hist)
 
     # -- graph projections ---------------------------------------------------
     @property
@@ -317,10 +400,12 @@ class EdgeColumns:
             else self.metric_values[:, :0]
         mm = self.metric_mask[:, rows] if len(self.metric_names) \
             else self.metric_mask[:, :0]
+        h = self.hist[rows] if self.hist is not None else None
         return EdgeColumns(keys, self.count[rows], self.total_ns[rows],
                            self.child_ns[rows], self.min_ns[rows],
                            self.max_ns[rows], self.kind[rows],
-                           list(self.metric_names), m, mm, group=self.group)
+                           list(self.metric_names), m, mm, group=self.group,
+                           hist=h)
 
     def group_rows(self, by: str = "component") -> Dict[str, np.ndarray]:
         """Edge-row indices grouped by one key part: 'caller' (0),
@@ -343,6 +428,9 @@ class EdgeColumns:
                 metrics[j][name] = float(self.metric_values[i, j])
         edges: Dict[SlotKey, EdgeStats] = {}
         for j, k in enumerate(self.keys):
+            hist = None
+            if self.hist is not None and self.hist[j].any():
+                hist = self.hist[j].copy()   # zero row == no distribution
             edges[k] = EdgeStats(
                 count=int(self.count[j]),
                 total_ns=int(self.total_ns[j]),
@@ -351,6 +439,7 @@ class EdgeColumns:
                 max_ns=int(self.max_ns[j]),
                 kind=int(self.kind[j]),
                 metrics=metrics[j],
+                hist=hist,
             )
         return FoldedTable(edges, group=self.group)
 
@@ -363,9 +452,22 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
 
     Keys are re-interned into one union index (the only per-edge python
     loop); every statistic then merges as one whole-column numpy scatter
-    (add/min/max `.at`), matching EdgeStats.merge semantics exactly:
-    sums for count/total/child/metrics, min/max for the extrema, and the
-    kind of the first part that actually observed the edge (count > 0).
+    (add/min/max `.at`), matching EdgeStats.merge semantics exactly over
+    the full field set:
+
+      count / total_ns / child_ns     sum            (np.add.at)
+      min_ns / max_ns                 extrema        (np.minimum/maximum.at)
+      kind                            first part that actually observed
+                                      the edge (count > 0) decides
+      metric_values + metric_mask     sum where present; presence ORs
+      hist                            exact bucket-wise add ([N, B] row
+                                      scatter) — output has a hist block
+                                      iff any input part has one, and a
+                                      hist-less part contributes zeros
+
+    The output row order is first-seen order over `parts` (NOT sorted);
+    `group` is the common group label of ALL parts — including empty
+    shards, which still carry provenance — or 'merged'.
     """
     # group label from ALL parts (empty shards still carry provenance)
     groups = {p.group for p in parts}
@@ -393,6 +495,8 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
             mnames.setdefault(m, len(mnames))
     mvals = np.zeros((len(mnames), u), dtype=np.float64)
     mmask = np.zeros((len(mnames), u), dtype=bool)
+    hist = np.zeros((u, HIST_BUCKETS), dtype=np.uint64) \
+        if any(p.hist is not None for p in parts) else None
     for p in parts:
         inv = np.fromiter((index[k] for k in p.keys), dtype=np.int64,
                           count=len(p.keys))
@@ -401,6 +505,8 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
         np.add.at(child_ns, inv, p.child_ns)
         np.minimum.at(min_ns, inv, p.min_ns)
         np.maximum.at(max_ns, inv, p.max_ns)
+        if hist is not None and p.hist is not None:
+            np.add.at(hist, inv, p.hist)
         und = ~decided[inv]
         kind[inv[und]] = p.kind[und]
         decided[inv] = decided[inv] | (p.count > 0)
@@ -412,7 +518,8 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
                 np.add.at(mvals[g], tgt, p.metric_values[i][present])
                 mmask[g][tgt] = True
     return EdgeColumns(list(index), count, total_ns, child_ns, min_ns,
-                       max_ns, kind, list(mnames), mvals, mmask, group=group)
+                       max_ns, kind, list(mnames), mvals, mmask, group=group,
+                       hist=hist)
 
 
 def fold_event_log(events: Iterable[Tuple[str, str, str, int]],

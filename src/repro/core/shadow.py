@@ -32,6 +32,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from .histogram import HIST_BUCKETS, bucket_index
+
 # Slot kinds — 'wait' is separated per Scaler §3.5 ("Wait" pseudo-category:
 # condvar/barrier/lock time means the program is not doing useful work).
 KIND_CALL = 0
@@ -115,10 +117,15 @@ class ShadowTable:
     Per-slot stats (the fold): count, total_ns, child_ns (time spent inside
     callees of this call — used to compute self time), min_ns, max_ns.
     ``record`` is the entire hot path: bounds check + 5 array updates.
+
+    An optional ``hist`` block ([cap, HIST_BUCKETS] uint64 bucket counts,
+    see core.histogram) is allocated lazily on the first ``record_hist``:
+    call sites that never ask for distributions pay nothing, and the cost
+    is bounded per slot, never per event.
     """
 
     __slots__ = ("count", "total_ns", "child_ns", "min_ns", "max_ns",
-                 "_cap", "thread_name", "group", "group_explicit")
+                 "hist", "_cap", "thread_name", "group", "group_explicit")
 
     INITIAL_CAPACITY = 256
 
@@ -136,6 +143,9 @@ class ShadowTable:
         self.child_ns = np.zeros(self._cap, dtype=np.int64)
         self.min_ns = np.full(self._cap, np.iinfo(np.int64).max, dtype=np.int64)
         self.max_ns = np.zeros(self._cap, dtype=np.int64)
+        #: lazily-allocated [cap, HIST_BUCKETS] uint64 block; None until the
+        #: first record_hist keeps hist-less tables at the v1 footprint
+        self.hist: Optional[np.ndarray] = None
 
     # -- hot path ---------------------------------------------------------
     def record(self, slot: int, dur_ns: int, child_ns: int = 0) -> None:
@@ -155,6 +165,16 @@ class ShadowTable:
             self._grow(slot + 1)
         self.count[slot] += n
 
+    def record_hist(self, slot: int, dur_ns: int) -> None:
+        """Fold one duration into the slot's latency histogram.  Callers
+        pair this with ``record`` (it does not touch count/total) — only
+        durations belong here, never gauge samples."""
+        if slot >= self._cap:
+            self._grow(slot + 1)
+        if self.hist is None:
+            self.hist = np.zeros((self._cap, HIST_BUCKETS), dtype=np.uint64)
+        self.hist[slot, bucket_index(dur_ns)] += 1
+
     # -- slow paths -------------------------------------------------------
     def _grow(self, needed: int) -> None:
         new_cap = self._cap
@@ -168,6 +188,10 @@ class ShadowTable:
         new_min = np.full(new_cap, np.iinfo(np.int64).max, dtype=np.int64)
         new_min[: self._cap] = self.min_ns
         self.min_ns = new_min
+        if self.hist is not None:
+            new_hist = np.zeros((new_cap, HIST_BUCKETS), dtype=np.uint64)
+            new_hist[: self._cap] = self.hist
+            self.hist = new_hist
         self._cap = new_cap
 
     @property
@@ -176,8 +200,9 @@ class ShadowTable:
 
     def nbytes(self) -> int:
         """Memory footprint — O(#slots), never O(#events) (paper Table 5)."""
-        return sum(getattr(self, n).nbytes
+        base = sum(getattr(self, n).nbytes
                    for n in ("count", "total_ns", "child_ns", "min_ns", "max_ns"))
+        return base + (self.hist.nbytes if self.hist is not None else 0)
 
     def active_slots(self) -> np.ndarray:
         return np.nonzero(self.count[: self._cap])[0]
@@ -192,6 +217,8 @@ class ShadowTable:
         t.child_ns[:] = self.child_ns
         t.min_ns[:] = self.min_ns
         t.max_ns[:] = self.max_ns
+        if self.hist is not None:
+            t.hist = self.hist.copy()
         return t
 
     def absorb(self, other: "ShadowTable") -> None:
@@ -206,6 +233,11 @@ class ShadowTable:
         self.child_ns[:n] += other.child_ns
         np.minimum(self.min_ns[:n], other.min_ns, out=self.min_ns[:n])
         np.maximum(self.max_ns[:n], other.max_ns, out=self.max_ns[:n])
+        if other.hist is not None:
+            if self.hist is None:
+                self.hist = np.zeros((self._cap, HIST_BUCKETS),
+                                     dtype=np.uint64)
+            self.hist[:n] += other.hist
 
     def reset(self) -> None:
         self.count[:] = 0
@@ -213,6 +245,8 @@ class ShadowTable:
         self.child_ns[:] = 0
         self.min_ns[:] = np.iinfo(np.int64).max
         self.max_ns[:] = 0
+        if self.hist is not None:
+            self.hist[:] = 0
 
 
 class ShadowTableSet:

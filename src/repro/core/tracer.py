@@ -176,7 +176,13 @@ class Tracer:
         different control paths and so cannot be bracketed by a decorator
         (a request's queue wait is known only at admit time, its TTFT only
         at first-token time).  `n` > 1 folds n events of dur_ns each (e.g.
-        per-token decode latency attributed from one pooled tick)."""
+        per-token decode latency attributed from one pooled tick).
+
+        Unlike the bracketed decorators, these edges also fold a bounded
+        log-bucket latency histogram (core.histogram), so latency-phase
+        edges get p50/p95/p99 read-out for free; ordinary call edges stay
+        at the five-column v1 footprint.  `record_gauge` deliberately does
+        NOT feed histograms — gauge samples are not durations."""
         if not self.enabled:
             return
         caller = self.current_component()
@@ -185,8 +191,10 @@ class Tracer:
         if not self.timing:
             t.record_count(slot.slot, n)
             return
+        d = int(dur_ns)
         for _ in range(n):
-            t.record(slot.slot, int(dur_ns), 0)
+            t.record(slot.slot, d, 0)
+            t.record_hist(slot.slot, d)
 
     def record_gauge(self, component: str, api: str, value: float,
                      kind: int = KIND_CALL) -> None:

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from .folding import EdgeStats, FoldedTable
-from .shadow import KIND_WAIT
+from .shadow import KIND_WAIT, edge_label
 
 
 @dataclass
@@ -155,6 +155,29 @@ def render_flow_matrix(folded: FoldedTable, unit: float = 1e6,
     for i, c in enumerate(comps):
         lines.append(f"{c:>{w}}" + "".join(
             f"{mat[i][j]/unit:>{w}.2f}" for j in range(len(comps))))
+    return "\n".join(lines)
+
+
+def render_percentiles(folded: FoldedTable, max_rows: int = 30) -> str:
+    """Latency-percentile table over the edges that carry histograms
+    (schema v2); empty string when none do, so report output is unchanged
+    for v1 profiles.  Jitter is the p99 - p50 percentile delta."""
+    rows = [(edge_label(k), e) for k, e in folded.edges.items()
+            if e.hist is not None]
+    if not rows:
+        return ""
+    rows.sort(key=lambda r: -r[1].p99_ns)
+    title = "Latency percentiles (ms, log-bucket histograms)"
+    lines = [title, "-" * len(title),
+             f"{'edge':<42}{'count':>8}{'p50':>10}{'p95':>10}"
+             f"{'p99':>10}{'jitter':>10}"]
+    for label, e in rows[:max_rows]:
+        n = int(e.hist.sum())
+        lines.append(f"{label:<42}{n:>8}{e.p50_ns/1e6:>10.3f}"
+                     f"{e.p95_ns/1e6:>10.3f}{e.p99_ns/1e6:>10.3f}"
+                     f"{e.jitter_ns/1e6:>10.3f}")
+    if len(rows) > max_rows:
+        lines.append(f"... ({len(rows)-max_rows} more)")
     return "\n".join(lines)
 
 

@@ -26,6 +26,10 @@ bands from baseline profiles (or ring intervals) into a thresholds JSON;
 exits 1 when findings reach `--fail-on` severity; `--detector-config`
 loads per-detector constructor parameters from JSON so projects tune
 thresholds without code (unknown keys exit 2).
+
+Full reference with flag tables, worked examples and the exit-code
+contract (0 ok / 1 gated finding / 2 usage error): docs/cli.md —
+kept honest by tools/check_cli_docs.py in CI.
 """
 
 from __future__ import annotations
@@ -36,7 +40,7 @@ import sys
 from typing import List
 
 from ..core.views import (api_view_by_caller, component_view,
-                          render_flow_matrix)
+                          render_flow_matrix, render_percentiles)
 from .diff import DIFF_FIELDS, diff_profiles
 from .index import RunRegistry, kv_pair
 from .snapshot import ProfileSnapshot
@@ -67,6 +71,10 @@ def _cmd_report(args: argparse.Namespace) -> int:
         print(component_view(folded, comp).render(args.top))
         print()
         print(api_view_by_caller(folded, comp).render(args.top))
+    pct = render_percentiles(folded, max_rows=args.top)
+    if pct:   # only schema-v2 profiles carry histograms
+        print()
+        print(pct)
     print()
     print(render_flow_matrix(folded))
     return 0
@@ -263,7 +271,10 @@ def _cmd_diagnose(args: argparse.Namespace) -> int:
     return 1 if diag.should_fail(args.fail_on) else 0
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The full CLI parser — separate from main() so tooling (the
+    docs-coverage check in tools/check_cli_docs.py) can enumerate every
+    subcommand and flag without spawning processes."""
     ap = argparse.ArgumentParser(prog="python -m repro.profile",
                                  description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -388,8 +399,11 @@ def main(argv=None) -> int:
                      help="max findings rendered in text mode")
     dia.add_argument("--json", action="store_true")
     dia.set_defaults(fn=_cmd_diagnose)
+    return ap
 
-    args = ap.parse_args(argv)
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
     return args.fn(args)
 
 

@@ -15,8 +15,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.folding import EdgeStats, FoldedTable
 from ..core.shadow import SlotKey
 
-#: fields a regression can be flagged on; self_ns/mean_ns are derived.
-DIFF_FIELDS = ("count", "total_ns", "self_ns", "mean_ns")
+#: fields a regression can be flagged on; self_ns/mean_ns are derived, and
+#: the percentile/jitter fields read the edge's latency histogram (schema
+#: v2) — they evaluate to 0.0 on hist-less edges, so gating on p99_ns
+#: drift is a no-op over v1 profiles rather than an error.
+DIFF_FIELDS = ("count", "total_ns", "self_ns", "mean_ns",
+               "p50_ns", "p95_ns", "p99_ns", "jitter_ns")
 
 
 def _value(e: EdgeStats, fld: str) -> float:

@@ -1,22 +1,34 @@
 """Columnar profile snapshots — the on-disk form of a FoldedTable.
 
+This module WRITES schema version 2 (current, SCHEMA_VERSION) and READS
+schemas 1 and 2.  The writer is *minimal-schema*: a snapshot with no
+histogram block is emitted in the exact schema-1 byte layout (header says
+``"schema": 1``), so hist-less files stay readable by older readers and
+the checked-in v1 golden file stays byte-stable; the schema-2 layout is
+used only when there is a histogram block to store.  See docs/schema.md
+for the full layout reference.
+
 One snapshot file is a compressed npz holding:
 
   __header__        uint8 bytes of a json document: schema version, group,
                     free-form meta (host/pid/label/...), the interned string
-                    table, and the metric name list — the SlotRegistry half
-                    of the serialization
+                    table, the metric name list, and (v2) n_hist_buckets —
+                    the SlotRegistry half of the serialization
   caller/component/api   int32 [N] indices into the string table (the
                     relation-aware (caller, callee, api) key, columnar)
   kind              int8  [N]
   count/total_ns/child_ns/min_ns/max_ns   int64 [N] aligned stat columns
   metric_values     float64 [M, N]
   metric_mask       bool    [M, N]  (presence — absent metric != 0.0 metric)
+  hist              uint64 [N, HIST_BUCKETS] latency histograms — schema 2
+                    only; an all-zero row means "no distribution" for
+                    that edge (core.histogram)
 
 The columns are exactly core.folding.EdgeColumns, so loading a snapshot
 drops straight into the vectorized merge path without re-boxing per-edge
 EdgeStats objects.  Round-trip is lossless: FoldedTable -> snapshot ->
-FoldedTable preserves every stat, kind, metric and metric-presence bit.
+FoldedTable preserves every stat, kind, metric, metric-presence bit and
+histogram bucket.
 """
 
 from __future__ import annotations
@@ -32,9 +44,13 @@ import numpy as np
 from numpy.lib import format as _npformat
 
 from ..core.folding import EdgeColumns, FoldedTable, merge_columns
+from ..core.histogram import HIST_BUCKETS
 
 #: bump on any incompatible layout change; loaders reject newer majors.
-SCHEMA_VERSION = 1
+#: v1: stat columns + metrics.  v2: adds the optional uint64 [N, B]
+#: `hist` member (+ `n_hist_buckets` header key).  The writer emits the
+#: LOWEST version that represents the content (see module docstring).
+SCHEMA_VERSION = 2
 
 SNAPSHOT_SUFFIX = ".xfa.npz"
 
@@ -117,14 +133,20 @@ class ProfileSnapshot:
         caller = intern([k[0] for k in cols.keys])
         component = intern([k[1] for k in cols.keys])
         api = intern([k[2] for k in cols.keys])
+        # minimal-schema rule: bytes are a function of CONTENT, and content
+        # without histograms is exactly a v1 file — old readers keep working
+        # and the v1 golden stays pinned.
+        schema_out = SCHEMA_VERSION if cols.hist is not None else 1
         header = {
-            "schema": self.schema,
+            "schema": schema_out,
             "group": cols.group,
             "meta": self.meta,
             "strings": list(strings),
             "metric_names": list(cols.metric_names),
             "n_edges": len(cols),
         }
+        if cols.hist is not None:
+            header["n_hist_buckets"] = int(cols.hist.shape[1])
         header_bytes = np.frombuffer(
             json.dumps(header, sort_keys=True).encode("utf-8"), dtype=np.uint8)
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
@@ -132,7 +154,7 @@ class ProfileSnapshot:
                                    suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as f:
-                _write_npz(f, {
+                arrays = {
                     _HEADER_KEY: header_bytes,
                     "caller": caller, "component": component, "api": api,
                     "kind": cols.kind, "count": cols.count,
@@ -140,7 +162,10 @@ class ProfileSnapshot:
                     "min_ns": cols.min_ns, "max_ns": cols.max_ns,
                     "metric_values": cols.metric_values,
                     "metric_mask": cols.metric_mask,
-                }, compress=compress)
+                }
+                if cols.hist is not None:
+                    arrays["hist"] = cols.hist
+                _write_npz(f, arrays, compress=compress)
             os.replace(tmp, path)
         except BaseException:
             if os.path.exists(tmp):
@@ -165,6 +190,14 @@ class ProfileSnapshot:
             api = z["api"]
             keys = [(strings[c], strings[m], strings[a])
                     for c, m, a in zip(caller, component, api)]
+            hist = None
+            if "hist" in z.files:
+                hist = z["hist"].astype(np.uint64)
+                nb = int(header.get("n_hist_buckets", hist.shape[1]))
+                if hist.shape != (len(keys), nb) or nb != HIST_BUCKETS:
+                    raise ValueError(
+                        f"{path}: hist block {hist.shape} does not match "
+                        f"{len(keys)} edges x {HIST_BUCKETS} buckets")
             cols = EdgeColumns(
                 keys=keys,
                 count=z["count"].astype(np.int64),
@@ -177,6 +210,7 @@ class ProfileSnapshot:
                 metric_values=z["metric_values"].astype(np.float64),
                 metric_mask=z["metric_mask"].astype(bool),
                 group=header.get("group", "main"),
+                hist=hist,
             )
         if len(cols) != int(header.get("n_edges", len(cols))):
             raise ValueError(f"{path}: edge count mismatch vs header")

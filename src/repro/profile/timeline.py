@@ -20,13 +20,31 @@ import json
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
+import numpy as np
+
 from ..core.folding import FoldedTable
+from ..core.histogram import jitter_ns as _hist_jitter, percentile_ns
 from ..core.shadow import SlotKey, edge_label as _edge_key_str
 from .snapshot import ProfileSnapshot
 from .store import ProfileStore
 
-#: fields a timeline can plot; self_ns/mean_ns derive per snapshot.
-TIMELINE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns")
+#: fields a timeline can plot; self_ns/mean_ns derive per snapshot, and
+#: the percentile/jitter fields need schema-v2 histograms (0.0 where a
+#: snapshot has none for the edge).
+TIMELINE_FIELDS = ("count", "total_ns", "self_ns", "mean_ns",
+                   "p50_ns", "p95_ns", "p99_ns", "jitter_ns")
+
+#: histogram-derived fields: per-interval values come from DIFFERENCED
+#: cumulative histograms (exact — bucket counts are cumulative sums),
+#: not from differencing the percentile series (meaningless).
+_PCT_FIELDS = ("p50_ns", "p95_ns", "p99_ns", "jitter_ns")
+
+
+def _pct_of(hist: Optional[np.ndarray], fld: str) -> float:
+    if fld == "jitter_ns":
+        return _hist_jitter(hist)
+    return percentile_ns(hist, {"p50_ns": 0.50, "p95_ns": 0.95,
+                                "p99_ns": 0.99}[fld])
 
 
 @dataclass
@@ -64,7 +82,25 @@ class ShardTimeline:
         `mean_ns` is not cumulative, so differencing it would alias any
         ordinary speedup into a fake restart; instead each interval gets
         its TRUE mean, delta(total_ns) / delta(count) (0 for an idle
-        interval, negative only on an actual counter regression)."""
+        interval, negative only on an actual counter regression).
+
+        The percentile/jitter fields difference the cumulative HISTOGRAMS
+        and read the quantile off each interval's exact distribution
+        (bucket counts are cumulative, so the subtraction is loss-free);
+        -1.0 marks a bucket-count regression (writer restart)."""
+        if fld in _PCT_FIELDS:
+            hists = self._hist_series(key)
+            out = [_pct_of(hists[0], fld)]
+            for i in range(1, len(hists)):
+                prev, cur = hists[i - 1], hists[i]
+                if cur is None:
+                    out.append(0.0)
+                elif prev is None:
+                    out.append(_pct_of(cur, fld))
+                else:
+                    dh = cur.astype(np.int64) - prev.astype(np.int64)
+                    out.append(-1.0 if (dh < 0).any() else _pct_of(dh, fld))
+            return out
         if fld == "mean_ns":
             counts = self.series(key, "count")
             totals = self.series(key, "total_ns")
@@ -76,6 +112,14 @@ class ShardTimeline:
             return out
         s = self.series(key, fld)
         return [s[0]] + [b - a for a, b in zip(s, s[1:])]
+
+    def _hist_series(self, key: SlotKey) -> List[Optional[np.ndarray]]:
+        """Each snapshot's cumulative histogram for `key` (None if absent)."""
+        out: List[Optional[np.ndarray]] = []
+        for t in self.tables:
+            e = t.edges.get(key)
+            out.append(e.hist if e is not None else None)
+        return out
 
     def steps(self) -> List[Any]:
         """Per-snapshot progress marker from writer meta (step/ticks/seq)."""
@@ -181,6 +225,20 @@ class TimelineDiff:
         the seq->index map and series are built once per call)."""
         cols = self.columns()
         idx = {s: i for i, s in enumerate(tl.seqs)}
+        if fld in _PCT_FIELDS:           # interval quantile from hist diffs
+            hists = tl._hist_series(key)
+            out = []
+            for prev, cur in cols:
+                hc = hists[idx[cur]]
+                hp = hists[idx[prev]] if prev is not None else None
+                if hc is None:
+                    out.append(0.0)
+                elif hp is None:
+                    out.append(_pct_of(hc, fld))
+                else:
+                    dh = hc.astype(np.int64) - hp.astype(np.int64)
+                    out.append(-1.0 if (dh < 0).any() else _pct_of(dh, fld))
+            return out
         if fld == "mean_ns":             # true per-interval mean (cf. deltas)
             tot = tl.series(key, "total_ns")
             cnt = tl.series(key, "count")

@@ -33,10 +33,14 @@ XFA instrumentation ('serve'): prefill_request and decode_tick are
 traced boundaries and every chunk step folds a `prefill_chunk` duration,
 so the flow graph separates prefill cost from decode cost per tick;
 queue_wait (Wait kind), ttft, decode_token and e2e latency phases fold
-via tracer.record_duration; truncated_prompt is a count event.  Shards
-land in the profile store exactly like trainer shards —
-`repro.profile query --kind serve`, report/diff/timeline all apply to
-serving runs natively.
+via tracer.record_duration (which also folds the bounded latency
+histograms behind the p50/p95/p99 read-out); truncated_prompt is a count
+event.  Requests carrying a deadline (submit(deadline_ms=...) or
+ServeConfig.deadline_ms) additionally fold one deadline_met or
+deadline_miss count event at finish — the signal the slo-violation
+detector reads.  Shards land in the profile store exactly like trainer
+shards — `repro.profile query --kind serve`, report/diff/timeline all
+apply to serving runs natively.
 """
 
 from __future__ import annotations
@@ -74,6 +78,10 @@ class Request:
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     truncated: bool = False            # prompt cut to fit the cache row
+    #: e2e latency contract in ms (None: untracked); at finish the engine
+    #: folds deadline_met/deadline_miss and sets `deadline_missed`
+    deadline_ms: Optional[float] = None
+    deadline_missed: Optional[bool] = None
     admitted_at: Optional[float] = None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
@@ -181,9 +189,15 @@ class ServingEngine:
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
                sampling: Optional[SamplingParams] = None,
-               on_token: Optional[Callable[[Request, int], None]] = None
-               ) -> Request:
-        """Enqueue a request; returns its handle immediately."""
+               on_token: Optional[Callable[[Request, int], None]] = None,
+               deadline_ms: Optional[float] = None) -> Request:
+        """Enqueue a request; returns its handle immediately.
+
+        `deadline_ms` sets this request's e2e latency contract (falls
+        back to ServeConfig.deadline_ms when that is > 0): at finish the
+        engine folds a deadline_met/deadline_miss count event and flags
+        the handle, feeding the slo-violation detector.  The deadline is
+        observational — a late request still completes."""
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (the engine "
                              "always samples at least the first token)")
@@ -197,6 +211,8 @@ class ServingEngine:
             sampling = SamplingParams(
                 temperature=self.scfg.temperature, top_k=self.scfg.top_k,
                 top_p=self.scfg.top_p, seed=self.scfg.sample_seed)
+        if deadline_ms is None and self.scfg.deadline_ms > 0:
+            deadline_ms = self.scfg.deadline_ms
         # timestamp BEFORE taking the lock: a tick in progress holds it,
         # and that wait is queueing delay the client really experienced
         submitted_at = time.monotonic()
@@ -209,7 +225,8 @@ class ServingEngine:
             self._uid += 1
             req = Request(self._uid, prompt,
                           max_new_tokens, sampling=sampling,
-                          submitted_at=submitted_at, on_token=on_token)
+                          submitted_at=submitted_at, on_token=on_token,
+                          deadline_ms=deadline_ms)
             self.scheduler.add(req)
             self._work.notify_all()
         return req
@@ -420,7 +437,12 @@ class ServingEngine:
         req = self.scheduler.slots[slot_idx].request
         req.done = True
         req.finished_at = now
-        xfa.record_duration("serve", "e2e", (now - req.submitted_at) * 1e9)
+        e2e_ns = (now - req.submitted_at) * 1e9
+        xfa.record_duration("serve", "e2e", e2e_ns)
+        if req.deadline_ms is not None:
+            req.deadline_missed = e2e_ns > req.deadline_ms * 1e6
+            xfa.count_event("serve", "deadline_miss" if req.deadline_missed
+                            else "deadline_met")
         self.completed.append(req)
         self.scheduler.release(slot_idx)
         self.sampler.release(slot_idx)

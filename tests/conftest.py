@@ -1,9 +1,12 @@
 """Shared test helpers."""
 
+import numpy as np
+
 
 def assert_tables_equal(a, b):
-    """Full per-edge FoldedTable equality: every stat, kind, and the metric
-    dict (including presence — absent metric != 0.0 metric)."""
+    """Full per-edge FoldedTable equality: every stat, kind, the metric
+    dict (including presence — absent metric != 0.0 metric), and the
+    latency histogram (None-aware; None != populated)."""
     assert a.edges.keys() == b.edges.keys()
     for k in a.edges:
         ea, eb = a.edges[k], b.edges[k]
@@ -11,3 +14,7 @@ def assert_tables_equal(a, b):
                 ea.kind) == (eb.count, eb.total_ns, eb.child_ns, eb.min_ns,
                              eb.max_ns, eb.kind), k
         assert ea.metrics == eb.metrics, k
+        if ea.hist is None or eb.hist is None:
+            assert ea.hist is None and eb.hist is None, k
+        else:
+            assert np.array_equal(ea.hist, eb.hist), k

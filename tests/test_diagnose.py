@@ -11,13 +11,14 @@ import pytest
 
 from repro.core.folding import EdgeStats, FoldedTable, fold_event_log
 from repro.core.shadow import KIND_WAIT
+from repro.core.histogram import hist_of
 from repro.analysis import (CallAmplification, DiagnosisContext,
                             DriftRegression, EdgeBand, FlowGraph,
                             HotEdgeConcentration, QueueSaturation,
-                            RankImbalance, Thresholds, WaitDominance,
-                            build_context, builtin_detectors,
-                            calibrate_ring, calibrate_runs, diagnose,
-                            run_detectors)
+                            RankImbalance, SloViolation, Thresholds,
+                            WaitDominance, build_context,
+                            builtin_detectors, calibrate_ring,
+                            calibrate_runs, diagnose, run_detectors)
 from repro.profile import ProfileStore, build_timelines, register_run
 from repro.profile.diff import diff_profiles
 
@@ -290,6 +291,50 @@ class TestCallAmplification:
         })
         assert CallAmplification().detect(ctx_of(t)) == []
         assert CallAmplification().detect(ctx_of(healthy_table())) == []
+
+
+def serve_table(missed, met, e2e_ms=()):
+    """A serving profile with deadline count edges and (optionally) an
+    e2e latency histogram — the slo-violation detector's inputs."""
+    t = FoldedTable({
+        ("app", "serve", "prefill_chunk"): edge(50, 40 * MS),
+        ("serve", "serve", "deadline_miss"): edge(missed, 0),
+        ("serve", "serve", "deadline_met"): edge(met, 0),
+    })
+    if e2e_ms:
+        e = edge(len(e2e_ms), sum(e2e_ms) * MS)
+        e.hist = hist_of([int(ms * MS) for ms in e2e_ms])
+        t.edges[("serve", "serve", "e2e")] = e
+    return t
+
+
+class TestSloViolation:
+    def test_fires_crit_with_histogram_evidence(self):
+        # 8 / 100 tracked = 8% miss rate >= crit_rate 5%
+        t = serve_table(8, 92, e2e_ms=[10] * 95 + [50] * 5)
+        [f] = SloViolation().detect(ctx_of(t))
+        assert f.severity == "crit"
+        assert f.subject == "component:serve"
+        assert f.evidence["miss_rate"] == pytest.approx(0.08)
+        assert f.evidence["missed"] == 8
+        assert f.evidence["tracked"] == 100
+        # percentile spread read off the e2e histogram (~log-bucket res.)
+        assert f.evidence["e2e_p50_ns"] == pytest.approx(10 * MS, rel=0.3)
+        assert f.evidence["e2e_p99_ns"] == pytest.approx(50 * MS, rel=0.3)
+        assert "e2e p50/p95/p99" in f.message
+
+    def test_warn_between_rates_without_histogram(self):
+        [f] = SloViolation().detect(ctx_of(serve_table(2, 98)))
+        assert f.severity == "warn"
+        assert "e2e_p99_ns" not in f.evidence   # no hist, no spread
+
+    def test_silent_on_quiet_and_untracked_fixtures(self):
+        # healthy rate (0 misses), below min_tracked, and no deadline
+        # edges at all (deadline tracking disarmed) are all silent
+        assert SloViolation().detect(
+            ctx_of(serve_table(0, 500, e2e_ms=[10] * 20))) == []
+        assert SloViolation().detect(ctx_of(serve_table(1, 3))) == []
+        assert SloViolation().detect(ctx_of(healthy_table())) == []
 
 
 class TestDetectorFramework:

@@ -1,26 +1,34 @@
-"""Golden-file pin of snapshot schema v1.
+"""Golden-file pins of snapshot schemas v1 and v2.
 
-`tests/data/golden_v1.xfa.npz` is a tiny reference snapshot checked into
-the repo (uncompressed, fixed zip metadata — see snapshot._write_npz).
-These tests assert that loading it, reporting over it, and re-saving it
-reproduces the file byte-for-byte.  If any of them fail after a change to
-snapshot.py, the on-disk layout moved: either restore compatibility or
-bump SCHEMA_VERSION, regenerate the golden (run this file as a script),
-and say so loudly in the PR — schema bumps must be deliberate, never a
-side effect.
+`tests/data/golden_v1.xfa.npz` (hist-less) and `golden_v2.xfa.npz`
+(same table + latency histograms) are tiny reference snapshots checked
+into the repo (uncompressed, fixed zip metadata — see
+snapshot._write_npz).  These tests assert that loading each, reporting
+over it, and re-saving it reproduces the file byte-for-byte — and that
+the v2 writer still emits the exact v1 layout for hist-less content
+(the minimal-schema rule, docs/schema.md).  If any of them fail after a
+change to snapshot.py, the on-disk layout moved: either restore
+compatibility or bump SCHEMA_VERSION, regenerate the goldens (run this
+file as a script), and say so loudly in the PR — schema bumps must be
+deliberate, never a side effect.
 """
 
 import os
 
+import numpy as np
 import pytest
 
 from conftest import assert_tables_equal
 from repro.core.folding import EdgeStats, FoldedTable
-from repro.core.views import component_view, render_flow_matrix
+from repro.core.histogram import hist_of
+from repro.core.views import (component_view, render_flow_matrix,
+                              render_percentiles)
 from repro.profile import ProfileSnapshot
 from repro.profile.snapshot import SCHEMA_VERSION
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_v1.xfa.npz")
+GOLDEN_V2 = os.path.join(os.path.dirname(__file__), "data",
+                         "golden_v2.xfa.npz")
 
 
 def golden_table() -> FoldedTable:
@@ -44,6 +52,17 @@ def golden_table() -> FoldedTable:
 
 
 GOLDEN_META = {"label": "golden", "note": "schema v1 reference"}
+GOLDEN_V2_META = {"label": "golden", "note": "schema v2 reference"}
+
+
+def golden_table_v2() -> FoldedTable:
+    """The v1 reference table plus latency histograms on two edges —
+    fixed durations so the bucket counts (and the file bytes) are
+    reproducible from source."""
+    t = golden_table()
+    t.edges[("app", "glibc", "read")].hist = hist_of([18, 82, 120])
+    t.edges[("moe", "pthread", "lock")].hist = hist_of([400, 500])
+    return t
 
 
 def write_golden(path: str = GOLDEN) -> str:
@@ -51,12 +70,18 @@ def write_golden(path: str = GOLDEN) -> str:
     return snap.save(path, compress=False)
 
 
+def write_golden_v2(path: str = GOLDEN_V2) -> str:
+    snap = ProfileSnapshot.from_folded(golden_table_v2(),
+                                       meta=GOLDEN_V2_META)
+    return snap.save(path, compress=False)
+
+
 class TestGoldenSchemaV1:
-    def test_schema_version_still_v1(self):
-        # regenerating the golden on a bump is a DELIBERATE step; this
+    def test_schema_version_is_v2(self):
+        # regenerating the goldens on a bump is a DELIBERATE step; this
         # makes `SCHEMA_VERSION += 1` fail tests until someone does it
-        assert SCHEMA_VERSION == 1, \
-            "schema bumped: regenerate tests/data/golden_v1.xfa.npz " \
+        assert SCHEMA_VERSION == 2, \
+            "schema bumped: regenerate tests/data/golden_v*.xfa.npz " \
             "(python tests/test_golden_schema.py) and update this test"
 
     def test_load_matches_reference_content(self):
@@ -105,13 +130,76 @@ class TestGoldenSchemaV1:
     def test_golden_loads_via_np_load_contract(self):
         """The file stays a plain npz (np.load-readable) — external tooling
         reads snapshots without repro installed."""
-        import numpy as np
         with np.load(GOLDEN) as z:
             assert "__header__" in z and "count" in z
             assert z["count"].dtype == np.int64
             assert z["kind"].dtype == np.int8
             assert z["metric_values"].dtype == np.float64
 
+    def test_histless_writer_emits_v1_layout(self, tmp_path):
+        """The minimal-schema rule: content without histograms serializes
+        as a schema-1 file even under the v2 writer, so hist-less shards
+        stay readable by schema-1-only readers."""
+        out = str(tmp_path / "histless.xfa.npz")
+        ProfileSnapshot.from_folded(golden_table()).save(out)
+        with np.load(out) as z:
+            assert "hist" not in z.files
+        assert ProfileSnapshot.load(out).schema == 1
 
-if __name__ == "__main__":   # regenerate the golden after a DELIBERATE bump
+
+class TestGoldenSchemaV2:
+    def test_load_matches_reference_content(self):
+        snap = ProfileSnapshot.load(GOLDEN_V2)
+        assert snap.schema == 2
+        assert snap.meta == GOLDEN_V2_META
+        assert_tables_equal(snap.to_folded(), golden_table_v2())
+
+    def test_resave_is_byte_stable(self, tmp_path):
+        snap = ProfileSnapshot.load(GOLDEN_V2)
+        out = str(tmp_path / "resaved.xfa.npz")
+        snap.save(out, compress=False)
+        with open(GOLDEN_V2, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read(), \
+                "snapshot v2 byte layout changed — bump SCHEMA_VERSION " \
+                "and regenerate the golden if this was intentional"
+
+    def test_fresh_build_matches_golden_bytes(self, tmp_path):
+        out = write_golden_v2(str(tmp_path / "rebuilt.xfa.npz"))
+        with open(GOLDEN_V2, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_hist_block_np_load_contract(self):
+        """`hist` is a plain uint64 [N, 160] member, zero row == absent."""
+        with np.load(GOLDEN_V2) as z:
+            assert z["hist"].dtype == np.uint64
+            assert z["hist"].shape == (len(z["count"]), 160)
+            # 2 of the 5 reference edges carry a distribution
+            assert int((z["hist"].sum(axis=1) > 0).sum()) == 2
+
+    def test_percentiles_render_from_golden(self):
+        folded = ProfileSnapshot.load(GOLDEN_V2).to_folded()
+        out = render_percentiles(folded)
+        assert "Latency percentiles" in out
+        assert "glibc.read" in out and "pthread.lock" in out
+
+    def test_v1_loads_and_merges_under_v2_reader(self):
+        """Forward compat: a v1 file loads, reports, and merges with a v2
+        file — the hist-less side simply contributes no buckets."""
+        v1 = ProfileSnapshot.load(GOLDEN)
+        v2 = ProfileSnapshot.load(GOLDEN_V2)
+        assert v1.columns.hist is None
+        assert "Component view: app" in \
+            component_view(v1.to_folded(), "app").render()
+        merged = ProfileSnapshot.merge([v1, v2]).to_folded()
+        # same key set folded at double the counts...
+        read = merged.edges[("app", "glibc", "read")]
+        assert read.count == 2 * golden_table().edges[
+            ("app", "glibc", "read")].count
+        # ...but the histogram holds only the v2 side's samples
+        assert read.hist is not None and int(read.hist.sum()) == 3
+        assert merged.edges[("app", "glibc", "write")].hist is None
+
+
+if __name__ == "__main__":  # regenerate the goldens after a DELIBERATE bump
     print("wrote", write_golden())
+    print("wrote", write_golden_v2())

@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis) on the histogram merge algebra.
+
+Separate from test_histograms.py so environments without hypothesis
+(CI installs it, see requirements.txt) skip only the property tests,
+not the unit coverage."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.folding import EdgeColumns, EdgeStats, FoldedTable, \
+    merge_columns
+from repro.core.histogram import hist_of, percentile_ns
+
+#: includes durations past the 2^40 ns range bound — clamped, not lost
+durations = st.lists(st.integers(1, 1 << 41), max_size=200)
+
+
+@settings(max_examples=60, deadline=None)
+@given(durations, st.integers(0, 200))
+def test_hist_merge_is_split_invariant(ds, cut):
+    """hist(whole stream) == hist(part) + hist(rest) for ANY split — the
+    bucket-wise add that merge_columns/EdgeStats.merge performs."""
+    cut = min(cut, len(ds))
+    whole = hist_of(ds)
+    parts = hist_of(ds[:cut]) + hist_of(ds[cut:])
+    assert np.array_equal(whole, parts)
+    assert int(whole.sum()) == len(ds)
+
+
+@settings(max_examples=40, deadline=None)
+@given(durations, durations, durations)
+def test_hist_merge_order_independent(d1, d2, d3):
+    """Shard merge order never changes a bucket (so never a percentile)."""
+    h1, h2, h3 = hist_of(d1), hist_of(d2), hist_of(d3)
+    left = (h1 + h2) + h3
+    right = h1 + (h2 + h3)
+    assert np.array_equal(left, right)
+    assert np.array_equal(h1 + h2, h2 + h1)
+    for q in (0.5, 0.95, 0.99):
+        assert percentile_ns(left, q) == percentile_ns(right, q)
+
+
+@settings(max_examples=40, deadline=None)
+@given(durations, st.randoms(use_true_random=False))
+def test_merge_columns_exact_on_hists(ds, rnd):
+    """End-to-end: splitting a duration stream across two shards and
+    merging the columnar forms reproduces the single-shard histogram."""
+    a, b = [], []
+    for d in ds:
+        (a if rnd.random() < 0.5 else b).append(d)
+
+    def shard(samples):
+        t = FoldedTable()
+        if samples:
+            t.edges[("app", "serve", "e2e")] = EdgeStats(
+                count=len(samples), total_ns=sum(samples),
+                min_ns=min(samples), max_ns=max(samples),
+                hist=hist_of(samples))
+        return EdgeColumns.from_folded(t)
+
+    merged = merge_columns([shard(a), shard(b)]).to_folded()
+    if not ds:
+        assert len(merged) == 0
+        return
+    e = merged.edges[("app", "serve", "e2e")]
+    assert np.array_equal(e.hist, hist_of(ds))

@@ -1,0 +1,114 @@
+"""Latency histograms (schema v2): bucket mapping, percentile read-out,
+tracer feed, and the merge algebra.
+
+The load-bearing property mirrors the fold-split invariant: histograms
+of any split of a sample stream merge (bucket-wise add) to exactly the
+histogram of the whole stream, in any order — so shard merges never
+move a percentile."""
+
+import numpy as np
+import pytest
+
+from repro.core import Tracer
+from repro.core.folding import EdgeColumns, EdgeStats, FoldedTable
+from repro.core.histogram import (BUCKET_EDGES, HIST_BUCKETS, bucket_index,
+                                  hist_of, jitter_ns, percentile_ns)
+
+MS = 1_000_000
+
+
+class TestBucketMapping:
+    def test_every_duration_lands_in_exactly_one_bucket(self):
+        for d in (1, 2, 3, 4, 5, 7, 8, 1000, 10**6, 10**9, (1 << 40) - 1):
+            b = bucket_index(d)
+            assert 0 <= b < HIST_BUCKETS
+            assert BUCKET_EDGES[b] <= d < BUCKET_EDGES[b + 1], d
+
+    def test_out_of_range_clamps(self):
+        assert bucket_index(0) == 0
+        assert bucket_index(-5) == 0
+        assert bucket_index(1 << 50) == HIST_BUCKETS - 1
+
+    def test_monotone(self):
+        ds = [1, 2, 3, 10, 100, 10**4, 10**7, 10**10, (1 << 40) - 1]
+        bs = [bucket_index(d) for d in ds]
+        assert bs == sorted(bs)
+
+    def test_relative_width_bound(self):
+        # 4 sub-buckets per octave: bucket width <= 25% of its lower edge
+        # (from the second octave up; the first octave is exact integers)
+        w = np.diff(BUCKET_EDGES)[8:]
+        assert (w / BUCKET_EDGES[8:-1] <= 0.25 + 1e-9).all()
+
+
+class TestPercentiles:
+    def test_empty_and_none_read_zero(self):
+        assert percentile_ns(None, 0.99) == 0.0
+        assert percentile_ns(np.zeros(HIST_BUCKETS, np.uint64), 0.5) == 0.0
+        assert jitter_ns(None) == 0.0
+
+    def test_percentiles_within_bucket_resolution(self):
+        samples = [10 * MS] * 95 + [80 * MS] * 5
+        h = hist_of(samples)
+        assert int(h.sum()) == 100
+        assert percentile_ns(h, 0.50) == pytest.approx(10 * MS, rel=0.3)
+        assert percentile_ns(h, 0.99) == pytest.approx(80 * MS, rel=0.3)
+        assert jitter_ns(h) == pytest.approx(70 * MS, rel=0.35)
+
+    def test_percentile_is_monotone_in_q(self):
+        h = hist_of([3, 17, 900, 10**6, 10**6, 5 * 10**7])
+        ps = [percentile_ns(h, q) for q in (0.01, 0.25, 0.5, 0.9, 0.999)]
+        assert ps == sorted(ps)
+
+
+def tracer_fold(t):
+    return FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+
+
+class TestTracerFeed:
+    def test_record_duration_feeds_hist(self):
+        t = Tracer()
+        for _ in range(4):
+            t.record_duration("serve", "e2e", 12 * MS)
+        e = tracer_fold(t).edges[("app", "serve", "e2e")]
+        assert e.hist is not None and int(e.hist.sum()) == 4
+        assert e.p50_ns == pytest.approx(12 * MS, rel=0.3)
+
+    def test_gauges_and_brackets_stay_histless(self):
+        t = Tracer()
+        t.record_gauge("serve", "queue_depth", 7.0)
+
+        @t.api("glibc")
+        def read():
+            pass
+
+        read()
+        folded = tracer_fold(t)
+        assert len(folded)
+        for e in folded.edges.values():
+            assert e.hist is None
+
+
+class TestMergeAlgebra:
+    def test_stats_merge_adds_buckets(self):
+        a = EdgeStats(count=2, total_ns=20, min_ns=10, max_ns=10,
+                      hist=hist_of([10, 10]))
+        b = EdgeStats(count=1, total_ns=30, min_ns=30, max_ns=30,
+                      hist=hist_of([30]))
+        m = a.merge(b)
+        assert np.array_equal(m.hist, hist_of([10, 10, 30]))
+        # hist-less side contributes zero buckets, never erases the other
+        m2 = a.merge(EdgeStats(count=1, total_ns=5, min_ns=5, max_ns=5))
+        assert np.array_equal(m2.hist, a.hist)
+
+    def test_columns_roundtrip_preserves_hists(self):
+        t = FoldedTable({
+            ("app", "serve", "e2e"): EdgeStats(
+                count=3, total_ns=60, min_ns=10, max_ns=30,
+                hist=hist_of([10, 20, 30])),
+            ("app", "glibc", "read"): EdgeStats(
+                count=1, total_ns=9, min_ns=9, max_ns=9),
+        })
+        back = EdgeColumns.from_folded(t).to_folded()
+        from conftest import assert_tables_equal
+        assert_tables_equal(back, t)

@@ -11,6 +11,7 @@ import pytest
 from conftest import assert_tables_equal
 from repro.core.folding import (EdgeColumns, EdgeStats, FoldedTable,
                                 fold_event_log, merge_columns)
+from repro.core.histogram import hist_of
 from repro.profile import (ProfileSnapshot, ProfileStore, diff_profiles,
                            load_profile)
 from repro.profile.__main__ import main as profile_cli
@@ -47,7 +48,8 @@ class TestSnapshot:
         ProfileSnapshot.from_folded(t, meta={"label": "x"}).save(p)
         snap = ProfileSnapshot.load(p)
         assert snap.meta["label"] == "x"
-        assert snap.schema == SCHEMA_VERSION
+        # hist-less content serializes as the minimal schema (v1 bytes)
+        assert snap.schema == 1
         back = snap.to_folded()
         assert back.group == "proc0"
         assert_tables_equal(back, t)
@@ -56,6 +58,12 @@ class TestSnapshot:
         e = back.edges[("app", "moe", "dispatch")]
         assert e.metrics == {"flops": 1e9, "bytes": 0.0}
         assert back.edges[("moe", "pthread", "lock")].metrics == {}
+        # a histogram column promotes the written schema to the current one
+        t.edges[("app", "glibc", "read")].hist = hist_of([18, 4])
+        ProfileSnapshot.from_folded(t, meta={"label": "x"}).save(p)
+        snap2 = ProfileSnapshot.load(p)
+        assert snap2.schema == SCHEMA_VERSION
+        assert_tables_equal(snap2.to_folded(), t)
 
     def test_empty_roundtrip(self, tmp_path):
         p = str(tmp_path / "e.xfa.npz")
@@ -65,9 +73,16 @@ class TestSnapshot:
     def test_rejects_newer_schema(self, tmp_path):
         t = fold_event_log(EVENTS[:2])
         p = str(tmp_path / "t.xfa.npz")
-        snap = ProfileSnapshot.from_folded(t)
-        snap.schema = SCHEMA_VERSION + 1
-        snap.save(p)
+        ProfileSnapshot.from_folded(t).save(p)
+        # the writer derives the schema from content (minimal-schema rule),
+        # so forge the header bytes to fake a future version
+        with np.load(p, allow_pickle=False) as z:
+            members = {k: z[k] for k in z.files}
+        header = json.loads(bytes(members["__header__"]).decode("utf-8"))
+        header["schema"] = SCHEMA_VERSION + 1
+        members["__header__"] = np.frombuffer(
+            json.dumps(header).encode("utf-8"), dtype=np.uint8)
+        np.savez(p, **members)
         with pytest.raises(ValueError, match="schema"):
             ProfileSnapshot.load(p)
 

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Fail CI when docs/cli.md falls behind the actual CLI surface.
+
+Enumerates every subcommand and every long option of
+`python -m repro.profile` straight from the argparse tree
+(repro.profile.__main__.build_parser — no subprocess, no help-text
+scraping) and requires each to appear verbatim in docs/cli.md:
+
+  * each subcommand name must appear as an inline-code token,
+    e.g. `report` (backticked, so prose mentions don't count);
+  * each long flag string (e.g. --thresholds) must appear anywhere
+    in the file — flag tables and worked examples both satisfy it.
+
+Exit 0 when the docs cover everything, 1 with a list of the missing
+tokens otherwise, 2 when docs/cli.md itself is missing.  Run from the
+repo root (CI does); PYTHONPATH=src is set up by the script itself so
+`python tools/check_cli_docs.py` works standalone.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+DOC = os.path.join(REPO, "docs", "cli.md")
+
+# argparse-generated noise not worth documenting per subcommand
+IGNORED_FLAGS = {"--help"}
+
+
+def cli_surface():
+    """(subcommands, {subcommand: sorted long flags}) from the parser."""
+    from repro.profile.__main__ import build_parser
+    ap = build_parser()
+    subs = next(a for a in ap._actions
+                if isinstance(a, argparse._SubParsersAction))
+    flags = {}
+    for name, sp in subs.choices.items():
+        longs = set()
+        for act in sp._actions:
+            longs.update(s for s in act.option_strings
+                         if s.startswith("--") and s not in IGNORED_FLAGS)
+        flags[name] = sorted(longs)
+    return sorted(subs.choices), flags
+
+
+def main() -> int:
+    if not os.path.exists(DOC):
+        print(f"check_cli_docs: {DOC} does not exist", file=sys.stderr)
+        return 2
+    text = open(DOC).read()
+    code_tokens = set(re.findall(r"`([^`]+)`", text))
+    subcommands, flags = cli_surface()
+    missing = []
+    for cmd in subcommands:
+        # the subcommand must be named as an inline-code token (alone or
+        # inside a backticked invocation like `python -m repro.profile gc`)
+        if not any(re.search(rf"(^|[\s.]){re.escape(cmd)}($|\s)", tok)
+                   for tok in code_tokens):
+            missing.append(f"subcommand `{cmd}`")
+        for flag in flags[cmd]:
+            if flag not in text:
+                missing.append(f"{cmd} flag {flag}")
+    if missing:
+        print(f"check_cli_docs: docs/cli.md is missing {len(missing)} "
+              f"item(s):", file=sys.stderr)
+        for m in missing:
+            print(f"  - {m}", file=sys.stderr)
+        return 1
+    n_flags = sum(len(v) for v in flags.values())
+    print(f"docs/cli.md covers all {len(subcommands)} subcommands "
+          f"and {n_flags} flags")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
