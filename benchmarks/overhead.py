@@ -1,82 +1,281 @@
-"""Paper Table 1/3 analogue: runtime overhead of full-trace XFA.
+"""Paper Table 1/3 analogue: runtime overhead of full-trace XFA,
+plus the adaptive-governor gate (`--budget-pct`).
 
 Scaler claims 20.3% runtime overhead for 100% API-invocation tracing. Our
-three layers are measured separately on a real (CPU) training loop:
+layers are measured on real (CPU) train AND serve loops:
 
-  baseline     XFA fully disabled
-  host         L1 host tracer on every framework boundary
-  host+device  L1 + L2 in-graph fold table threaded through the step
+  baseline      XFA fully disabled
+  host          L1 host tracer on every framework boundary
+  host+device   L1 + L2 in-graph fold table threaded through the step
+  governed      L1 under the adaptive overhead governor (core.sampler):
+                hot edges back off to 1-in-k timing with unbiased
+                scale-up while counting stays exact
 
-The paper's bar is ~20%; the in-graph fold should be far cheaper because the
-fold rides inside the compiled step (a few scalar adds vs 1e9-FLOP matmuls).
+The paper's bar is ~20%; the in-graph fold should be far cheaper because
+the fold rides inside the compiled step (a few scalar adds vs 1e9-FLOP
+matmuls).
+
+Measurement discipline: all variants of a section are INTERLEAVED
+(round-robin steps / alternating drains / alternating hot-loop blocks)
+and compared by median — on a shared machine, wall time drifts by more
+per minute than the host tracer costs, so back-to-back loops would
+measure the drift, not the tracer.
+
+`--budget-pct G` turns the run into a GATE (the overhead-sentinel CI
+lane): exit 1 unless, with the governor attached at budget G,
+
+  * train host overhead stays <= G percent of the baseline step,
+  * serve host overhead stays <= G percent of the untraced drain,
+  * a pure no-op hot loop (nothing but bracket cost) does not run
+    slower governed than fully traced beyond noise, with back-off
+    actually engaged (min effective sampling rate < 1).
+
+The hot loop cannot itself get under a percent-level budget — the
+irreducible counting floor (count fold + caller frame) is a large share
+of the full bracket — which is exactly why the budget assertion runs on
+the real loops and the hot loop only has to show the governor removes
+timing cost where nothing else exists to hide it.
 """
 
 from __future__ import annotations
 
+import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke
-from repro.configs.base import TrainConfig
+from repro.configs.base import ServeConfig, TrainConfig
 from repro.core import tracer as xfa
+from repro.core.tracer import Tracer
 from repro.data.pipeline import SyntheticLMData
 from repro.models import build_model
-from repro.optim import adamw
 from repro.runtime.trainer import init_train_state, make_train_step
 
+perf_ns = time.perf_counter_ns
 
-def _loop(model, tcfg, steps, with_host, with_device, data):
+
+def _train_medians(steps: int, budget: float = 0.0):
+    """Median per-step wall ns for the four train variants, measured
+    round-robin (one step of each per round) so machine drift hits every
+    variant equally."""
+    import dataclasses
+
+    from repro.core.sampler import SamplerController
+
+    # an arch with live device-fold traffic (MoE emits expert loads)
+    model_full = build_model(get_smoke("phi3_5_moe_42b"), impl="ref")
+    tcfg = TrainConfig(microbatches=1, ckpt_interval=0)
+    data = SyntheticLMData(model_full.cfg, 4, 64)
+    # device-fold OFF: rebuild with fold_spec stripped
+    model_off = dataclasses.replace(
+        model_full, rt=dataclasses.replace(model_full.rt, fold_spec=None))
+
+    ctl = SamplerController(budget) if budget > 0 else None
+    variants = [("base", model_off, False, None),
+                ("host", model_off, True, None),
+                ("full", model_full, True, None)]
+    if ctl is not None:
+        variants.append(("gov", model_off, True, ctl))
+
+    ctxs = {}
     xfa.reset()
-    xfa.set_enabled(with_host)
-    try:
+    xfa.set_enabled(True)
+    for name, model, _enabled, _ctl in variants:
         step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
         state = init_train_state(model, jax.random.key(0), tcfg)
         table = model.table()
         batch = {k: jnp.asarray(v) for k, v in data.generate(0).items()}
         state, m, table = step_fn(state, batch, table)   # compile
         jax.block_until_ready(m["loss"])
-        t0 = time.perf_counter_ns()
-        for i in range(steps):
-            if with_host:
-                with xfa.scope("runtime", "dispatch_step"):
+        ctxs[name] = [step_fn, state, batch, table]
+
+    times = {name: [] for name, *_ in variants}
+    try:
+        for _ in range(steps):
+            for name, _model, enabled, c in variants:
+                step_fn, state, batch, table = ctxs[name]
+                xfa.TRACER.enabled = enabled
+                xfa.TRACER.sampler = c
+                t0 = perf_ns()
+                if enabled:
+                    with xfa.scope("runtime", "dispatch_step"):
+                        state, m, table = step_fn(state, batch, table)
+                    with xfa.scope("runtime", "device_sync", xfa.KIND_WAIT):
+                        jax.block_until_ready(m["loss"])
+                else:
                     state, m, table = step_fn(state, batch, table)
-                with xfa.scope("runtime", "device_sync", xfa.KIND_WAIT):
                     jax.block_until_ready(m["loss"])
-            else:
-                state, m, table = step_fn(state, batch, table)
-                jax.block_until_ready(m["loss"])
-        return (time.perf_counter_ns() - t0) / steps
+                times[name].append(perf_ns() - t0)
+                ctxs[name] = [step_fn, state, batch, table]
+    finally:
+        xfa.TRACER.enabled = True
+        xfa.TRACER.sampler = None
+    return {name: float(np.median(v)) for name, v in times.items()}
+
+
+def _serve_medians(budget: float = 0.0, rounds: int = 4,
+                   requests: int = 4, max_new: int = 12):
+    """Median wall ns of draining a fixed closed-loop workload on the
+    tiny serving engine, alternating untraced / traced(/governed) drains
+    on the SAME engine."""
+    import dataclasses
+
+    from repro.serving import SamplingParams, ServingEngine
+
+    cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"),
+                              n_layers=2, vocab=512)
+    model = build_model(cfg, impl="ref")
+    params = model.init(jax.random.key(0))
+    engine = ServingEngine(model, params, ServeConfig(
+        max_batch=4, max_seq_len=256, eos_token=-1))
+    sampling = SamplingParams(temperature=0.0, seed=1)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 48)))
+               for _ in range(requests)]
+    # warmup: compile every chunk bucket + pooled decode outside the window
+    for w in engine.chunk_buckets() or [64]:
+        engine.submit(rng.integers(0, cfg.vocab, min(w, 200)), 2,
+                      sampling=sampling)
+        engine.run_until_drained()
+    engine.completed.clear()
+
+    def drain() -> float:
+        t0 = perf_ns()
+        for p in prompts:
+            engine.submit(p, max_new, sampling=sampling)
+        engine.run_until_drained()
+        engine.completed.clear()
+        return float(perf_ns() - t0)
+
+    times = {"untraced": [], "traced": []}
+    xfa.reset()
+    try:
+        for _ in range(rounds):
+            xfa.set_enabled(False)
+            times["untraced"].append(drain())
+            xfa.set_enabled(True)
+            xfa.set_overhead_budget(budget)
+            times["traced"].append(drain())
+            xfa.set_overhead_budget(0.0)
     finally:
         xfa.set_enabled(True)
+        xfa.set_overhead_budget(0.0)
+    return {name: float(np.median(v)) for name, v in times.items()}
 
 
-def run(steps: int = 8):
-    # an arch with live device-fold traffic (MoE emits expert loads)
-    model_nofold = build_model(get_smoke("phi3_5_moe_42b"), impl="ref")
-    tcfg = TrainConfig(microbatches=1, ckpt_interval=0)
-    data = SyntheticLMData(model_nofold.cfg, 4, 64)
+def _hot_loop(budget: float, blocks: int = 8, iters: int = 20_000):
+    """Per-call ns of a no-op `@api` boundary on scratch tracers —
+    nothing but bracket cost — with fully-traced and governed blocks
+    alternating.  Returns (full_ns, governed_ns, min_rate) where
+    min_rate is the smallest effective sampling rate the governor
+    reached (1.0 if it never backed off)."""
+    t_full = Tracer()
+    t_gov = Tracer()
+    ctl = t_gov.set_overhead_budget(budget)
 
-    # device-fold OFF: rebuild with fold_spec stripped
-    import dataclasses
-    model_off = dataclasses.replace(
-        model_nofold, rt=dataclasses.replace(model_nofold.rt,
-                                             fold_spec=None))
-    base = _loop(model_off, tcfg, steps, False, False, data)
-    host = _loop(model_off, tcfg, steps, True, False, data)
-    full = _loop(model_nofold, tcfg, steps, True, True, data)
+    @t_full.api("hot")
+    def f_full() -> None:
+        return None
 
+    @t_gov.api("hot")
+    def f_gov() -> None:
+        return None
+
+    for _ in range(1024):
+        f_full()
+        f_gov()
+    full, gov = [], []
+    for _ in range(blocks):
+        t0 = perf_ns()
+        for _ in range(iters):
+            f_full()
+        full.append((perf_ns() - t0) / iters)
+        t0 = perf_ns()
+        for _ in range(iters):
+            f_gov()
+        gov.append((perf_ns() - t0) / iters)
+    rates = ctl.rates() if ctl is not None else {}
+    return (float(np.median(full)), float(np.median(gov)),
+            min(rates.values(), default=1.0))
+
+
+def run(steps: int = 8, budget_pct: float = 0.0):
+    budget = budget_pct / 100.0
+    tm = _train_medians(steps, budget=budget)
+    base = tm["base"]
     rows = [
         ("overhead.baseline_step_us", base / 1e3, ""),
-        ("overhead.host_pct", 100 * (host - base) / base,
+        ("overhead.host_pct", 100 * (tm["host"] - base) / base,
          "paper Scaler: 20.3%"),
-        ("overhead.host_device_pct", 100 * (full - base) / base,
+        ("overhead.host_device_pct", 100 * (tm["full"] - base) / base,
          "full trace incl. in-graph fold"),
     ]
-    return rows
+
+    sm = _serve_medians(budget=budget)
+    serve_pct = 100 * (sm["traced"] - sm["untraced"]) / sm["untraced"]
+    rows.append(("overhead.serve_untraced_ms", sm["untraced"] / 1e6, ""))
+    rows.append(("overhead.serve_host_pct", serve_pct,
+                 "traced-vs-untraced closed-loop drain"
+                 + (" (governed)" if budget else "")))
+
+    ok = True
+    if budget > 0:
+        gov_pct = 100 * (tm["gov"] - base) / base
+        rows.append(("overhead.host_governed_pct", gov_pct,
+                     f"governor at budget {budget_pct:.0f}%"))
+
+        hot_full, hot_gov, min_rate = _hot_loop(budget)
+        rows.append(("overhead.hotloop_full_ns", hot_full,
+                     "no-op @api boundary, every call timed"))
+        rows.append(("overhead.hotloop_governed_ns", hot_gov,
+                     "same boundary under the governor"))
+        rows.append(("overhead.hotloop_min_rate", min_rate,
+                     "effective sampling rate after back-off"))
+
+        checks = [
+            ("train_under_budget", gov_pct <= budget_pct),
+            ("serve_under_budget", serve_pct <= budget_pct),
+            # the governed boundary keeps the counting floor, so parity
+            # within noise already demonstrates the bracket cost is gone;
+            # a governed loop RELIABLY slower than full trace would mean
+            # the governor itself is the overhead
+            ("governed_not_slower", hot_gov <= hot_full * 1.10),
+            ("backoff_engaged", min_rate < 1.0),
+        ]
+        for name, passed in checks:
+            rows.append((f"overhead.gate.{name}", float(passed),
+                         "1 = pass"))
+            ok = ok and passed
+    return rows, ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=8,
+                    help="timed train steps per variant (round-robin)")
+    ap.add_argument("--budget-pct", type=float, default=0.0,
+                    help="attach the overhead governor at this budget "
+                         "(percent of wall time) and GATE: exit 1 unless "
+                         "host overhead stays under it on train + serve "
+                         "and back-off engages on the hot loop")
+    ap.add_argument("-o", "--output", default="",
+                    help="also write the CSV rows to this file")
+    args = ap.parse_args(argv)
+    rows, ok = run(steps=args.steps, budget_pct=args.budget_pct)
+    lines = [f"{name},{val:.2f},{note}" for name, val, note in rows]
+    print("\n".join(lines))
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    if not ok:
+        print("overhead: budget gate FAILED", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    for name, val, note in run():
-        print(f"{name},{val:.2f},{note}")
+    sys.exit(main())

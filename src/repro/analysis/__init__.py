@@ -21,9 +21,9 @@ from .calibrate import (CALIBRATE_FIELDS, EdgeBand, Thresholds,
 from .detectors import (SEVERITIES, CallAmplification, Detector,
                         DiagnosisContext, DriftRegression, Finding,
                         HotEdgeConcentration, QueueSaturation,
-                        RankImbalance, SloViolation, WaitDominance,
-                        builtin_detectors, detector_classes, run_detectors,
-                        severity_rank)
+                        RankImbalance, SamplingBackoff, SloViolation,
+                        WaitDominance, builtin_detectors, detector_classes,
+                        run_detectors, severity_rank)
 from .diagnose import (Diagnosis, build_context, diagnose,
                        load_detector_config, resolve_run_dir)
 
@@ -34,8 +34,9 @@ __all__ = [
     "calibrate_runs",
     "SEVERITIES", "CallAmplification", "Detector", "DiagnosisContext",
     "DriftRegression", "Finding", "HotEdgeConcentration", "QueueSaturation",
-    "RankImbalance", "SloViolation", "WaitDominance", "builtin_detectors",
-    "detector_classes", "run_detectors", "severity_rank",
+    "RankImbalance", "SamplingBackoff", "SloViolation", "WaitDominance",
+    "builtin_detectors", "detector_classes", "run_detectors",
+    "severity_rank",
     "Diagnosis", "build_context", "diagnose", "load_detector_config",
     "resolve_run_dir",
 ]

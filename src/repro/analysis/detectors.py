@@ -26,6 +26,10 @@ Built-ins:
                        the serving engine folds (deadline_met/deadline_miss
                        count edges), with e2e latency percentiles from the
                        schema-v2 histograms as evidence
+  sampling-backoff     informational: which edges the adaptive overhead
+                       governor (core.sampler) subsampled, at what
+                       effective rate — time columns on those edges are
+                       unbiased scale-ups, counts stay exact
 """
 
 from __future__ import annotations
@@ -423,11 +427,44 @@ class SloViolation:
             evidence=evidence)]
 
 
+@dataclass
+class SamplingBackoff:
+    """Informational read-out of the overhead governor's sampling state.
+
+    Never warns on its own — back-off is the governor doing its job —
+    but every diagnosis that reasons about time columns should see when
+    those columns are scaled estimates rather than full traces.  Fires
+    one info finding per subsampled edge (rate below `max_rate`), with
+    the effective rate and the exact count as evidence."""
+
+    name: str = "sampling-backoff"
+    max_rate: float = 1.0
+    min_count: int = 1
+
+    def detect(self, ctx: DiagnosisContext) -> List[Finding]:
+        out = []
+        for key in sorted(ctx.graph.edges):
+            e = ctx.graph.edges[key]
+            if e.sample_rate is None or e.sample_rate >= self.max_rate \
+                    or e.count < self.min_count:
+                continue
+            k = round(1.0 / e.sample_rate) if e.sample_rate > 0 else 0
+            out.append(Finding(
+                self.name, "info", f"edge:{edge_label(key)}",
+                f"overhead governor subsampled {edge_label(key)} at "
+                f"effective rate {e.sample_rate:.4f} (~1-in-{k}); its "
+                f"{e.count} calls counted exactly, time columns are "
+                f"unbiased scale-ups",
+                evidence={"sample_rate": e.sample_rate, "count": e.count,
+                          "total_ns": e.total_ns}))
+        return out
+
+
 def detector_classes() -> Dict[str, type]:
     """Shipped detector classes keyed by their canonical name."""
     classes = (WaitDominance, HotEdgeConcentration, RankImbalance,
                QueueSaturation, DriftRegression, CallAmplification,
-               SloViolation)
+               SloViolation, SamplingBackoff)
     return {cls().name: cls for cls in classes}
 
 

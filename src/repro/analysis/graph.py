@@ -47,6 +47,11 @@ class FlowEdge:
     #: frozen dataclass' == well-defined despite the ndarray
     hist: Optional[np.ndarray] = field(default=None, compare=False,
                                        repr=False)
+    #: effective timing-sample rate (schema v3) when the overhead governor
+    #: subsampled this edge; None == fully sampled.  Counts stay exact,
+    #: time columns are unbiased scale-ups — detectors can weigh evidence
+    #: from subsampled edges accordingly
+    sample_rate: Optional[float] = field(default=None, compare=False)
 
     @property
     def caller(self) -> str:
@@ -168,12 +173,15 @@ class FlowGraph:
             hist = None
             if cols.hist is not None and cols.hist[j].any():
                 hist = cols.hist[j]
+            rate = None
+            if cols.sample_rate is not None and cols.sample_rate[j] < 1.0:
+                rate = float(cols.sample_rate[j])
             edges[k] = FlowEdge(
                 key=k, kind=int(cols.kind[j]), count=int(cols.count[j]),
                 total_ns=int(cols.total_ns[j]),
                 child_ns=int(cols.child_ns[j]),
                 min_ns=int(cols.min_ns[j]), max_ns=int(cols.max_ns[j]),
-                metrics=folded_metrics[j], hist=hist)
+                metrics=folded_metrics[j], hist=hist, sample_rate=rate)
         nodes: Dict[str, FlowNode] = {}
         wait = cols.kind == KIND_WAIT
         for name, rows in cols.group_rows("component").items():

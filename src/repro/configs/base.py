@@ -282,6 +282,11 @@ class TrainConfig:
     ckpt_interval: int = 200
     ckpt_async: bool = True
     seed: int = 0
+    #: host-tracer overhead budget as a fraction of wall time (0 = governor
+    #: off, every boundary timed on every call).  When > 0 the trainer
+    #: attaches the adaptive governor (core.sampler): hot edges back off to
+    #: 1-in-k timing with unbiased scale-up while counting stays exact.
+    xfa_overhead_budget: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -342,6 +347,11 @@ class ServeConfig:
     #: free-form key=value metadata merged into the run manifest at engine
     #: start (the run registry indexes it for `repro.profile query`)
     profile_meta: Tuple[Tuple[str, str], ...] = ()
+    #: host-tracer overhead budget as a fraction of wall time (0 = governor
+    #: off); see TrainConfig.xfa_overhead_budget — the engine attaches the
+    #: governor at construction so the serve loop's per-tick boundaries
+    #: back off under load instead of eating the latency budget
+    xfa_overhead_budget: float = 0.0
 
 
 def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:

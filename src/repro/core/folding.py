@@ -47,6 +47,26 @@ from .shadow import (KIND_CALL, KIND_NAMES, KIND_WAIT, ShadowTable,
 _I64_MAX = np.iinfo(np.int64).max
 
 
+def merge_rates(rate_a: Optional[float], count_a: int,
+                rate_b: Optional[float], count_b: int) -> Optional[float]:
+    """Count-weighted merge of two effective sampling rates.
+
+    `None` means fully sampled (rate 1.0).  With rate = timed/seen per
+    shard, the count-weighted arithmetic mean is exactly the merged
+    shard's timed/seen — so the merged rate stays the true effective
+    rate.  A merge that lands back at >= 1.0 normalizes to None so
+    fully-sampled data never grows a redundant column."""
+    if rate_a is None and rate_b is None:
+        return None
+    ra = 1.0 if rate_a is None else rate_a
+    rb = 1.0 if rate_b is None else rate_b
+    total = count_a + count_b
+    if total <= 0:
+        return None
+    rate = (ra * count_a + rb * count_b) / total
+    return None if rate >= 1.0 else rate
+
+
 @dataclass
 class EdgeStats:
     """Folded statistics of one cross-flow edge (caller → component.api)."""
@@ -64,6 +84,11 @@ class EdgeStats:
     #: elementwise) — conftest.assert_tables_equal compares hists explicitly
     hist: Optional[np.ndarray] = field(default=None, compare=False,
                                        repr=False)
+    #: effective timing-sample rate in (0, 1) when the overhead governor
+    #: subsampled this edge (core.sampler): counts are exact, time columns
+    #: are unbiased scale-ups.  None means fully sampled (rate 1.0) —
+    #: compare=False because None and a merged-back 1.0 are the same fact
+    sample_rate: Optional[float] = field(default=None, compare=False)
 
     @property
     def self_ns(self) -> int:
@@ -95,6 +120,11 @@ class EdgeStats:
         """Tail jitter as a percentile delta: p99 - p50."""
         return _hist_jitter(self.hist)
 
+    @property
+    def effective_rate(self) -> float:
+        """sample_rate with the None == fully-sampled default resolved."""
+        return 1.0 if self.sample_rate is None else self.sample_rate
+
     def merge(self, other: "EdgeStats") -> "EdgeStats":
         metrics = dict(self.metrics)
         for k, v in other.metrics.items():
@@ -115,6 +145,8 @@ class EdgeStats:
             kind=self.kind if self.count else other.kind,
             metrics=metrics,
             hist=hist,
+            sample_rate=merge_rates(self.sample_rate, self.count,
+                                    other.sample_rate, other.count),
         )
 
     def to_json(self) -> dict:
@@ -132,6 +164,8 @@ class EdgeStats:
             # a human-inspected json dump
             out["hist"] = {str(int(b)): int(self.hist[b])
                            for b in np.nonzero(self.hist)[0]}
+        if self.sample_rate is not None:
+            out["sample_rate"] = float(self.sample_rate)
         return out
 
     @staticmethod
@@ -151,6 +185,7 @@ class EdgeStats:
             kind=kind,
             metrics=dict(d.get("metrics", {})),
             hist=hist,
+            sample_rate=d.get("sample_rate"),
         )
 
 
@@ -170,7 +205,12 @@ class FoldedTable:
 
     # -- constructors -------------------------------------------------------
     @staticmethod
-    def from_shadow(table: ShadowTable, infos: Iterable[SlotInfo]) -> "FoldedTable":
+    def from_shadow(table: ShadowTable, infos: Iterable[SlotInfo],
+                    rates: Optional[Mapping[int, float]] = None
+                    ) -> "FoldedTable":
+        """`rates` attaches the governor's per-slot effective sampling
+        rate (core.sampler — only subsampled slots appear) to the folded
+        edges; omitted slots stay at the implicit rate-1.0 None."""
         edges: Dict[SlotKey, EdgeStats] = {}
         for info in infos:
             s = info.slot
@@ -187,13 +227,17 @@ class FoldedTable:
                 max_ns=int(table.max_ns[s]),
                 kind=info.kind,
                 hist=hist,
+                sample_rate=rates.get(s) if rates else None,
             )
         return FoldedTable(edges, group=table.group)
 
     @staticmethod
-    def from_set(tables: ShadowTableSet) -> List["FoldedTable"]:
+    def from_set(tables: ShadowTableSet,
+                 rates: Optional[Mapping[int, float]] = None
+                 ) -> List["FoldedTable"]:
         infos = tables.registry.infos()
-        return [FoldedTable.from_shadow(t, infos) for t in tables.tables()]
+        return [FoldedTable.from_shadow(t, infos, rates=rates)
+                for t in tables.tables()]
 
     # -- algebra --------------------------------------------------------------
     def merge(self, other: "FoldedTable") -> "FoldedTable":
@@ -263,6 +307,7 @@ class FoldedTable:
                 max_ns=int(v.max_ns * factor),
                 kind=v.kind,
                 metrics=dict(v.metrics),
+                sample_rate=v.sample_rate,
             )
             for k, v in self.edges.items()
         }
@@ -332,6 +377,10 @@ class EdgeColumns:
     metric_mask: np.ndarray            # bool    [M, N]
     group: str = "main"
     hist: Optional[np.ndarray] = None  # uint64 [N, HIST_BUCKETS] or None
+    #: optional float64 [N] effective timing-sample rate column (schema
+    #: v3): None when every edge is fully sampled; rows at exactly 1.0
+    #: mean *that* edge is fully sampled (the None of EdgeStats)
+    sample_rate: Optional[np.ndarray] = None
 
     @staticmethod
     def empty(group: str = "main") -> "EdgeColumns":
@@ -360,6 +409,9 @@ class EdgeColumns:
         hist = None
         if any(e.hist is not None for e in table.edges.values()):
             hist = np.zeros((n, HIST_BUCKETS), dtype=np.uint64)
+        rate = None
+        if any(e.sample_rate is not None for e in table.edges.values()):
+            rate = np.ones(n, dtype=np.float64)  # 1.0 == fully sampled
         for j, k in enumerate(keys):
             e = table.edges[k]
             count[j] = e.count
@@ -370,13 +422,15 @@ class EdgeColumns:
             kind[j] = e.kind
             if hist is not None and e.hist is not None:
                 hist[j] = e.hist
+            if rate is not None and e.sample_rate is not None:
+                rate[j] = e.sample_rate
             for m, v in e.metrics.items():
                 i = mnames[m]
                 mvals[i, j] = v
                 mmask[i, j] = True
         return EdgeColumns(keys, count, total_ns, child_ns, min_ns, max_ns,
                            kind, list(mnames), mvals, mmask,
-                           group=table.group, hist=hist)
+                           group=table.group, hist=hist, sample_rate=rate)
 
     # -- graph projections ---------------------------------------------------
     @property
@@ -401,11 +455,12 @@ class EdgeColumns:
         mm = self.metric_mask[:, rows] if len(self.metric_names) \
             else self.metric_mask[:, :0]
         h = self.hist[rows] if self.hist is not None else None
+        r = self.sample_rate[rows] if self.sample_rate is not None else None
         return EdgeColumns(keys, self.count[rows], self.total_ns[rows],
                            self.child_ns[rows], self.min_ns[rows],
                            self.max_ns[rows], self.kind[rows],
                            list(self.metric_names), m, mm, group=self.group,
-                           hist=h)
+                           hist=h, sample_rate=r)
 
     def group_rows(self, by: str = "component") -> Dict[str, np.ndarray]:
         """Edge-row indices grouped by one key part: 'caller' (0),
@@ -431,6 +486,9 @@ class EdgeColumns:
             hist = None
             if self.hist is not None and self.hist[j].any():
                 hist = self.hist[j].copy()   # zero row == no distribution
+            rate = None
+            if self.sample_rate is not None and self.sample_rate[j] < 1.0:
+                rate = float(self.sample_rate[j])  # 1.0 row == rate None
             edges[k] = EdgeStats(
                 count=int(self.count[j]),
                 total_ns=int(self.total_ns[j]),
@@ -440,6 +498,7 @@ class EdgeColumns:
                 kind=int(self.kind[j]),
                 metrics=metrics[j],
                 hist=hist,
+                sample_rate=rate,
             )
         return FoldedTable(edges, group=self.group)
 
@@ -464,6 +523,10 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
                                       scatter) — output has a hist block
                                       iff any input part has one, and a
                                       hist-less part contributes zeros
+      sample_rate                     count-weighted mean (merge_rates
+                                      semantics) — present iff any part
+                                      carries rates; rate-less parts
+                                      contribute rate 1.0 per count
 
     The output row order is first-seen order over `parts` (NOT sorted);
     `group` is the common group label of ALL parts — including empty
@@ -497,6 +560,8 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
     mmask = np.zeros((len(mnames), u), dtype=bool)
     hist = np.zeros((u, HIST_BUCKETS), dtype=np.uint64) \
         if any(p.hist is not None for p in parts) else None
+    rate_w = np.zeros(u, dtype=np.float64) \
+        if any(p.sample_rate is not None for p in parts) else None
     for p in parts:
         inv = np.fromiter((index[k] for k in p.keys), dtype=np.int64,
                           count=len(p.keys))
@@ -507,6 +572,10 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
         np.maximum.at(max_ns, inv, p.max_ns)
         if hist is not None and p.hist is not None:
             np.add.at(hist, inv, p.hist)
+        if rate_w is not None:
+            prate = p.sample_rate if p.sample_rate is not None \
+                else np.ones(len(p), dtype=np.float64)
+            np.add.at(rate_w, inv, prate * p.count)
         und = ~decided[inv]
         kind[inv[und]] = p.kind[und]
         decided[inv] = decided[inv] | (p.count > 0)
@@ -517,9 +586,13 @@ def merge_columns(parts: List[EdgeColumns]) -> EdgeColumns:
                 tgt = inv[present]
                 np.add.at(mvals[g], tgt, p.metric_values[i][present])
                 mmask[g][tgt] = True
+    rate = None
+    if rate_w is not None:
+        rate = rate_w / np.maximum(count, 1)
+        rate[count == 0] = 1.0   # a never-counted edge is trivially full
     return EdgeColumns(list(index), count, total_ns, child_ns, min_ns,
                        max_ns, kind, list(mnames), mvals, mmask, group=group,
-                       hist=hist)
+                       hist=hist, sample_rate=rate)
 
 
 def fold_event_log(events: Iterable[Tuple[str, str, str, int]],

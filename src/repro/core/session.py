@@ -150,7 +150,8 @@ class XFASession:
 
     # -- report --------------------------------------------------------------
     def host_folds(self) -> List[FoldedTable]:
-        return FoldedTable.from_set(self.tracer.tables)
+        return FoldedTable.from_set(self.tracer.tables,
+                                    rates=self.tracer.sample_rates())
 
     def folded_all(self, include_replicated: bool = True) -> FoldedTable:
         """Raw merge of host + device + static folds — no attribution, no

@@ -165,15 +165,54 @@ class ShadowTable:
             self._grow(slot + 1)
         self.count[slot] += n
 
-    def record_hist(self, slot: int, dur_ns: int) -> None:
-        """Fold one duration into the slot's latency histogram.  Callers
-        pair this with ``record`` (it does not touch count/total) — only
-        durations belong here, never gauge samples."""
+    def record_n(self, slot: int, dur_ns: int, n: int) -> None:
+        """Fused fold of `n` events of `dur_ns` each — exactly equivalent
+        to `n` calls of ``record(slot, dur_ns, 0)`` but O(1): the pooled
+        serving tick attributes one tick across its active requests
+        without a per-token python loop."""
+        if n <= 0:
+            return
+        if slot >= self._cap:
+            self._grow(slot + 1)
+        self.count[slot] += n
+        self.total_ns[slot] += n * dur_ns
+        if dur_ns < self.min_ns[slot]:
+            self.min_ns[slot] = dur_ns
+        if dur_ns > self.max_ns[slot]:
+            self.max_ns[slot] = dur_ns
+
+    def record_scaled(self, slot: int, dur_ns: int, child_ns: int,
+                      scale: int) -> None:
+        """Fold one TIMED SAMPLE standing for `scale` calls (overhead
+        governor, core.sampler): count moves by 1 — the other scale-1
+        calls were already counted exactly by ``record_count`` — while
+        total/child fold scaled by `scale` (the unbiased estimate of the
+        untimed calls' contribution).  Extrema update from the RAW
+        sample: min/max are observations, never estimates."""
+        if slot >= self._cap:
+            self._grow(slot + 1)
+        self.count[slot] += 1
+        self.total_ns[slot] += dur_ns * scale
+        self.child_ns[slot] += child_ns * scale
+        if dur_ns < self.min_ns[slot]:
+            self.min_ns[slot] = dur_ns
+        if dur_ns > self.max_ns[slot]:
+            self.max_ns[slot] = dur_ns
+
+    def record_hist(self, slot: int, dur_ns: int, n: int = 1) -> None:
+        """Fold `n` events of one duration into the slot's latency
+        histogram (n > 1: the fused pooled-tick fold, or a subsampled
+        edge's bucket increment scaled by its stride).  Callers pair
+        this with ``record``/``record_n`` (it does not touch
+        count/total) — only durations belong here, never gauge
+        samples."""
+        if n <= 0:
+            return
         if slot >= self._cap:
             self._grow(slot + 1)
         if self.hist is None:
             self.hist = np.zeros((self._cap, HIST_BUCKETS), dtype=np.uint64)
-        self.hist[slot, bucket_index(dur_ns)] += 1
+        self.hist[slot, bucket_index(dur_ns)] += n
 
     # -- slow paths -------------------------------------------------------
     def _grow(self, needed: int) -> None:

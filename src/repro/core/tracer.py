@@ -72,6 +72,9 @@ class Tracer:
         self.tables = ShadowTableSet()
         self.enabled = True
         self.timing = True  # paper: counting always on, timing configurable
+        #: optional adaptive overhead governor (core.sampler); None means
+        #: every boundary is timed on every call
+        self.sampler = None
         self._stack = _Stack()
 
     # -- caller identity ----------------------------------------------------
@@ -88,14 +91,21 @@ class Tracer:
         self._stack.frames.append(f)
         return f
 
-    def exit(self, frame: _Frame, slot: SlotInfo) -> int:
+    def exit(self, frame: _Frame, slot: SlotInfo, scale: int = 1) -> int:
         end = perf_ns()
         frames = self._stack.frames
         frames.pop()
         dur = end - frame.start_ns
         if frames:
+            # the parent observes the RAW elapsed time of this call (its
+            # bracket measures true wall, so child <= total must hold);
+            # scale-up applies only to THIS edge's folded columns
             frames[-1].child_ns += dur
-        self.tables.table().record(slot.slot, dur, frame.child_ns)
+        t = self.tables.table()
+        if scale == 1:
+            t.record(slot.slot, dur, frame.child_ns)
+        else:
+            t.record_scaled(slot.slot, dur, frame.child_ns, scale)
         return dur
 
     # -- public API -----------------------------------------------------------
@@ -122,14 +132,28 @@ class Tracer:
                     slot = self.tables.registry.resolve(
                         caller, component, api_name, kind)
                     slot_cache[caller] = slot
+                scale = 1
                 if not self.timing:
+                    scale = 0
+                elif self.sampler is not None:
+                    scale = self.sampler.observe(slot.slot)
+                if scale == 0:
+                    # counting-only / sampled-out: exact count, plus a
+                    # lightweight NO-TIMESTAMP frame so nested boundaries
+                    # still fold with the true caller (Relation-Aware
+                    # Data Folding holds in every mode)
                     self.tables.table().record_count(slot.slot)
-                    return fn(*args, **kwargs)
+                    frames = self._stack.frames
+                    frames.append(_Frame(component, api_name, 0))
+                    try:
+                        return fn(*args, **kwargs)
+                    finally:
+                        frames.pop()
                 frame = self.enter(component, api_name)
                 try:
                     return fn(*args, **kwargs)
                 finally:
-                    self.exit(frame, slot)
+                    self.exit(frame, slot, scale)
 
             wrapper.__xfa__ = (component, api_name, kind)  # type: ignore
             return wrapper
@@ -192,9 +216,8 @@ class Tracer:
             t.record_count(slot.slot, n)
             return
         d = int(dur_ns)
-        for _ in range(n):
-            t.record(slot.slot, d, 0)
-            t.record_hist(slot.slot, d)
+        t.record_n(slot.slot, d, n)
+        t.record_hist(slot.slot, d, n)
 
     def record_gauge(self, component: str, api: str, value: float,
                      kind: int = KIND_CALL) -> None:
@@ -214,9 +237,40 @@ class Tracer:
             return
         t.record(slot.slot, int(value), 0)
 
+    # -- overhead governor --------------------------------------------------
+    def set_overhead_budget(self, budget_fraction: float,
+                            recalc_every: int = 256,
+                            bracket_ns: Optional[float] = None):
+        """Attach (or detach, with budget <= 0) the adaptive overhead
+        governor: `@api` boundaries whose estimated bracket cost pushes
+        total tracer overhead past `budget_fraction` of wall time back
+        off to 1-in-k timing (counting stays exact).  Returns the
+        attached SamplerController (or None)."""
+        if budget_fraction and budget_fraction > 0:
+            from .sampler import SamplerController
+            self.sampler = SamplerController(budget_fraction,
+                                             recalc_every=recalc_every,
+                                             bracket_ns=bracket_ns)
+        else:
+            self.sampler = None
+        return self.sampler
+
+    def sample_rates(self) -> Optional[Dict[int, float]]:
+        """Per-slot effective sampling rates from the governor (only the
+        subsampled slots; None when no governor is attached)."""
+        return self.sampler.rates() if self.sampler is not None else None
+
     # -- lifecycle ----------------------------------------------------------
     def reset(self) -> None:
-        self.tables = ShadowTableSet()
+        """Zero every shadow table IN PLACE, preserving the registry: the
+        `@api` wrappers cache SlotInfos interned there, so replacing the
+        ShadowTableSet would leave every already-decorated boundary
+        recording at indices the fresh registry re-assigns to other
+        edges (stale-slot misattribution).  The governor's counters
+        reset with the tables."""
+        self.tables.reset()
+        if self.sampler is not None:
+            self.sampler.reset()
 
     def set_thread_group(self, group: str) -> None:
         """Tag this thread's table with a group (pipeline stage, pool name)."""
@@ -243,6 +297,10 @@ def set_enabled(on: bool) -> None:
 
 def set_timing(on: bool) -> None:
     TRACER.timing = on
+
+
+def set_overhead_budget(budget_fraction: float, **kwargs):
+    return TRACER.set_overhead_budget(budget_fraction, **kwargs)
 
 
 def reset() -> None:

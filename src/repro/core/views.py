@@ -181,6 +181,29 @@ def render_percentiles(folded: FoldedTable, max_rows: int = 30) -> str:
     return "\n".join(lines)
 
 
+def render_sampling(folded: FoldedTable, max_rows: int = 30) -> str:
+    """Sampling-confidence table over the edges the overhead governor
+    subsampled (schema v3); empty string when none were, so report
+    output is unchanged for fully-sampled profiles.  Counts are always
+    exact; the time columns of listed edges are unbiased 1-in-k
+    scale-ups at the shown effective rate."""
+    rows = [(edge_label(k), e) for k, e in folded.edges.items()
+            if e.sample_rate is not None]
+    if not rows:
+        return ""
+    rows.sort(key=lambda r: r[1].sample_rate)
+    title = "Sampling back-off (governor; counts exact, times scaled)"
+    lines = [title, "-" * len(title),
+             f"{'edge':<42}{'count':>10}{'rate':>10}{'~1-in-k':>10}"]
+    for label, e in rows[:max_rows]:
+        k = round(1.0 / e.sample_rate) if e.sample_rate > 0 else 0
+        lines.append(f"{label:<42}{e.count:>10}{e.sample_rate:>10.4f}"
+                     f"{k:>10}")
+    if len(rows) > max_rows:
+        lines.append(f"... ({len(rows)-max_rows} more)")
+    return "\n".join(lines)
+
+
 def metric_view(folded: FoldedTable, metric: str) -> View:
     """Rank edges by a folded device/static metric (flops, wire_bytes, ...)."""
     rows = []

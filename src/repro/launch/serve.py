@@ -104,6 +104,11 @@ def main() -> int:
     ap.add_argument("--profile-meta", action="append", default=[],
                     type=kv_pair, metavar="KEY=VALUE",
                     help="extra run-manifest metadata (repeatable)")
+    ap.add_argument("--xfa-budget-pct", type=float, default=0.0,
+                    help="host-tracer overhead budget as a percent of wall "
+                         "time (0: governor off, every boundary fully "
+                         "timed); hot edges back off to 1-in-k timing "
+                         "with unbiased scale-up, counting stays exact")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -134,7 +139,8 @@ def main() -> int:
         profile_keep_last=args.profile_keep_last,
         profile_max_age_s=args.profile_max_age_s,
         profile_max_bytes=args.profile_max_bytes,
-        profile_meta=tuple(args.profile_meta)))
+        profile_meta=tuple(args.profile_meta),
+        xfa_overhead_budget=args.xfa_budget_pct / 100.0))
     # sampling knobs ride in ServeConfig: submit() defaults to them
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab,

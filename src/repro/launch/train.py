@@ -54,6 +54,11 @@ def main() -> int:
     ap.add_argument("--profile-meta", action="append", default=[],
                     type=kv_pair, metavar="KEY=VALUE",
                     help="extra run-manifest metadata (repeatable)")
+    ap.add_argument("--xfa-budget-pct", type=float, default=0.0,
+                    help="host-tracer overhead budget as a percent of wall "
+                         "time (0: governor off, every boundary fully "
+                         "timed); hot edges back off to 1-in-k timing "
+                         "with unbiased scale-up, counting stays exact")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -67,7 +72,8 @@ def main() -> int:
     tcfg = TrainConfig(total_steps=args.steps, learning_rate=args.lr,
                        warmup_steps=max(args.steps // 10, 1),
                        microbatches=args.microbatches,
-                       ckpt_interval=args.ckpt_interval)
+                       ckpt_interval=args.ckpt_interval,
+                       xfa_overhead_budget=args.xfa_budget_pct / 100.0)
     from repro.profile import RetentionPolicy
     trainer = Trainer(model, tcfg,
                       CheckpointManager(args.ckpt_dir, async_save=True),

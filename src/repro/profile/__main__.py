@@ -40,7 +40,8 @@ import sys
 from typing import List
 
 from ..core.views import (api_view_by_caller, component_view,
-                          render_flow_matrix, render_percentiles)
+                          render_flow_matrix, render_percentiles,
+                          render_sampling)
 from .diff import DIFF_FIELDS, diff_profiles
 from .index import RunRegistry, kv_pair
 from .snapshot import ProfileSnapshot
@@ -72,9 +73,13 @@ def _cmd_report(args: argparse.Namespace) -> int:
         print()
         print(api_view_by_caller(folded, comp).render(args.top))
     pct = render_percentiles(folded, max_rows=args.top)
-    if pct:   # only schema-v2 profiles carry histograms
+    if pct:   # only schema-v2+ profiles carry histograms
         print()
         print(pct)
+    smp = render_sampling(folded, max_rows=args.top)
+    if smp:   # only schema-v3 profiles carry governor sampling rates
+        print()
+        print(smp)
     print()
     print(render_flow_matrix(folded))
     return 0

@@ -52,7 +52,15 @@ class EdgeDelta:
         for fld in self.flagged:
             b, c, rel = self.deltas[fld]
             parts.append(f"{fld} {b:.0f} -> {c:.0f} ({rel:+.1%})")
-        return f"{caller} -> {comp}.{api}: " + ", ".join(parts)
+        out = f"{caller} -> {comp}.{api}: " + ", ".join(parts)
+        # confidence marker: when the overhead governor subsampled either
+        # side, time columns are scaled estimates — counts stay exact
+        rates = [r for r in (self.base.sample_rate, self.cand.sample_rate)
+                 if r is not None]
+        if rates:
+            out += (f"  [subsampled: rate {min(rates):.3f} — "
+                    f"time deltas are scaled estimates]")
+        return out
 
 
 @dataclass

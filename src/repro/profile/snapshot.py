@@ -1,12 +1,15 @@
 """Columnar profile snapshots — the on-disk form of a FoldedTable.
 
-This module WRITES schema version 2 (current, SCHEMA_VERSION) and READS
-schemas 1 and 2.  The writer is *minimal-schema*: a snapshot with no
-histogram block is emitted in the exact schema-1 byte layout (header says
-``"schema": 1``), so hist-less files stay readable by older readers and
-the checked-in v1 golden file stays byte-stable; the schema-2 layout is
-used only when there is a histogram block to store.  See docs/schema.md
-for the full layout reference.
+This module WRITES schema version 3 (current, SCHEMA_VERSION) and READS
+schemas 1–3.  The writer is *minimal-schema*: it emits the LOWEST
+version that represents the content — no histogram block and no
+sampling rates is the exact schema-1 byte layout; histograms without
+sampling rates is the exact schema-2 layout; the schema-3 layout (an
+optional `sample_rate` column from the adaptive overhead governor,
+core.sampler) appears only when at least one edge was actually
+subsampled.  Old files stay readable by new readers, rate-less files
+stay byte-identical to their v1/v2 goldens.  See docs/schema.md for
+the full layout reference.
 
 One snapshot file is a compressed npz holding:
 
@@ -20,9 +23,13 @@ One snapshot file is a compressed npz holding:
   count/total_ns/child_ns/min_ns/max_ns   int64 [N] aligned stat columns
   metric_values     float64 [M, N]
   metric_mask       bool    [M, N]  (presence — absent metric != 0.0 metric)
-  hist              uint64 [N, HIST_BUCKETS] latency histograms — schema 2
+  hist              uint64 [N, HIST_BUCKETS] latency histograms — schema 2+
                     only; an all-zero row means "no distribution" for
                     that edge (core.histogram)
+  sample_rate       float64 [N] effective timing-sample rate — schema 3
+                    only; a 1.0 row means "fully sampled" for that edge
+                    (counts are always exact; time columns of a row with
+                    rate < 1.0 are unbiased scale-ups, core.sampler)
 
 The columns are exactly core.folding.EdgeColumns, so loading a snapshot
 drops straight into the vectorized merge path without re-boxing per-edge
@@ -48,9 +55,10 @@ from ..core.histogram import HIST_BUCKETS
 
 #: bump on any incompatible layout change; loaders reject newer majors.
 #: v1: stat columns + metrics.  v2: adds the optional uint64 [N, B]
-#: `hist` member (+ `n_hist_buckets` header key).  The writer emits the
-#: LOWEST version that represents the content (see module docstring).
-SCHEMA_VERSION = 2
+#: `hist` member (+ `n_hist_buckets` header key).  v3: adds the optional
+#: float64 [N] `sample_rate` member.  The writer emits the LOWEST
+#: version that represents the content (see module docstring).
+SCHEMA_VERSION = 3
 
 SNAPSHOT_SUFFIX = ".xfa.npz"
 
@@ -133,10 +141,17 @@ class ProfileSnapshot:
         caller = intern([k[0] for k in cols.keys])
         component = intern([k[1] for k in cols.keys])
         api = intern([k[2] for k in cols.keys])
-        # minimal-schema rule: bytes are a function of CONTENT, and content
-        # without histograms is exactly a v1 file — old readers keep working
-        # and the v1 golden stays pinned.
-        schema_out = SCHEMA_VERSION if cols.hist is not None else 1
+        # minimal-schema rule: bytes are a function of CONTENT — content
+        # without histograms/rates is exactly a v1 file, without rates a
+        # v2 file — old readers keep working and the v1/v2 goldens stay
+        # pinned.  An all-1.0 rate column IS rate-less content (every
+        # edge fully sampled), so merges that normalize back to full
+        # sampling shed the column on disk.
+        rates = cols.sample_rate
+        if rates is not None and not (rates < 1.0).any():
+            rates = None
+        schema_out = 3 if rates is not None else \
+            (2 if cols.hist is not None else 1)
         header = {
             "schema": schema_out,
             "group": cols.group,
@@ -165,6 +180,8 @@ class ProfileSnapshot:
                 }
                 if cols.hist is not None:
                     arrays["hist"] = cols.hist
+                if rates is not None:
+                    arrays["sample_rate"] = rates.astype(np.float64)
                 _write_npz(f, arrays, compress=compress)
             os.replace(tmp, path)
         except BaseException:
@@ -198,6 +215,13 @@ class ProfileSnapshot:
                     raise ValueError(
                         f"{path}: hist block {hist.shape} does not match "
                         f"{len(keys)} edges x {HIST_BUCKETS} buckets")
+            rate = None
+            if "sample_rate" in z.files:
+                rate = z["sample_rate"].astype(np.float64)
+                if rate.shape != (len(keys),):
+                    raise ValueError(
+                        f"{path}: sample_rate column {rate.shape} does not "
+                        f"match {len(keys)} edges")
             cols = EdgeColumns(
                 keys=keys,
                 count=z["count"].astype(np.int64),
@@ -211,6 +235,7 @@ class ProfileSnapshot:
                 metric_mask=z["metric_mask"].astype(bool),
                 group=header.get("group", "main"),
                 hist=hist,
+                sample_rate=rate,
             )
         if len(cols) != int(header.get("n_edges", len(cols))):
             raise ValueError(f"{path}: edge count mismatch vs header")

@@ -65,7 +65,8 @@ def tracer_folded(tracer=None) -> FoldedTable:
     if tracer is None:
         from ..core import tracer as xfa
         tracer = xfa.TRACER
-    return FoldedTable.merge_all(FoldedTable.from_set(tracer.tables))
+    return FoldedTable.merge_all(
+        FoldedTable.from_set(tracer.tables, rates=tracer.sample_rates()))
 
 
 @dataclass(frozen=True)

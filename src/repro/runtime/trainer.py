@@ -189,6 +189,11 @@ class Trainer:
     def __post_init__(self):
         if self.session is None:
             self.session = XFASession(device_spec=self.model.fold_spec)
+        if self.tcfg.xfa_overhead_budget > 0:
+            # adaptive overhead governor: hot boundaries back off to 1-in-k
+            # timing (counting stays exact) when estimated tracer overhead
+            # crosses the budget (core.sampler)
+            xfa.TRACER.set_overhead_budget(self.tcfg.xfa_overhead_budget)
         self._profile_store = None
         if self.profile_dir:
             from repro.profile import ProfileStore

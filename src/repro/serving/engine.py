@@ -142,6 +142,10 @@ class ServingEngine:
         self.model = model
         self.params = params
         self.scfg = scfg
+        if scfg.xfa_overhead_budget > 0:
+            # adaptive overhead governor: per-tick boundaries back off to
+            # 1-in-k timing under load, counting stays exact (core.sampler)
+            xfa.TRACER.set_overhead_budget(scfg.xfa_overhead_budget)
         self.scheduler = Scheduler(scfg)
         self.sampler = PooledSampler(scfg.max_batch)
         self.table = model.table()

@@ -1,12 +1,16 @@
 """Shared test helpers."""
 
+import math
+
 import numpy as np
 
 
 def assert_tables_equal(a, b):
     """Full per-edge FoldedTable equality: every stat, kind, the metric
-    dict (including presence — absent metric != 0.0 metric), and the
-    latency histogram (None-aware; None != populated)."""
+    dict (including presence — absent metric != 0.0 metric), the
+    latency histogram (None-aware; None != populated), and the governor
+    sampling rate (None == fully sampled; numeric rates compare with
+    isclose — count-weighted float merges are not bit-associative)."""
     assert a.edges.keys() == b.edges.keys()
     for k in a.edges:
         ea, eb = a.edges[k], b.edges[k]
@@ -18,3 +22,8 @@ def assert_tables_equal(a, b):
             assert ea.hist is None and eb.hist is None, k
         else:
             assert np.array_equal(ea.hist, eb.hist), k
+        if ea.sample_rate is None or eb.sample_rate is None:
+            assert ea.sample_rate is None and eb.sample_rate is None, k
+        else:
+            assert math.isclose(ea.sample_rate, eb.sample_rate,
+                                rel_tol=1e-12), k

@@ -1,12 +1,13 @@
-"""Golden-file pins of snapshot schemas v1 and v2.
+"""Golden-file pins of snapshot schemas v1, v2 and v3.
 
-`tests/data/golden_v1.xfa.npz` (hist-less) and `golden_v2.xfa.npz`
-(same table + latency histograms) are tiny reference snapshots checked
-into the repo (uncompressed, fixed zip metadata — see
-snapshot._write_npz).  These tests assert that loading each, reporting
-over it, and re-saving it reproduces the file byte-for-byte — and that
-the v2 writer still emits the exact v1 layout for hist-less content
-(the minimal-schema rule, docs/schema.md).  If any of them fail after a
+`tests/data/golden_v1.xfa.npz` (hist-less), `golden_v2.xfa.npz` (same
+table + latency histograms) and `golden_v3.xfa.npz` (v2 + governor
+sampling rates) are tiny reference snapshots checked into the repo
+(uncompressed, fixed zip metadata — see snapshot._write_npz).  These
+tests assert that loading each, reporting over it, and re-saving it
+reproduces the file byte-for-byte — and that the writer still emits the
+exact v1/v2 layouts for content without rates/histograms (the
+minimal-schema rule, docs/schema.md).  If any of them fail after a
 change to snapshot.py, the on-disk layout moved: either restore
 compatibility or bump SCHEMA_VERSION, regenerate the goldens (run this
 file as a script), and say so loudly in the PR — schema bumps must be
@@ -22,13 +23,15 @@ from conftest import assert_tables_equal
 from repro.core.folding import EdgeStats, FoldedTable
 from repro.core.histogram import hist_of
 from repro.core.views import (component_view, render_flow_matrix,
-                              render_percentiles)
+                              render_percentiles, render_sampling)
 from repro.profile import ProfileSnapshot
 from repro.profile.snapshot import SCHEMA_VERSION
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "data", "golden_v1.xfa.npz")
 GOLDEN_V2 = os.path.join(os.path.dirname(__file__), "data",
                          "golden_v2.xfa.npz")
+GOLDEN_V3 = os.path.join(os.path.dirname(__file__), "data",
+                         "golden_v3.xfa.npz")
 
 
 def golden_table() -> FoldedTable:
@@ -53,6 +56,7 @@ def golden_table() -> FoldedTable:
 
 GOLDEN_META = {"label": "golden", "note": "schema v1 reference"}
 GOLDEN_V2_META = {"label": "golden", "note": "schema v2 reference"}
+GOLDEN_V3_META = {"label": "golden", "note": "schema v3 reference"}
 
 
 def golden_table_v2() -> FoldedTable:
@@ -62,6 +66,16 @@ def golden_table_v2() -> FoldedTable:
     t = golden_table()
     t.edges[("app", "glibc", "read")].hist = hist_of([18, 82, 120])
     t.edges[("moe", "pthread", "lock")].hist = hist_of([400, 500])
+    return t
+
+
+def golden_table_v3() -> FoldedTable:
+    """The v2 reference table plus governor sampling rates on two edges
+    (one of them also histogrammed) — exact binary fractions so the
+    float64 column bytes are reproducible from source."""
+    t = golden_table_v2()
+    t.edges[("app", "glibc", "read")].sample_rate = 0.25
+    t.edges[("optimizer", "alloc", "malloc")].sample_rate = 0.5
     return t
 
 
@@ -76,11 +90,17 @@ def write_golden_v2(path: str = GOLDEN_V2) -> str:
     return snap.save(path, compress=False)
 
 
+def write_golden_v3(path: str = GOLDEN_V3) -> str:
+    snap = ProfileSnapshot.from_folded(golden_table_v3(),
+                                       meta=GOLDEN_V3_META)
+    return snap.save(path, compress=False)
+
+
 class TestGoldenSchemaV1:
-    def test_schema_version_is_v2(self):
+    def test_schema_version_is_v3(self):
         # regenerating the goldens on a bump is a DELIBERATE step; this
         # makes `SCHEMA_VERSION += 1` fail tests until someone does it
-        assert SCHEMA_VERSION == 2, \
+        assert SCHEMA_VERSION == 3, \
             "schema bumped: regenerate tests/data/golden_v*.xfa.npz " \
             "(python tests/test_golden_schema.py) and update this test"
 
@@ -137,13 +157,15 @@ class TestGoldenSchemaV1:
             assert z["metric_values"].dtype == np.float64
 
     def test_histless_writer_emits_v1_layout(self, tmp_path):
-        """The minimal-schema rule: content without histograms serializes
-        as a schema-1 file even under the v2 writer, so hist-less shards
-        stay readable by schema-1-only readers."""
+        """The minimal-schema rule: content without histograms (or
+        sampling rates) serializes as a schema-1 file even under the v3
+        writer, so hist-less shards stay readable by schema-1-only
+        readers."""
         out = str(tmp_path / "histless.xfa.npz")
         ProfileSnapshot.from_folded(golden_table()).save(out)
         with np.load(out) as z:
             assert "hist" not in z.files
+            assert "sample_rate" not in z.files
         assert ProfileSnapshot.load(out).schema == 1
 
 
@@ -200,6 +222,83 @@ class TestGoldenSchemaV2:
         assert merged.edges[("app", "glibc", "write")].hist is None
 
 
+class TestGoldenSchemaV3:
+    def test_load_matches_reference_content(self):
+        snap = ProfileSnapshot.load(GOLDEN_V3)
+        assert snap.schema == 3
+        assert snap.meta == GOLDEN_V3_META
+        assert_tables_equal(snap.to_folded(), golden_table_v3())
+
+    def test_resave_is_byte_stable(self, tmp_path):
+        snap = ProfileSnapshot.load(GOLDEN_V3)
+        out = str(tmp_path / "resaved.xfa.npz")
+        snap.save(out, compress=False)
+        with open(GOLDEN_V3, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read(), \
+                "snapshot v3 byte layout changed — bump SCHEMA_VERSION " \
+                "and regenerate the golden if this was intentional"
+
+    def test_fresh_build_matches_golden_bytes(self, tmp_path):
+        out = write_golden_v3(str(tmp_path / "rebuilt.xfa.npz"))
+        with open(GOLDEN_V3, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_rate_column_np_load_contract(self):
+        """`sample_rate` is a plain float64 [N] member, 1.0 == fully
+        sampled for that edge."""
+        with np.load(GOLDEN_V3) as z:
+            assert z["sample_rate"].dtype == np.float64
+            assert z["sample_rate"].shape == (len(z["count"]),)
+            # 2 of the 5 reference edges are subsampled
+            assert int((z["sample_rate"] < 1.0).sum()) == 2
+
+    def test_rateless_writer_emits_v2_layout(self, tmp_path):
+        """Minimal-schema rule, one level up: histogrammed content
+        without rates serializes as schema 2 — and its bytes equal the
+        checked-in v2 golden."""
+        out = str(tmp_path / "rateless.xfa.npz")
+        ProfileSnapshot.from_folded(golden_table_v2(),
+                                    meta=GOLDEN_V2_META).save(
+            out, compress=False)
+        assert ProfileSnapshot.load(out).schema == 2
+        with open(GOLDEN_V2, "rb") as a, open(out, "rb") as b:
+            assert a.read() == b.read()
+
+    def test_all_full_rates_shed_the_column(self, tmp_path):
+        """A rate column that normalized back to all-1.0 (e.g. after a
+        merge dominated by fully-sampled shards) writes as rate-less
+        content — None and 1.0 are the same fact on disk too."""
+        t = golden_table_v2()
+        cols = t.to_columns()
+        cols.sample_rate = np.ones(len(cols), dtype=np.float64)
+        out = str(tmp_path / "full.xfa.npz")
+        ProfileSnapshot(cols).save(out)
+        with np.load(out) as z:
+            assert "sample_rate" not in z.files
+        assert ProfileSnapshot.load(out).schema == 2
+
+    def test_sampling_renders_from_golden(self):
+        folded = ProfileSnapshot.load(GOLDEN_V3).to_folded()
+        out = render_sampling(folded)
+        assert "Sampling back-off" in out
+        assert "glibc.read" in out and "alloc.malloc" in out
+        # fully-sampled profiles render nothing (report stays v1-clean)
+        assert render_sampling(ProfileSnapshot.load(GOLDEN).to_folded()) \
+            == ""
+
+    def test_v2_merges_with_v3_under_v3_reader(self):
+        """Forward compat: merging a rate-less v2 profile into a v3 one
+        count-weights the rate-less side at 1.0."""
+        v2 = ProfileSnapshot.load(GOLDEN_V2)
+        v3 = ProfileSnapshot.load(GOLDEN_V3)
+        merged = ProfileSnapshot.merge([v2, v3]).to_folded()
+        read = merged.edges[("app", "glibc", "read")]
+        # 3 full-rate counts + 3 counts at 0.25 -> (3*1 + 3*0.25)/6
+        assert read.sample_rate == pytest.approx(0.625)
+        assert merged.edges[("app", "glibc", "write")].sample_rate is None
+
+
 if __name__ == "__main__":  # regenerate the goldens after a DELIBERATE bump
     print("wrote", write_golden())
     print("wrote", write_golden_v2())
+    print("wrote", write_golden_v3())

@@ -58,12 +58,19 @@ class TestSnapshot:
         e = back.edges[("app", "moe", "dispatch")]
         assert e.metrics == {"flops": 1e9, "bytes": 0.0}
         assert back.edges[("moe", "pthread", "lock")].metrics == {}
-        # a histogram column promotes the written schema to the current one
+        # a histogram column promotes the written schema to v2 (minimal
+        # schema that represents the content)...
         t.edges[("app", "glibc", "read")].hist = hist_of([18, 4])
         ProfileSnapshot.from_folded(t, meta={"label": "x"}).save(p)
         snap2 = ProfileSnapshot.load(p)
-        assert snap2.schema == SCHEMA_VERSION
+        assert snap2.schema == 2
         assert_tables_equal(snap2.to_folded(), t)
+        # ...and a governor sampling rate promotes it to the current one
+        t.edges[("app", "glibc", "read")].sample_rate = 0.25
+        ProfileSnapshot.from_folded(t, meta={"label": "x"}).save(p)
+        snap3 = ProfileSnapshot.load(p)
+        assert snap3.schema == SCHEMA_VERSION
+        assert_tables_equal(snap3.to_folded(), t)
 
     def test_empty_roundtrip(self, tmp_path):
         p = str(tmp_path / "e.xfa.npz")

@@ -1,0 +1,512 @@
+"""Adaptive overhead governor (core.sampler) + the tracer bugfixes that
+shipped with it.
+
+Covers, in order:
+  * SamplerController unit behaviour (stride ladder, back-off and relax
+    under a fake clock, power-of-two invariants, reset);
+  * the unbiased-estimator property: averaged over the k sampling
+    phases, the scaled fold equals the full-trace fold EXACTLY, and
+    counts are exact under ANY back-off schedule;
+  * the bursty adversarial fixture from benchmarks/sampling.py — the
+    workload that breaks time-based samplers (paper Table 6) must NOT
+    lose the short-burst edge here, because counting never turns off;
+  * mixed-rate shard merges: EdgeStats.merge and the vectorized
+    merge_columns agree on count-weighted rate averaging;
+  * tracer regressions: in-place reset (stale-slot misattribution),
+    counting-only nested attribution, fused record_n equivalence;
+  * end-to-end: governed tracer -> fold with rates -> schema-v3
+    snapshot round-trip -> SamplingBackoff detector read-out.
+"""
+
+import importlib.util
+import pathlib
+import time
+
+import numpy as np
+import pytest
+
+from conftest import assert_tables_equal
+from repro.analysis import FlowGraph, SamplingBackoff
+from repro.analysis.detectors import DiagnosisContext
+from repro.core import FoldedTable, ShadowTable, Tracer
+from repro.core.folding import EdgeColumns, EdgeStats, merge_columns, \
+    merge_rates
+from repro.core.sampler import (MIN_BRACKET_NS, SamplerController,
+                                estimate_bracket_ns, fold_event)
+from repro.core.shadow import SlotRegistry
+from repro.profile.snapshot import ProfileSnapshot
+
+
+def make_controller(budget=0.1, recalc_every=16, bracket_ns=100.0,
+                    clock=None, **kw):
+    """Controller with a pinned bracket cost (no calibration loop) and an
+    optional fake clock (a zero-arg callable)."""
+    return SamplerController(budget, recalc_every=recalc_every,
+                             bracket_ns=bracket_ns,
+                             clock=clock or time.perf_counter_ns, **kw)
+
+
+class FakeClock:
+    """Deterministic wall clock the tests advance by hand."""
+
+    def __init__(self):
+        self.now = 0
+
+    def __call__(self):
+        return self.now
+
+
+# ------------------------------------------------------------ controller ----
+class TestSamplerController:
+    def test_budget_must_be_positive(self):
+        with pytest.raises(ValueError):
+            SamplerController(0.0, bracket_ns=100.0)
+        with pytest.raises(ValueError):
+            SamplerController(-0.2, bracket_ns=100.0)
+
+    def test_starts_at_full_sampling(self):
+        ctl = make_controller()
+        assert ctl.stride(0) == 1
+        # every one of the first recalc_every-1 calls is timed at scale 1
+        assert all(ctl.observe(0) == 1 for _ in range(ctl.recalc_every - 1))
+        assert ctl.rates() == {}          # nothing subsampled yet
+
+    def test_backs_off_when_over_budget(self):
+        clk = FakeClock()
+        ctl = make_controller(budget=0.1, recalc_every=16, bracket_ns=100.0,
+                              clock=clk)
+        # 16 events in 160ns of wall time: estimated full-trace cost is
+        # 100ns * 16 / 160ns = 10x wall; need = 10/0.1 = 100 -> stride 128
+        for _ in range(16):
+            clk.now += 10
+            ctl.observe(0)
+        assert ctl.stride(0) == 128
+        # ...and the hot phase now times only every 128th call
+        timed = sum(1 for _ in range(256) if ctl.observe(0) > 0)
+        assert timed == 2
+        assert 0 in ctl.strides()
+
+    def test_relaxes_when_load_drops(self):
+        clk = FakeClock()
+        ctl = make_controller(budget=0.1, recalc_every=16, bracket_ns=100.0,
+                              clock=clk)
+        for _ in range(16):
+            clk.now += 10
+            ctl.observe(0)
+        assert ctl.stride(0) > 1
+        # now the edge nearly stops firing: 16 events over 16ms
+        for _ in range(16):
+            clk.now += 1_000_000
+            ctl.observe(0)
+        assert ctl.stride(0) == 1
+
+    def test_stride_ladder_is_powers_of_two(self):
+        clk = FakeClock()
+        ctl = make_controller(budget=0.01, recalc_every=8, bracket_ns=200.0,
+                              clock=clk)
+        seen = set()
+        for _ in range(64):
+            clk.now += 25
+            ctl.observe(0)
+            seen.add(ctl.stride(0))
+        for k in seen:
+            assert k >= 1 and (k & (k - 1)) == 0, k
+
+    def test_stride_respects_max(self):
+        clk = FakeClock()
+        ctl = make_controller(budget=1e-9, recalc_every=8, bracket_ns=1e6,
+                              clock=clk, max_stride=64)
+        for _ in range(32):
+            clk.now += 1
+            ctl.observe(0)
+        assert ctl.stride(0) == 64
+
+    def test_set_stride_validates(self):
+        ctl = make_controller()
+        ctl.set_stride(3, 8)
+        assert ctl.stride(3) == 8
+        with pytest.raises(ValueError):
+            ctl.set_stride(3, 6)
+        with pytest.raises(ValueError):
+            ctl.set_stride(3, 0)
+
+    def test_budget_scales_the_backoff(self):
+        """Same load, double the budget -> stride no deeper."""
+        strides = {}
+        for budget in (0.05, 0.1, 0.2):
+            clk = FakeClock()
+            ctl = make_controller(budget=budget, recalc_every=16,
+                                  bracket_ns=100.0, clock=clk)
+            for _ in range(16):
+                clk.now += 10
+                ctl.observe(0)
+            strides[budget] = ctl.stride(0)
+        assert strides[0.05] >= strides[0.1] >= strides[0.2] > 1
+
+    def test_rates_reflect_timed_over_seen(self):
+        ctl = make_controller(recalc_every=1 << 30)   # never recalc
+        ctl.set_stride(0, 4)
+        for _ in range(100):
+            ctl.observe(0)
+        assert ctl.rates()[0] == pytest.approx(0.25)
+        # a fully-timed slot stays out of the rates dict
+        ctl.observe(1)
+        assert 1 not in ctl.rates()
+
+    def test_reset_preserves_slot_space(self):
+        ctl = make_controller(recalc_every=1 << 30)
+        ctl.set_stride(2, 8)
+        for _ in range(64):
+            ctl.observe(2)
+        ctl.reset()
+        assert ctl.rates() == {}
+        assert ctl.stride(2) == 1
+        assert ctl.observe(2) == 1       # slot ids survive, state zeroed
+
+    def test_estimate_bracket_has_floor(self):
+        assert estimate_bracket_ns(iters=200) >= MIN_BRACKET_NS
+
+
+# ----------------------------------------------- unbiased scale-up (fold) ----
+class TestUnbiasedScaleUp:
+    def test_phase_average_equals_full_fold_exactly(self):
+        """Sum the scaled folds over all k sampling phases and divide by
+        k: integer durations make this EXACT, not approximate — each
+        event is timed in exactly one phase and scaled by k there."""
+        rng = np.random.default_rng(7)
+        durs = rng.integers(100, 10_000, size=1000)
+        full = ShadowTable()
+        for d in durs:
+            fold_event(full, 0, int(d), 1)
+        for k in (2, 4, 8, 64):
+            scaled_total = 0
+            for phase in range(k):
+                t = ShadowTable()
+                for i, d in enumerate(durs):
+                    fold_event(t, 0, int(d),
+                               k if i % k == phase else 0)
+                assert t.count[0] == len(durs)        # counts always exact
+                scaled_total += int(t.total_ns[0])
+            assert scaled_total // k == full.total_ns[0]
+            assert scaled_total % k == 0
+
+    def test_counts_exact_under_any_schedule(self):
+        """Whatever stride sequence the governor walks through, count is
+        the exact number of calls."""
+        rng = np.random.default_rng(3)
+        ctl = make_controller(recalc_every=1 << 30)
+        t = ShadowTable()
+        n = 5000
+        for i in range(n):
+            if i % 500 == 0:              # adversarial stride churn
+                ctl.set_stride(0, int(2 ** rng.integers(0, 8)))
+            fold_event(t, 0, 1000, ctl.observe(0))
+        assert t.count[0] == n
+
+    def test_scaled_hist_mass_matches_count(self):
+        """Histogram bucket increments are scaled by k, so total hist
+        mass tracks the true event count (not the sample count)."""
+        t = ShadowTable()
+        for i in range(1024):
+            fold_event(t, 0, 500, 8 if i % 8 == 0 else 0, hist=True)
+        assert t.hist is not None
+        assert int(t.hist[0].sum()) == 1024
+
+    def test_min_max_are_raw_observations(self):
+        t = ShadowTable()
+        t.record_scaled(0, 100, 0, 16)
+        assert t.min_ns[0] == 100 and t.max_ns[0] == 100
+        assert t.total_ns[0] == 1600 and t.count[0] == 1
+
+
+# -------------------------------------------------------- bursty fixture ----
+def _load_sampling_bench():
+    path = pathlib.Path(__file__).resolve().parent.parent / \
+        "benchmarks" / "sampling.py"
+    spec = importlib.util.spec_from_file_location("bench_sampling", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestBurstyWorkload:
+    """benchmarks/sampling.py's workload is the adversarial case the
+    paper uses against samplers (Table 6): rare dense 40-call bursts of
+    0.2us events hiding between 1us steady calls.  Drive it through the
+    governor with the event stream's OWN timestamps as the clock."""
+
+    def _replay(self, budget):
+        bench = _load_sampling_bench()
+        events = bench.synth_events(n=50_000, seed=0)
+        reg = SlotRegistry()
+        clk = FakeClock()
+        ctl = make_controller(budget=budget, recalc_every=64,
+                              bracket_ns=200.0, clock=clk)
+        table = ShadowTable()
+        for caller, comp, api, dur, t0 in events:
+            clk.now = t0
+            info = reg.resolve(caller, comp, api)
+            fold_event(table, info.slot, dur, ctl.observe(info.slot))
+        folded = FoldedTable.from_shadow(table, reg.infos(),
+                                         rates=ctl.rates())
+        truth = bench.fold_event_log(
+            [(c, m, a, d) for c, m, a, d, _ in events])
+        return folded, truth, ctl
+
+    def test_burst_edge_never_lost(self):
+        folded, truth, ctl = self._replay(budget=0.05)
+        key = ("app", "lib", "bursty")
+        assert key in folded.edges
+        # the count is EXACT — this is the claim time-based sampling
+        # cannot make on this workload
+        assert folded.edges[key].count == truth.edges[key].count
+
+    def test_governor_backed_off_and_totals_stay_close(self):
+        folded, truth, ctl = self._replay(budget=0.05)
+        assert ctl.rates(), "tight budget must engage back-off"
+        for key in (("app", "lib", "steady"), ("app", "lib", "bursty")):
+            est, true = folded.edges[key], truth.edges[key]
+            assert est.count == true.count
+            # scaled totals are estimates; near-constant durations keep
+            # them within a few percent of ground truth
+            assert est.total_ns == pytest.approx(true.total_ns, rel=0.05)
+
+    def test_bursty_share_preserved(self):
+        """The headline Table 6 failure is the bursty API's *share*
+        collapsing under sampling; the governed fold keeps it."""
+        folded, truth, _ = self._replay(budget=0.05)
+        def share(f):
+            return f.edges[("app", "lib", "bursty")].total_ns / f.total_ns()
+        assert share(folded) == pytest.approx(share(truth), rel=0.10)
+
+
+# ---------------------------------------------------- mixed-rate merging ----
+class TestRateMerge:
+    def test_merge_rates_helper(self):
+        assert merge_rates(None, 10, None, 20) is None
+        assert merge_rates(0.5, 10, None, 10) == pytest.approx(0.75)
+        assert merge_rates(0.25, 30, 0.75, 10) == pytest.approx(0.375)
+        assert merge_rates(None, 0, None, 0) is None
+        assert merge_rates(1.0, 5, None, 5) is None      # >= 1 normalizes
+
+    def test_edgestats_merge_weighs_by_count(self):
+        a = EdgeStats(count=30, total_ns=3000, sample_rate=0.25)
+        b = EdgeStats(count=10, total_ns=1000, sample_rate=0.75)
+        m = a.merge(b)
+        assert m.count == 40
+        assert m.sample_rate == pytest.approx((0.25 * 30 + 0.75 * 10) / 40)
+
+    def test_merge_columns_agrees_with_edgestats(self):
+        """The vectorized shard merge and the per-edge object merge are
+        the same algebra."""
+        key = ("app", "lib", "x")
+        fa = FoldedTable()
+        fa.edges[key] = EdgeStats(count=300, total_ns=9000, min_ns=10,
+                                  max_ns=50, sample_rate=0.125)
+        fb = FoldedTable()
+        fb.edges[key] = EdgeStats(count=100, total_ns=4000, min_ns=5,
+                                  max_ns=80)                 # fully sampled
+        merged_cols = merge_columns([fa.to_columns(), fb.to_columns()])
+        merged_obj = fa.merge(fb)
+        assert_tables_equal(merged_cols.to_folded(), merged_obj)
+        got = merged_obj.edges[key].sample_rate
+        assert got == pytest.approx((0.125 * 300 + 1.0 * 100) / 400)
+
+    def test_rateless_merge_stays_rateless(self):
+        fa = FoldedTable()
+        fa.edges[("app", "l", "x")] = EdgeStats(count=3, total_ns=30)
+        fb = FoldedTable()
+        fb.edges[("app", "l", "x")] = EdgeStats(count=2, total_ns=20)
+        merged = merge_columns([fa.to_columns(), fb.to_columns()])
+        assert merged.sample_rate is None
+        assert merged.to_folded().edges[("app", "l", "x")].sample_rate is None
+
+
+# ------------------------------------------------------ tracer bugfixes ----
+class TestTracerReset:
+    def test_reset_keeps_cached_slots_attributed(self):
+        """Regression: reset() used to swap in a fresh ShadowTableSet,
+        but @api wrappers cache SlotInfos from the OLD registry — every
+        post-reset call then recorded at indices the new registry handed
+        to different edges.  Reset must zero in place."""
+        t = Tracer()
+
+        @t.api("liba")
+        def f():
+            return 1
+
+        f()
+        t.reset()
+        # a new edge interned after the reset must not collide with f's
+        # cached pre-reset slot
+        with t.scope("data", "load"):
+            f()
+        f()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert folds.edges[("app", "liba", "f")].count == 1
+        assert folds.edges[("data", "liba", "f")].count == 1
+        assert folds.edges[("app", "data", "load")].count == 1
+
+    def test_reset_clears_governor_state(self):
+        t = Tracer()
+        ctl = t.set_overhead_budget(0.1, bracket_ns=100.0)
+        ctl.set_stride(0, 8)
+
+        @t.api("liba")
+        def f():
+            return 1
+
+        for _ in range(32):
+            f()
+        assert t.sample_rates()
+        t.reset()
+        assert t.sample_rates() == {}
+        f()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert folds.edges[("app", "liba", "f")].count == 1
+
+
+class TestCountingModeAttribution:
+    def test_nested_boundaries_keep_true_caller(self):
+        """Regression: timing=False skipped the frame push, so nested
+        boundaries all folded with caller 'app' instead of their real
+        calling component."""
+        t = Tracer()
+        t.timing = False
+
+        @t.api("liba")
+        def inner():
+            return 1
+
+        @t.api("libb")
+        def outer():
+            return inner()
+
+        for _ in range(3):
+            outer()
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        e = folds.edges[("libb", "liba", "inner")]
+        assert e.count == 3 and e.total_ns == 0
+        assert ("app", "liba", "inner") not in folds.edges
+        assert folds.edges[("app", "libb", "outer")].count == 3
+
+    def test_sampled_out_calls_keep_true_caller(self):
+        """Same property when the governor (not the timing switch) drops
+        the bracket: sampled-out outer calls still push a lightweight
+        frame, so inner attribution never degrades to 'app'."""
+        t = Tracer()
+        ctl = t.set_overhead_budget(0.5, recalc_every=1 << 30,
+                                    bracket_ns=100.0)
+
+        @t.api("liba")
+        def inner():
+            return 1
+
+        @t.api("libb")
+        def outer():
+            return inner()
+
+        outer()   # interns both slots (outer=0, inner=1)
+        ctl.set_stride(0, 1 << 15)    # outer: practically never timed
+        for _ in range(63):
+            outer()
+        assert t.stack_depth() == 0
+        folds = FoldedTable.merge_all(FoldedTable.from_set(t.tables))
+        assert folds.edges[("libb", "liba", "inner")].count == 64
+        assert ("app", "liba", "inner") not in folds.edges
+
+    def test_exception_pops_lightweight_frame(self):
+        t = Tracer()
+        t.timing = False
+
+        @t.api("liba")
+        def boom():
+            raise RuntimeError("x")
+
+        with pytest.raises(RuntimeError):
+            boom()
+        assert t.stack_depth() == 0
+
+
+class TestRecordNFused:
+    def test_record_n_equals_n_records(self):
+        a, b = ShadowTable(), ShadowTable()
+        a.record_n(3, 250, 7)
+        for _ in range(7):
+            b.record(3, 250, 0)
+        for col in ("count", "total_ns", "child_ns", "min_ns", "max_ns"):
+            assert getattr(a, col)[3] == getattr(b, col)[3], col
+
+    def test_record_duration_bulk_equals_loop(self):
+        """The pooled serving tick folds n per-token latencies in one
+        fused call; it must be indistinguishable from the old O(n)
+        loop."""
+        ta, tb = Tracer(), Tracer()
+        ta.record_duration("serve", "decode_token", 800, n=5)
+        for _ in range(5):
+            tb.record_duration("serve", "decode_token", 800, n=1)
+        fa = FoldedTable.merge_all(FoldedTable.from_set(ta.tables))
+        fb = FoldedTable.merge_all(FoldedTable.from_set(tb.tables))
+        assert_tables_equal(fa, fb)
+
+    def test_record_n_zero_is_noop(self):
+        t = ShadowTable()
+        t.record_n(0, 100, 0)
+        assert t.count[0] == 0 and t.min_ns[0] == np.iinfo(np.int64).max
+
+
+# ------------------------------------------------------------ end-to-end ----
+class TestGovernedPipeline:
+    def _governed_fold(self):
+        t = Tracer()
+        ctl = t.set_overhead_budget(0.1, recalc_every=1 << 30,
+                                    bracket_ns=100.0)
+
+        @t.api("liba")
+        def f():
+            return 1
+
+        f()                      # interns slot 0
+        ctl.set_stride(0, 4)
+        for _ in range(127):
+            f()
+        return FoldedTable.from_set(t.tables, rates=t.sample_rates())
+
+    def test_fold_carries_effective_rate(self):
+        folds = FoldedTable.merge_all(self._governed_fold())
+        e = folds.edges[("app", "liba", "f")]
+        assert e.count == 128
+        assert e.sample_rate is not None and e.sample_rate < 1.0
+        assert e.effective_rate == e.sample_rate
+
+    def test_snapshot_roundtrip_preserves_rates(self, tmp_path):
+        folds = FoldedTable.merge_all(self._governed_fold())
+        snap = ProfileSnapshot.from_folded(folds, meta={"run": "governed"})
+        p = tmp_path / "governed.xfa.npz"
+        snap.save(str(p))
+        loaded = ProfileSnapshot.load(str(p))
+        assert loaded.schema == 3
+        assert_tables_equal(loaded.columns.to_folded(), folds)
+
+    def test_backoff_detector_reads_rates(self):
+        folds = FoldedTable.merge_all(self._governed_fold())
+        ctx = DiagnosisContext(graph=FlowGraph.from_folded(folds))
+        findings = SamplingBackoff().detect(ctx)
+        assert len(findings) == 1
+        f = findings[0]
+        assert f.severity == "info" and f.detector == "sampling-backoff"
+        assert f.evidence["count"] == 128
+        assert 0 < f.evidence["sample_rate"] < 1.0
+
+    def test_ungoverned_fold_emits_no_findings(self):
+        t = Tracer()
+
+        @t.api("liba")
+        def f():
+            return 1
+
+        f()
+        folds = FoldedTable.merge_all(
+            FoldedTable.from_set(t.tables, rates=t.sample_rates()))
+        ctx = DiagnosisContext(graph=FlowGraph.from_folded(folds))
+        assert SamplingBackoff().detect(ctx) == []
