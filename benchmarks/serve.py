@@ -37,6 +37,20 @@ path — and emits serve.ttft_mean_ms_tail_feed next to the chunked
 number; --assert-ttft-improves exits nonzero unless the chunked path
 wins (the serve-bench CI lane runs exactly that).
 
+--concurrent-admissions N is the CROSS-SLOT BATCHED PREFILL scenario: N
+simultaneous long prompts submitted up front (closed loop, pool sized to
+hold them all), so every tick's prefill chunks batch into multi-row
+forward_chunk calls.  It emits serve.compiled_chunk_programs (the
+(batch bucket, width) program count) and
+serve.prefill_batch_occupancy_pct next to the usual rows.  With
+--compare-per-slot-prefill the same workload runs AGAIN at
+prefill_batch=1 (per-slot batch=1 prefill through the same code path)
+and emits serve.prefill_tok_s_per_slot + serve.prefill_batch_speedup_x;
+--assert-batched-prefill-improves RATIO exits nonzero unless batched
+prefill throughput is at least RATIO x the per-slot number, and
+--assert-max-chunk-programs N bounds the compiled-program count (the
+serve-bench CI lane runs all three).
+
 With --profile-dir the run registers in the run registry (kind=serve)
 and writes its XFA shard there, so
 
@@ -114,7 +128,8 @@ def make_prompts(args, cfg, rng) -> list:
             for _ in range(args.requests)]
 
 
-def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
+def run(args, tail_chunk: int = 0, min_bucket: int = 0,
+        prefill_batch: int = 0) -> dict:
     from repro.models import build_model
     cfg = tiny_cfg(args.arch)
     model = build_model(cfg, impl="ref")
@@ -124,6 +139,7 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
         prefill_chunk=args.prefill_chunk,
         tail_chunk=tail_chunk,
         min_chunk_bucket=min_bucket or 8,
+        prefill_batch=prefill_batch or args.prefill_batch,
         prefill_budget_tokens=args.prefill_budget,
         eos_token=-1,
         deadline_ms=args.deadline_ms,
@@ -147,14 +163,21 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
                       sampling=sampling)
         engine.run_until_drained()
     engine.completed.clear()
+    # ... and every (batch bucket, width) pair batched prefill can
+    # schedule: concurrent admissions would otherwise compile the
+    # multi-row programs inside the timed window, billing XLA compiles
+    # as prefill time in exactly the comparison this benchmark makes
+    engine.warm_chunk_programs()
 
-    before = _phase_ns(("prefill_chunk", "decode_token"))
+    before = _phase_ns(("prefill_chunk", "decode_token",
+                        "prefill_batch_occupancy"))
     hist_before = _phase_hists(("e2e",))
     t0 = time.monotonic()
     done = run_workload(engine, prompts, args.max_new, mode=args.mode,
                         rate=args.rate, rng=rng, sampling=sampling)
     s = latency_stats(done, time.monotonic() - t0)
-    after = _phase_ns(("prefill_chunk", "decode_token"))
+    after = _phase_ns(("prefill_chunk", "decode_token",
+                       "prefill_batch_occupancy"))
     hist_after = _phase_hists(("e2e",))
     if not s["requests"] or "ttft_mean_s" not in s:
         # reachable diagnostic BEFORE any stats key is touched
@@ -170,6 +193,12 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
     e2e = _hist_delta(hist_before["e2e"], hist_after["e2e"])
     tracked = [r for r in done if r.deadline_missed is not None]
     missed = sum(1 for r in tracked if r.deadline_missed)
+    # mean batched-prefill occupancy over the timed window (the gauge
+    # folds value sums through the duration columns)
+    occ_n = after["prefill_batch_occupancy"][0] \
+        - before["prefill_batch_occupancy"][0]
+    occ_sum = after["prefill_batch_occupancy"][1] \
+        - before["prefill_batch_occupancy"][1]
     return {
         "serve.requests": int(s["requests"]),
         "serve.tokens": int(s["tokens"]),
@@ -186,6 +215,9 @@ def run(args, tail_chunk: int = 0, min_bucket: int = 0) -> dict:
         "serve.decode_tok_s": round(decode_n / decode_s, 2)
         if decode_s > 0 else 0.0,
         "serve.compiled_chunk_widths": len(engine.chunk_widths),
+        "serve.compiled_chunk_programs": len(engine.chunk_programs),
+        "serve.prefill_batch_occupancy_pct": round(occ_sum / occ_n, 1)
+        if occ_n else 0.0,
         "serve.e2e_p50_ms": round(percentile_ns(e2e, 0.50) / 1e6, 3),
         "serve.e2e_p95_ms": round(percentile_ns(e2e, 0.95) / 1e6, 3),
         "serve.e2e_p99_ms": round(percentile_ns(e2e, 0.99) / 1e6, 3),
@@ -209,6 +241,31 @@ def main() -> int:
                     help="open-loop mean arrival rate, requests/s")
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--prefill-batch", type=int, default=8,
+                    help="max slots whose same-width prefill chunks batch "
+                         "into one forward_chunk call per tick (1: "
+                         "per-slot batch=1 prefill)")
+    ap.add_argument("--concurrent-admissions", type=int, default=0,
+                    metavar="N",
+                    help="cross-slot batched prefill scenario: N "
+                         "simultaneous long prompts, closed loop, pool "
+                         "sized to hold them all (overrides --requests/"
+                         "--mode/--long-prompts and raises --max-batch "
+                         "to N)")
+    ap.add_argument("--compare-per-slot-prefill", action="store_true",
+                    help="re-run the workload with prefill_batch=1 "
+                         "(per-slot batch=1 prefill through the same code "
+                         "path) and emit serve.prefill_tok_s_per_slot + "
+                         "serve.prefill_batch_speedup_x")
+    ap.add_argument("--assert-batched-prefill-improves", type=float,
+                    default=0.0, metavar="RATIO",
+                    help="with --compare-per-slot-prefill: exit nonzero "
+                         "unless batched prefill throughput >= RATIO x "
+                         "the per-slot number")
+    ap.add_argument("--assert-max-chunk-programs", type=int, default=0,
+                    metavar="N",
+                    help="exit nonzero if the batched run compiled more "
+                         "than N (batch bucket, width) prefill programs")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--long-prompts", action="store_true",
                     help="prompts of ~max_seq/2 tokens (many chunks each): "
@@ -237,14 +294,35 @@ def main() -> int:
         ap.error("--requests must be >= 1")
     if args.assert_ttft_improves and not args.compare_tail_feed:
         ap.error("--assert-ttft-improves requires --compare-tail-feed")
+    if args.assert_batched_prefill_improves \
+            and not args.compare_per_slot_prefill:
+        ap.error("--assert-batched-prefill-improves requires "
+                 "--compare-per-slot-prefill")
+    if args.concurrent_admissions:
+        # all prompts in flight at once: every tick's prefill chunks can
+        # batch, and the per-slot rerun serializes the same work
+        args.requests = args.concurrent_admissions
+        args.mode = "closed"
+        args.long_prompts = True
+        args.max_batch = max(args.max_batch, args.concurrent_admissions)
 
     rows = run(args)
+    if args.compare_per_slot_prefill:
+        # same workload, same code path, groups capped at one row each
+        ps_args = argparse.Namespace(**{**vars(args), "profile_dir": ""})
+        per_slot = run(ps_args, prefill_batch=1)
+        rows["serve.prefill_tok_s_per_slot"] = \
+            per_slot["serve.prefill_tok_s"]
+        rows["serve.prefill_batch_speedup_x"] = round(
+            rows["serve.prefill_tok_s"]
+            / max(per_slot["serve.prefill_tok_s"], 1e-9), 2)
     if args.compare_tail_feed:
         # same workload through the SAME unified code path, continuation
-        # width forced to 1 token/tick (and no bucket padding, so the
-        # legacy feed is not billed for pad work it never did)
+        # width forced to 1 token/tick, per-slot batch=1 calls, and no
+        # bucket padding — the historical feed reproduced exactly, not
+        # billed for pad or granted cross-slot batching it never had
         tail_args = argparse.Namespace(**{**vars(args), "profile_dir": ""})
-        feed = run(tail_args, tail_chunk=1, min_bucket=1)
+        feed = run(tail_args, tail_chunk=1, min_bucket=1, prefill_batch=1)
         rows["serve.ttft_mean_ms_tail_feed"] = feed["serve.ttft_mean_ms"]
         rows["serve.ttft_p95_ms_tail_feed"] = feed["serve.ttft_p95_ms"]
     lines = ["name,value"] + [f"{k},{v}" for k, v in rows.items()]
@@ -263,6 +341,31 @@ def main() -> int:
             return 1
         print(f"chunked prefill TTFT {chunked}ms beats tail feed "
               f"{legacy_ttft}ms ({legacy_ttft / max(chunked, 1e-9):.1f}x)",
+              file=sys.stderr)
+    if args.assert_batched_prefill_improves:
+        speedup = rows["serve.prefill_batch_speedup_x"]
+        target = args.assert_batched_prefill_improves
+        if speedup < target:
+            print(f"FAIL: batched prefill speedup {speedup}x below the "
+                  f"required {target}x "
+                  f"({rows['serve.prefill_tok_s']} vs "
+                  f"{rows['serve.prefill_tok_s_per_slot']} tok/s)",
+                  file=sys.stderr)
+            return 1
+        print(f"batched prefill {rows['serve.prefill_tok_s']} tok/s = "
+              f"{speedup}x per-slot "
+              f"{rows['serve.prefill_tok_s_per_slot']} tok/s "
+              f"(>= {target}x required)", file=sys.stderr)
+    if args.assert_max_chunk_programs:
+        progs = rows["serve.compiled_chunk_programs"]
+        if progs > args.assert_max_chunk_programs:
+            print(f"FAIL: {progs} compiled (batch, width) prefill "
+                  f"programs exceed the --assert-max-chunk-programs "
+                  f"{args.assert_max_chunk_programs} bound",
+                  file=sys.stderr)
+            return 1
+        print(f"{progs} compiled (batch, width) prefill programs within "
+              f"the {args.assert_max_chunk_programs} bound",
               file=sys.stderr)
     if args.slo_p99_ms > 0:
         p99 = rows["serve.e2e_p99_ms"]

@@ -312,6 +312,17 @@ class ServeConfig:
     #: smallest chunk bucket (floors the power-of-two rounding so tiny
     #: prompts of many distinct lengths share one compiled width)
     min_chunk_bucket: int = 8
+    #: max slots whose prefill chunks batch into ONE forward_chunk call
+    #: per tick (cross-slot batched prefill): same-width chunks of
+    #: DIFFERENT slots gather their stashes into a multi-row cache, run
+    #: a single positioned chunk at per-row offsets, and scatter back —
+    #: concurrent admissions multiply prefill throughput instead of
+    #: serializing on the accelerator.  1 = per-slot batch=1 prefill
+    #: (the pre-batching behavior) through the same code path.  The
+    #: batch dimension buckets to powers of two when bucket_chunks is
+    #: set (pad rows masked via `valid`), so the compiled prefill
+    #: program set stays O(log prefill_batch x log max_seq_len).
+    prefill_batch: int = 8
     eos_token: int = 2
     #: default per-request e2e deadline in ms (0 = deadlines untracked);
     #: submit(deadline_ms=...) overrides per request.  Tracked requests

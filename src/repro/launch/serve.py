@@ -79,6 +79,11 @@ def main() -> int:
                          "prefill program)")
     ap.add_argument("--min-chunk-bucket", type=int, default=8,
                     help="smallest power-of-two chunk bucket")
+    ap.add_argument("--prefill-batch", type=int, default=8,
+                    help="max slots whose same-width prefill chunks batch "
+                         "into ONE forward_chunk call per tick (capped at "
+                         "--max-batch; 1 reproduces per-slot batch=1 "
+                         "prefill)")
     # -- sampling ------------------------------------------------------------
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
@@ -131,6 +136,7 @@ def main() -> int:
         prefill_budget_tokens=args.prefill_budget,
         bucket_chunks=not args.no_bucket_chunks,
         min_chunk_bucket=args.min_chunk_bucket,
+        prefill_batch=args.prefill_batch,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sample_seed=args.sample_seed,
         profile_dir=args.profile_dir,

@@ -13,15 +13,22 @@ EVERY model step is one `forward_chunk` — a T-token chunk written at
 per-slot cache offsets: admission bulk prefill, mid-prompt continuation
 chunks and the pooled decode tick are the same operation at different
 widths (the model layer's rope angles, row-range cache scatters and
-offset-causal masks are all per-row).  A prompt longer than
-`prefill_chunk` advances chunk-by-chunk through its OWN batch=1 cache
-stash — each chunk a single compiled call, in-model, never one token per
-tick — and scatters into the pool when complete; decode then runs ONE
-compiled width-1 chunk over the whole pool at per-slot positions: true
-iteration-level batching with zero recompilation as requests come and
-go.  Chunk widths round up to power-of-two buckets (pad masked in-model
-via `valid`), so the set of compiled prefill programs is
-O(log max_seq_len), not one per distinct prompt length.
+offset-causal masks are all per-row).  Prefill is batched ACROSS slots:
+each tick's selected chunks (continuations + admissions) group by
+compiled width (scheduler.batched_prefill_plan) and every group runs as
+ONE multi-row forward_chunk — the participating slots' batch=1 cache
+stashes gather into a [B]-row cache, advance at per-row `pos` with
+per-row `valid`, and scatter back (rows whose prompt completes scatter
+into the pool and sample their first token from that chunk's last-valid
+logits).  Concurrent admissions therefore share the accelerator instead
+of serializing batch=1 calls; `prefill_batch=1` reproduces the per-slot
+path through the same code.  Decode then runs ONE compiled width-1
+chunk over the whole pool at per-slot positions: true iteration-level
+batching with zero recompilation as requests come and go.  Chunk widths
+AND group batch dims round up to power-of-two buckets (pad masked
+in-model via `valid`), so the set of compiled prefill programs is
+O(log prefill_batch x log max_seq_len), not one per distinct prompt
+length or admission pattern.
 
 Client API: `submit()` returns a Request handle immediately; tokens
 stream through an optional `on_token` callback and `handle.result()`
@@ -30,8 +37,11 @@ thread (open-loop serving); without it, `run_until_drained()` drives the
 same loop synchronously (closed-loop benchmarks, tests).
 
 XFA instrumentation ('serve'): prefill_request and decode_tick are
-traced boundaries and every chunk step folds a `prefill_chunk` duration,
-so the flow graph separates prefill cost from decode cost per tick;
+traced boundaries, every batched chunk step folds a `prefill_chunk`
+duration, and every batched call folds a `prefill_batch_occupancy`
+gauge (percent of compiled rows that were real slots, not bucket pad) —
+the flow graph separates prefill cost from decode cost per tick and
+shows whether cross-slot batching engages;
 queue_wait (Wait kind), ttft, decode_token and e2e latency phases fold
 via tracer.record_duration (which also folds the bounded latency
 histograms behind the p50/p95/p99 read-out); truncated_prompt is a count
@@ -151,11 +161,23 @@ class ServingEngine:
         self.table = model.table()
         self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
         self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
-        # one compiled program per CHUNK WIDTH (bucketed powers of two);
-        # _chunk_widths tracks the issued set — tests assert it stays
-        # bounded regardless of how many distinct prompt lengths arrive
+        # one compiled program per (BATCH BUCKET, CHUNK WIDTH) pair (both
+        # bucketed powers of two); _chunk_programs tracks the scheduled
+        # set — tests assert it stays bounded regardless of how many
+        # distinct prompt lengths or admission patterns arrive
         self._chunk = jax.jit(model.forward_chunk, donate_argnums=(3,))
-        self._chunk_widths: set = set()
+        self._chunk_programs: set = set()
+        # per-leaf batch axes of the cache pytree (-1: unbatched leaf),
+        # inferred once from shapes — the batch axis differs per
+        # family/leaf ([L,B,...] KV rows, xlstm's [n_super,n_m,B,...]
+        # states, ...) and the batched-prefill gather/scatter needs it
+        s1 = jax.eval_shape(lambda: model.init_cache(1, scfg.max_seq_len))
+        s2 = jax.eval_shape(lambda: model.init_cache(2, scfg.max_seq_len))
+        self._batch_axes = jax.tree.map(
+            lambda a, b: next(
+                (d for d, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y), -1), s1, s2)
+        self._pad_stashes: dict = {}
         self._uid = 0
         self.completed: List[Request] = []
         self._lock = threading.RLock()
@@ -299,49 +321,110 @@ class ServingEngine:
         out.append(w)
         return out
 
+    def batch_buckets(self) -> list:
+        """Every compiled batch dimension batched prefill can schedule
+        (powers of two up to the effective prefill_batch cap) — with
+        chunk_buckets(), the warmup surface for benchmarks (one compiled
+        program per (batch bucket, width) pair)."""
+        if not self.scfg.bucket_chunks:
+            return []                  # unbounded: one program per group size
+        out, b = [], 1
+        while b < self.scheduler.prefill_batch:
+            out.append(b)
+            b *= 2
+        out.append(b)
+        return out
+
+    def warm_chunk_programs(self) -> None:
+        """Compile every (batch bucket, width) prefill program this
+        engine can schedule, on scratch caches — call it outside any
+        timed window so a benchmark's first batched tick measures the
+        batching, not XLA compilation.  Warmed programs do NOT count
+        toward chunk_programs: that set reports what the workload
+        actually scheduled (the recompile-hazard bound)."""
+        for w in self.chunk_buckets() or [self.scfg.prefill_chunk or 1]:
+            for b in self.batch_buckets() or [1]:
+                cache = self.model.init_cache(b, self.scfg.max_seq_len)
+                logits, _, self.table = self._chunk(
+                    self.params, jnp.zeros((b, w), jnp.int32), self.table,
+                    cache, jnp.zeros((b,), jnp.int32),
+                    jnp.ones((b,), jnp.int32))
+                jax.block_until_ready(logits)
+
     @property
     def chunk_widths(self) -> frozenset:
-        """Chunk widths compiled so far (tests assert this stays bounded
-        no matter how many distinct prompt lengths arrive)."""
-        return frozenset(self._chunk_widths)
+        """Chunk widths compiled so far (the width projection of
+        chunk_programs; stays bounded no matter how many distinct prompt
+        lengths arrive)."""
+        return frozenset(w for _, w in self._chunk_programs)
 
-    def _chunk_width(self, n: int, pos: int) -> int:
-        """Compiled width for a chunk of <= n tokens starting at cache
-        offset `pos`: the next power-of-two bucket (>= min_chunk_bucket),
-        bucketed DOWN while a padded write would run past the row end (a
-        clamped scatter would shift garbage onto valid entries).  May
-        return less than n — the caller then consumes fewer tokens and
-        leaves the rest pending, keeping every width a power of two: the
-        compiled-program set stays O(log) even for non-power-of-two
-        max_seq_len rows."""
-        scfg = self.scfg
-        if not scfg.bucket_chunks:
-            return n
-        w = max(scfg.min_chunk_bucket, 1)
-        while w < n:
-            w *= 2
-        room = scfg.max_seq_len - pos          # >= n: the engine clamps
-        while w > room and w > 1:
-            w //= 2
-        return w
+    @property
+    def chunk_programs(self) -> frozenset:
+        """(batch_bucket, width) pairs scheduled so far — tests assert
+        this stays O(log prefill_batch x log max_seq_len) no matter how
+        many distinct prompt lengths or admission patterns arrive."""
+        return frozenset(self._chunk_programs)
 
-    def _prefill_chunk(self, slot_idx: int, n: int) -> None:
-        """One positioned prefill chunk: advance slot `slot_idx`'s prompt
-        by its next n tokens through a single forward_chunk at the slot's
-        cache offset (bucket-padded width, pad masked in-model).  When
-        the prompt completes, the batch=1 stash scatters into the pool
-        and the FIRST token samples from this chunk's last-valid logits —
-        the TTFT win over the old one-token-per-tick tail feed."""
-        slot = self.scheduler.slots[slot_idx]
-        width = self._chunk_width(n, slot.pos)
-        n = min(n, width)      # end-of-row chunks bucket DOWN: take fewer
-        toks = [slot.pending.popleft() for _ in range(n)]
-        padded = np.zeros((1, width), np.int32)
-        padded[0, :n] = toks
+    # -- batched cross-slot prefill -----------------------------------------
+    def _pad_stash(self, rows: int):
+        """Zero cache rows padding a group up to its batch bucket (valid
+        masks them in-model).  Cached per size: the gather CONCATENATES
+        it (a copy) and only the copy is donated to the compiled call,
+        so the cached rows stay live across ticks."""
+        if rows not in self._pad_stashes:
+            self._pad_stashes[rows] = self.model.init_cache(
+                rows, self.scfg.max_seq_len)
+        return self._pad_stashes[rows]
+
+    def _gather_stashes(self, stashes: list, pad: int):
+        """Concatenate B batch=1 stashes (+ `pad` zero rows) into one
+        [B+pad]-row cache along each leaf's batch axis — _scatter_slot's
+        machinery in reverse.  A single stash with no pad passes through
+        untouched: prefill_batch=1 IS the legacy per-slot path, same
+        buffers, same numerics."""
+        if len(stashes) == 1 and pad == 0:
+            return stashes[0]
+        parts = stashes + ([self._pad_stash(pad)] if pad else [])
+
+        def leaf(ax, *ls):
+            return ls[0] if ax < 0 else jnp.concatenate(ls, axis=ax)
+        return jax.tree.map(leaf, self._batch_axes, *parts)
+
+    def _take_row(self, gathered, row: int):
+        """Slice row `row` of a gathered stash back out as a batch=1
+        cache pytree (a copy, so the donated gathered buffer is never
+        aliased by a live slot stash)."""
+        def leaf(ax, l):
+            return l if ax < 0 else jax.lax.slice_in_dim(
+                l, row, row + 1, axis=ax)
+        return jax.tree.map(leaf, self._batch_axes, gathered)
+
+    def _prefill_group(self, idxs: list, ns: list, width: int) -> None:
+        """One batched prefill chunk: advance the B slots in `idxs` by
+        their next ns[r] tokens through a SINGLE forward_chunk at
+        per-row cache offsets (width bucket-padded in T, group padded to
+        the batch bucket in B, both masked via `valid`).  Rows whose
+        prompt completes scatter into the pool and sample their FIRST
+        token from this chunk's last-valid logits — the TTFT win over
+        the old one-token-per-tick tail feed, now at multi-slot
+        throughput."""
+        slots = self.scheduler.slots
+        B = len(idxs)
+        Bb = self.scheduler.batch_bucket(B)
+        tokens = np.zeros((Bb, width), np.int32)
+        pos = np.zeros((Bb,), np.int32)
+        valid = np.zeros((Bb,), np.int32)
+        for r, (i, n) in enumerate(zip(idxs, ns)):
+            slot = slots[i]
+            tokens[r, :n] = [slot.pending.popleft() for _ in range(n)]
+            pos[r] = slot.pos
+            valid[r] = n
+        gathered = self._gather_stashes([slots[i].stash for i in idxs],
+                                        Bb - B)
         t0 = time.perf_counter_ns()
-        logits, slot.stash, self.table = self._chunk(
-            self.params, jnp.asarray(padded), self.table, slot.stash,
-            jnp.asarray([slot.pos], jnp.int32), jnp.asarray([n], jnp.int32))
+        logits, gathered, self.table = self._chunk(
+            self.params, jnp.asarray(tokens), self.table, gathered,
+            jnp.asarray(pos), jnp.asarray(valid))
         # sync before the end timestamp: jitted calls return unready
         # arrays, and mid-prompt chunks have no downstream host read to
         # block on — without this the fold times dispatch, not compute
@@ -350,22 +433,36 @@ class ServingEngine:
         # from decode cost per tick (wait-dominance / hot-edge detectors)
         xfa.record_duration("serve", "prefill_chunk",
                             time.perf_counter_ns() - t0)
-        self._chunk_widths.add(width)
-        slot.pos += n
-        if not slot.pending:
-            self.cache = _scatter_slot(self.cache, slot.stash, slot_idx)
+        # batching efficiency as a gauge (percent of compiled rows that
+        # were real slots): the flow-graph evidence that cross-slot
+        # batching engages — 100 when groups fill their bucket, lower
+        # when pad rows dominate (mean over calls via the gauge fold)
+        xfa.record_gauge("serve", "prefill_batch_occupancy",
+                         100.0 * B / Bb)
+        self._chunk_programs.add((Bb, width))
+        for r, (i, n) in enumerate(zip(idxs, ns)):
+            slot = slots[i]
+            slot.pos += n
+            row = gathered if B == 1 and Bb == 1 \
+                else self._take_row(gathered, r)
+            if slot.pending:
+                slot.stash = row
+                continue
+            self.cache = _scatter_slot(self.cache, row, i)
             slot.stash = None
             # the first token is EOS-checked — a first-token EOS finishes
             # without any decode ticks instead of burning max_new - 1
             tok = self.sampler.sample_one(
-                np.asarray(logits[0]), slot.request.sampling, step=slot.pos)
-            self._emit(slot_idx, tok, time.monotonic())
+                np.asarray(logits[r]), slot.request.sampling, step=slot.pos)
+            self._emit(i, tok, time.monotonic())
 
     @xfa.api("serve", "prefill_request")
-    def _admit(self, slot_idx: int, req: Request) -> None:
-        """Bind `req` to slot `slot_idx` and run its first prefill chunk
-        (up to prefill_chunk tokens) into a fresh batch=1 stash; the
-        remainder advances chunk-by-chunk on subsequent ticks."""
+    def _admit(self, slot_idx: int, req: Request) -> int:
+        """Bind `req` to slot `slot_idx` (truncation accounting, fresh
+        batch=1 stash, sampler row) and return its first prefill chunk's
+        token count — the chunk itself runs in this tick's batched
+        prefill groups, alongside other admissions and continuations of
+        the same compiled width."""
         model, scfg = self.model, self.scfg
         now = time.monotonic()
         req.admitted_at = now
@@ -391,7 +488,7 @@ class ServingEngine:
         self.scheduler.bind(slot_idx, req, pos=0, pending=prompt,
                             stash=model.init_cache(1, scfg.max_seq_len))
         self.sampler.bind(slot_idx, req.sampling)
-        self._prefill_chunk(slot_idx, self.scheduler.admit_cost(req))
+        return self.scheduler.admit_cost(req)
 
     @xfa.api("serve", "decode_tick")
     def _tick(self) -> int:
@@ -471,16 +568,15 @@ class ServingEngine:
                 xfa.record_gauge("serve", "queue_depth",
                                  len(self.scheduler.waiting))
                 cont, deferred = self.scheduler.continuation_plan()
-                for idx, n in cont:
-                    self._prefill_chunk(idx, n)
                 # strict FCFS: if any mid-prefill slot (older than every
                 # waiting request) was deferred by the budget, nothing
                 # younger may spend the leftover this tick
                 picked = [] if deferred else self.scheduler.schedule(
                     spent=sum(n for _, n in cont))
+                items = list(cont)
                 for k, (idx, req) in enumerate(picked):
                     try:
-                        self._admit(idx, req)
+                        items.append((idx, self._admit(idx, req)))
                     except Exception as e:
                         # every request in `picked` was already popped
                         # from the queue — none may vanish without waking
@@ -493,6 +589,11 @@ class ServingEngine:
                         for _, later in reversed(picked[k + 1:]):
                             self.scheduler.waiting.appendleft(later)
                         raise
+                # continuations AND admissions batch together: one
+                # forward_chunk per same-width group of selected chunks
+                for idxs, ns, width in \
+                        self.scheduler.batched_prefill_plan(items):
+                    self._prefill_group(idxs, ns, width)
                 self._tick()
                 self._ticks += 1
                 interval = self.scfg.profile_interval_ticks

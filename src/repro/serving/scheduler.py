@@ -20,6 +20,16 @@ BEFORE anything still waiting, so each tick plans continuations first
 The budget never reorders the queue, and the first prefill step of a
 tick always fits, so one huge prompt is delayed (by the budget) but
 never starved — and neither is a long tail mid-prefill.
+
+Batched prefill plan: once a tick's chunks are SELECTED (continuations
+then admissions, under the budget), `batched_prefill_plan` groups them
+by compiled chunk width into at most `prefill_batch`-row groups — each
+group one multi-row `forward_chunk` call in the engine.  Grouping only
+changes HOW the selected chunks execute, never WHO was selected, so the
+FCFS/budget guarantees above are untouched by batching.  The scheduler
+also owns the compiled-shape discipline: chunk widths and group batch
+dims both round to power-of-two buckets (`chunk_width`, `batch_bucket`),
+keeping the engine's program set O(log batch x log seq_len).
 """
 
 from __future__ import annotations
@@ -103,6 +113,72 @@ class Scheduler:
     def tail_chunk(self) -> int:
         """Continuation chunk width (tokens per forward_chunk step)."""
         return self.scfg.tail_chunk or self.scfg.prefill_chunk or 1
+
+    # -- compiled-shape discipline ------------------------------------------
+    def chunk_width(self, n: int, pos: int) -> int:
+        """Compiled width for a chunk of <= n tokens starting at cache
+        offset `pos`: the next power-of-two bucket (>= min_chunk_bucket),
+        bucketed DOWN while a padded write would run past the row end (a
+        clamped scatter would shift garbage onto valid entries).  May
+        return less than n — the caller then consumes fewer tokens and
+        leaves the rest pending, keeping every width a power of two: the
+        compiled-program set stays O(log) even for non-power-of-two
+        max_seq_len rows."""
+        scfg = self.scfg
+        if not scfg.bucket_chunks:
+            return n
+        w = max(scfg.min_chunk_bucket, 1)
+        while w < n:
+            w *= 2
+        room = scfg.max_seq_len - pos          # >= n: the engine clamps
+        while w > room and w > 1:
+            w //= 2
+        return w
+
+    def batch_bucket(self, rows: int) -> int:
+        """Compiled batch dimension for a `rows`-row prefill group: the
+        next power of two (pad rows masked via `valid`) under bucketing,
+        exact otherwise — with widths also bucketed, group shapes come
+        from an O(log prefill_batch x log max_seq_len) set."""
+        if not self.scfg.bucket_chunks:
+            return rows
+        b = 1
+        while b < rows:
+            b *= 2
+        return b
+
+    @property
+    def prefill_batch(self) -> int:
+        """Effective rows-per-group cap (never more than the pool)."""
+        return max(1, min(self.scfg.prefill_batch, self.scfg.max_batch))
+
+    def batched_prefill_plan(self, items: List[Tuple[int, int]]
+                             ) -> List[Tuple[List[int], List[int], int]]:
+        """Group this tick's SELECTED prefill chunks [(slot_idx, n)] —
+        continuations first, then admissions, exactly as the budget
+        picked them — into (slot_indices, n_tokens, width) groups of at
+        most `prefill_batch` same-width rows: each group is ONE
+        multi-row forward_chunk call.  Selection already enforced FCFS
+        and the token budget; grouping only changes how the chunks run,
+        never who runs, so an older mid-prefill slot can never be
+        displaced by a batch of younger admissions.  An item's width may
+        bucket DOWN near its row end (it then consumes min(n, width)
+        tokens); items group by that final width."""
+        cap = self.prefill_batch
+        groups: List[Tuple[List[int], List[int], int]] = []
+        open_group = {}                # width -> index of its open group
+        for idx, n in items:
+            slot = self.slots[idx]
+            w = self.chunk_width(min(n, len(slot.pending)), slot.pos)
+            n = min(n, w)
+            g = open_group.get(w)
+            if g is None or len(groups[g][0]) >= cap:
+                open_group[w] = len(groups)
+                groups.append(([idx], [n], w))
+            else:
+                groups[g][0].append(idx)
+                groups[g][1].append(n)
+        return groups
 
     def continuation_plan(self) -> Tuple[List[Tuple[int, int]], bool]:
         """((slot_idx, n_tokens) continuation chunks for this tick,

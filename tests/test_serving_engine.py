@@ -11,8 +11,13 @@ the equivalence is checked at chunk widths {1, 3, bucket, whole-prompt}
 every model family the engine serves (dense, moe/mla, hybrid, ssm; vlm
 and audio prompts need patches/frames at submit, which the token-prompt
 client API doesn't carry; their chunk equivalence lives in
-test_models.py).  Plus the scheduler (admission + continuation budget),
-the bounded compiled-chunk-width guarantee, the pooled sampler
+test_models.py).  Cross-slot BATCHED prefill (TestBatchedPrefill) adds
+the second equivalence axis: same-tick chunks of different slots
+running as one multi-row forward_chunk must be token-identical to the
+per-slot path (prefill_batch=1) and to sequential decode, and must
+never bend strict FCFS.  Plus the scheduler (admission + continuation
+budget), the bounded compiled-program guarantee (now (batch bucket,
+width) pairs), the pooled sampler
 (determinism under batching), the client API (background thread,
 streaming callbacks, futures), EOS-on-first-token, truncation
 accounting, and the serve latency phases folded into profile shards.
@@ -205,6 +210,136 @@ class TestContinuousBatchingEquivalence:
             solo.run_until_drained()
             assert r.output == ref.output
             assert len(r.output) == n
+
+
+class TestBatchedPrefill:
+    """Cross-slot batched prefill: each tick's selected chunks group by
+    compiled width and run as ONE multi-row forward_chunk (gathered
+    stashes, per-row pos/valid, bucket-padded batch dim).  The invariant:
+    batching changes HOW chunks execute, never WHAT tokens come out —
+    batched runs must be token-identical to the per-slot path
+    (prefill_batch=1) and to sequential per-request decode."""
+
+    def mk(self, model, params, batch, **kw):
+        base = dict(max_batch=4, max_seq_len=64, eos_token=-1,
+                    prefill_chunk=8, min_chunk_bucket=4)
+        base.update(kw)
+        return ServingEngine(model, params,
+                             ServeConfig(prefill_batch=batch, **base))
+
+    @pytest.mark.parametrize("arch", SERVING_ARCHS)
+    def test_concurrent_admissions_match_per_slot_and_sequential(self, arch):
+        """Four same-tick admissions of mixed widths (two multi-chunk
+        prompts): the batched engine groups them (one group bucket-padded
+        B=3->4, plus continuation groups on later ticks) and must emit
+        exactly the tokens the per-slot engine and sequential decode
+        emit."""
+        cfg, model, params = build(arch)
+        prompts = mixed_prompts(cfg, seed=11, lengths=(3, 17, 5, 20))
+        max_new = [5, 4, 5, 4]
+        outs = {}
+        for batch in (4, 1):
+            engine = self.mk(model, params, batch)
+            reqs = [engine.submit(p, n) for p, n in zip(prompts, max_new)]
+            engine.run_until_drained()
+            assert all(r.done for r in reqs)
+            outs[batch] = [r.output for r in reqs]
+            buckets = {b for b, _ in engine.chunk_programs}
+            if batch > 1:   # batching actually engaged (multi-row groups)
+                assert max(buckets) > 1, engine.chunk_programs
+            else:           # prefill_batch=1 IS the per-slot path
+                assert buckets == {1}, engine.chunk_programs
+        assert outs[4] == outs[1], f"{arch}: batched != per-slot prefill"
+        for out, p, n in zip(outs[4], prompts, max_new):
+            assert out == sequential_decode(model, params, p, n), \
+                f"{arch}: batched prefill != sequential (len {len(p)})"
+
+    def test_staggered_mixed_width_ticks_match_per_slot(self):
+        """Staggered arrivals where a tick mixes continuation chunks of
+        older slots with fresh admissions at a DIFFERENT width: groups
+        form per width, and outputs still match the per-slot path."""
+        cfg, model, params = build("tinyllama_1_1b")
+        prompts = mixed_prompts(cfg, seed=12, lengths=(19, 4, 18, 6))
+        max_new = [4, 5, 4, 5]
+        runs = {b: staggered_run(self.mk(model, params, b, tail_chunk=4),
+                                 prompts, max_new) for b in (4, 1)}
+        for rb, r1, p, n in zip(runs[4], runs[1], prompts, max_new):
+            assert rb.output == r1.output
+            assert rb.output == sequential_decode(model, params, p, n)
+
+    def test_width_one_chunks_batch_across_slots(self):
+        """Degenerate width-1 chunks (prefill_chunk=1, unit bucket) still
+        batch across slots and stay sequential-identical — the finest
+        grain the compiled-width lattice reaches."""
+        cfg, model, params = build("tinyllama_1_1b")
+        prompts = mixed_prompts(cfg, seed=13, lengths=(3, 5, 4))
+        engine = self.mk(model, params, 4, prefill_chunk=1,
+                         min_chunk_bucket=1)
+        reqs = [engine.submit(p, 4) for p in prompts]
+        engine.run_until_drained()
+        assert any(b > 1 for b, _ in engine.chunk_programs), \
+            engine.chunk_programs
+        for r, p in zip(reqs, prompts):
+            assert r.output == sequential_decode(model, params, p, 4)
+
+    def test_bounded_chunk_programs(self):
+        """The recompile hazard, now 2-D: many distinct prompt lengths
+        under many admission patterns must stay on the O(log
+        prefill_batch x log max_seq_len) lattice of (batch bucket, width)
+        pairs — never one program per (group size, length)."""
+        cfg, model, params = build("tinyllama_1_1b")
+        rng = np.random.default_rng(14)
+        engine = self.mk(model, params, 4, prefill_chunk=16,
+                         min_chunk_bucket=8)
+        lengths = list(range(3, 27, 2))          # 12 distinct prompt lengths
+        for n in lengths:
+            engine.submit(rng.integers(0, cfg.vocab, n).astype(np.int32), 2)
+        done = engine.run_until_drained()
+        assert len(done) == len(lengths)
+        assert engine.batch_buckets() == [1, 2, 4]
+        lattice = {(b, w) for b in (1, 2, 4) for w in (8, 16)}
+        assert engine.chunk_programs <= lattice, engine.chunk_programs
+        assert engine.chunk_widths <= {8, 16}
+
+    def test_occupancy_gauge_folds_into_profile(self, tmp_path):
+        """Every batched call folds prefill_batch_occupancy (percent of
+        compiled rows that were real slots) — the flow-graph evidence
+        that batching engages; mean must land in (0, 100]."""
+        cfg, model, params = build("tinyllama_1_1b")
+        run_dir = str(tmp_path / "serve-run")
+        engine = self.mk(model, params, 4, profile_dir=run_dir)
+        for p in mixed_prompts(cfg, seed=15, lengths=(6, 6, 7)):
+            engine.submit(p, 2)
+        engine.run_until_drained()
+        from repro.profile import ProfileStore
+        folded = ProfileStore(run_dir).reduce().to_folded()
+        occ = [e for k, e in folded.edges.items()
+               if k[2] == "prefill_batch_occupancy"]
+        assert occ and occ[0].count >= 1
+        mean = occ[0].total_ns / occ[0].count
+        assert 0 < mean <= 100, mean
+
+    def test_older_continuation_blocks_younger_admission_batch(self):
+        """Strict-FCFS regression under batched plans: while an older
+        slot still owes continuation chunks and the per-tick budget is
+        exhausted, a FULL batch of younger admissions must keep waiting
+        — grouping happens after selection, so batching must never let
+        younger admissions ride along in the older slot's group."""
+        cfg, model, params = build("tinyllama_1_1b")
+        engine = ServingEngine(model, params, ServeConfig(
+            max_batch=4, max_seq_len=64, eos_token=-1, prefill_chunk=4,
+            prefill_budget_tokens=4, min_chunk_bucket=4, prefill_batch=4))
+        old = engine.submit(mixed_prompts(cfg, seed=9, lengths=(20,))[0], 2)
+        engine.step()              # admits old, prefills its first chunk
+        assert old.admitted_at is not None
+        youngers = [engine.submit(p, 2)
+                    for p in mixed_prompts(cfg, seed=10, lengths=(4, 4, 4))]
+        while engine.scheduler.slots[0].pending:
+            assert all(r.admitted_at is None for r in youngers), \
+                "younger admissions rode along with an older continuation"
+            engine.step()
+        engine.run_until_drained()
+        assert old.done and all(r.done for r in youngers)
 
 
 class TestEngineSemantics:
