@@ -1,0 +1,118 @@
+"""Fleet transport efficiency: delta streaming vs naive ring re-upload.
+
+The publisher (repro.profile.FleetPublisher) ships only ring entries the
+collector has not acked.  The naive alternative — re-uploading the whole
+ring every interval, which is what a dumb `rsync`/poll loop would do —
+costs the *cumulative* ring size per interval.  On a K-interval ring the
+naive total is O(K^2) entry-bytes while the delta stream is O(K), so the
+gap widens with every interval; this benchmark measures both on a real
+localhost collector and GATES on the delta stream being >= 5x cheaper
+over a 10-interval ring (exit 1 otherwise, wired into the fleet-e2e CI
+lane).
+
+It also asserts the resume contract: a fresh publisher (no client-side
+state, as after a process restart) ships exactly the unacked suffix —
+never the already-spooled prefix.
+
+  transport.delta_bytes        bytes actually shipped over the wire
+  transport.naive_bytes        full-ring re-upload equivalent
+  transport.savings_x          naive / delta       (gate: >= 5.0)
+  transport.frames             snapshot frames shipped
+  transport.resume_reshipped   entries re-shipped by the restarted
+                               publisher beyond the 1 new one (gate: 0)
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+
+N_INTERVALS = 10
+SAVINGS_GATE_X = 5.0
+
+
+def run():
+    from repro.core.folding import fold_event_log
+    from repro.profile import (Collector, FleetPublisher, ProfileStore,
+                               RetentionPolicy, register_run,
+                               set_host_label)
+
+    events = [("app", "runtime", "step", 2_000_000)] * 4 + \
+             [("app", "io", "load", 1_000_000)] * 2
+    table = fold_event_log(events)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        run_dir = os.path.join(tmp, "run")
+        spool = os.path.join(tmp, "spool")
+        set_host_label("bench-host")
+        register_run(run_dir, config="bench", kind="train", label="bench")
+        # unbounded ring: the naive competitor re-uploads all of it
+        store = ProfileStore(run_dir, retention=RetentionPolicy(keep_last=0))
+
+        delta_bytes = frames = naive_bytes = 0
+        resume_reshipped = 0
+        with Collector(spool) as col:
+            addr = "127.0.0.1:%d" % col.port
+            pub = FleetPublisher(addr, run_dir, run_id="bench")
+            for i in range(1, N_INTERVALS + 1):
+                store.write_shard(table.scale_time(1.0 + 0.01 * i),
+                                  label="bench")
+                if i == 6:
+                    # publisher restart mid-run: fresh client state must
+                    # resume from the collector's acks, not re-ship
+                    pub.close()
+                    pub = FleetPublisher(addr, run_dir, run_id="bench")
+                stats = pub.publish()
+                assert stats["errors"] == 0, stats
+                if i == 6:
+                    resume_reshipped = stats["shipped"] - 1
+                delta_bytes += stats["bytes"]
+                frames += stats["shipped"]
+                # what a full-ring re-upload would move this interval
+                naive_bytes += sum(
+                    os.path.getsize(path)
+                    for ring in store.shards().values()
+                    for _seq, path in ring)
+            pub.close()
+        set_host_label(None)
+
+    savings = naive_bytes / delta_bytes if delta_bytes else 0.0
+    note = f"{N_INTERVALS}-interval ring"
+    yield "transport.delta_bytes", float(delta_bytes), note
+    yield "transport.naive_bytes", float(naive_bytes), "full re-upload"
+    yield "transport.savings_x", savings, f"gate >= {SAVINGS_GATE_X}"
+    yield "transport.frames", float(frames), note
+    yield "transport.resume_reshipped", float(resume_reshipped), "gate == 0"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("-o", "--output", help="also write the CSV here")
+    args = ap.parse_args(argv)
+    rows = list(run())
+    lines = ["name,value,note"] + [f"{n},{v:.3f},{note}"
+                                   for n, v, note in rows]
+    csv = "\n".join(lines)
+    print(csv)
+    if args.output:
+        with open(args.output, "w") as f:
+            f.write(csv + "\n")
+    vals = {n: v for n, v, _ in rows}
+    failed = []
+    if vals["transport.savings_x"] < SAVINGS_GATE_X:
+        failed.append(f"delta stream only {vals['transport.savings_x']:.2f}x "
+                      f"cheaper than naive re-upload (gate "
+                      f">= {SAVINGS_GATE_X}x)")
+    if vals["transport.resume_reshipped"] != 0:
+        failed.append(f"resume re-shipped "
+                      f"{int(vals['transport.resume_reshipped'])} already-"
+                      f"acked ring entries (gate: 0)")
+    for msg in failed:
+        print(f"GATE FAILED: {msg}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,9 @@ orchestration behind `python -m repro.profile diagnose`.
   calibrate.py  per-edge noise bands (mean/std/p95) from baseline runs or
                 a ring, serialized as a thresholds JSON
   diagnose.py   run selection -> DiagnosisContext -> findings -> report
+  fleet.py      cross-run/cross-host ranking behind `diagnose --fleet`:
+                per-host merged graphs, fleet-straggler + run-outlier
+                findings, reports grouped by (severity, detector, host)
 """
 
 from .graph import (FlowEdge, FlowGraph, FlowNode, edge_label, run_graph,
@@ -26,6 +29,8 @@ from .detectors import (SEVERITIES, CallAmplification, Detector,
                         run_detectors, severity_rank)
 from .diagnose import (Diagnosis, build_context, diagnose,
                        load_detector_config, resolve_run_dir)
+from .fleet import (FleetDiagnosis, diagnose_fleet, fleet_straggler_findings,
+                    host_graphs, stem_host)
 
 __all__ = [
     "FlowEdge", "FlowGraph", "FlowNode", "edge_label", "run_graph",
@@ -39,4 +44,6 @@ __all__ = [
     "severity_rank",
     "Diagnosis", "build_context", "diagnose", "load_detector_config",
     "resolve_run_dir",
+    "FleetDiagnosis", "diagnose_fleet", "fleet_straggler_findings",
+    "host_graphs", "stem_host",
 ]

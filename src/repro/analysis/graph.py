@@ -250,16 +250,18 @@ def shard_graphs(run_dir: str) -> Dict[str, FlowGraph]:
     """Per-shard projection of one run: stem -> FlowGraph built from the
     NEWEST ring entry of each shard (the shard's cumulative truth).  One
     trainer rank / serving replica each becomes a comparable subgraph —
-    the input to straggler/imbalance detection.  Merge products that were
-    written into the run dir are excluded, mirroring the reducer."""
+    the input to straggler/imbalance detection.  Stems come from the
+    store (host-qualified `host/shard` in a collector spool run dir), so
+    two hosts' same-named rank-0 rings stay two subgraphs instead of
+    silently aliasing.  Merge products that were written into the run
+    dir are excluded, mirroring the reducer."""
     from ..profile.snapshot import ProfileSnapshot
-    from ..profile.store import ProfileStore, split_snapshot_name
+    from ..profile.store import ProfileStore
     out: Dict[str, FlowGraph] = {}
-    for p in ProfileStore(run_dir).shard_paths():
-        snap = ProfileSnapshot.load(p)
+    for stem, ring in sorted(ProfileStore(run_dir).shards().items()):
+        snap = ProfileSnapshot.load(ring[-1][1])
         if "merged_from" in snap.meta:
             continue
-        stem, _seq = split_snapshot_name(p)
         out[stem] = FlowGraph.from_snapshot(snap)
     return out
 

@@ -358,6 +358,11 @@ class ServeConfig:
     #: free-form key=value metadata merged into the run manifest at engine
     #: start (the run registry indexes it for `repro.profile query`)
     profile_meta: Tuple[Tuple[str, str], ...] = ()
+    #: fleet collector address 'HOST:PORT'; when set (with profile_dir)
+    #: every shard refresh also streams the ring's unacked entries to the
+    #: collector (repro.profile.FleetPublisher) — failures degrade to
+    #: local-only rings, they never stall the serve loop
+    xfa_collector: str = ""
     #: host-tracer overhead budget as a fraction of wall time (0 = governor
     #: off); see TrainConfig.xfa_overhead_budget — the engine attaches the
     #: governor at construction so the serve loop's per-tick boundaries

@@ -109,6 +109,13 @@ def main() -> int:
     ap.add_argument("--profile-meta", action="append", default=[],
                     type=kv_pair, metavar="KEY=VALUE",
                     help="extra run-manifest metadata (repeatable)")
+    ap.add_argument("--xfa-collector", default="", metavar="HOST:PORT",
+                    help="stream snapshot-ring deltas to a fleet collector "
+                         "(python -m repro.profile collect); failures "
+                         "degrade to the local ring, never stall serving")
+    ap.add_argument("--xfa-host-label", default="",
+                    help="override this replica's host label in shard "
+                         "names and manifests (default: hostname)")
     ap.add_argument("--xfa-budget-pct", type=float, default=0.0,
                     help="host-tracer overhead budget as a percent of wall "
                          "time (0: governor off, every boundary fully "
@@ -116,6 +123,9 @@ def main() -> int:
                          "with unbiased scale-up, counting stays exact")
     args = ap.parse_args()
 
+    if args.xfa_host_label:
+        from repro.profile import set_host_label
+        set_host_label(args.xfa_host_label)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg, impl="auto")
     if args.ckpt:
@@ -146,6 +156,7 @@ def main() -> int:
         profile_max_age_s=args.profile_max_age_s,
         profile_max_bytes=args.profile_max_bytes,
         profile_meta=tuple(args.profile_meta),
+        xfa_collector=args.xfa_collector,
         xfa_overhead_budget=args.xfa_budget_pct / 100.0))
     # sampling knobs ride in ServeConfig: submit() defaults to them
     rng = np.random.default_rng(0)

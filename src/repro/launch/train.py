@@ -54,6 +54,14 @@ def main() -> int:
     ap.add_argument("--profile-meta", action="append", default=[],
                     type=kv_pair, metavar="KEY=VALUE",
                     help="extra run-manifest metadata (repeatable)")
+    ap.add_argument("--xfa-collector", default="", metavar="HOST:PORT",
+                    help="stream snapshot-ring deltas to a fleet collector "
+                         "(python -m repro.profile collect); failures "
+                         "degrade to the local ring, never kill the run")
+    ap.add_argument("--xfa-host-label", default="",
+                    help="override this process's host label in shard "
+                         "names and manifests (default: hostname; tests "
+                         "and multi-process-per-host fleets set it)")
     ap.add_argument("--xfa-budget-pct", type=float, default=0.0,
                     help="host-tracer overhead budget as a percent of wall "
                          "time (0: governor off, every boundary fully "
@@ -61,6 +69,9 @@ def main() -> int:
                          "with unbiased scale-up, counting stays exact")
     args = ap.parse_args()
 
+    if args.xfa_host_label:
+        from repro.profile import set_host_label
+        set_host_label(args.xfa_host_label)
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     mesh = None
     if args.mesh:
@@ -84,7 +95,8 @@ def main() -> int:
                           keep_last=args.profile_keep_last,
                           max_age_s=args.profile_max_age_s,
                           max_bytes=args.profile_max_bytes),
-                      profile_meta=dict(args.profile_meta))
+                      profile_meta=dict(args.profile_meta),
+                      xfa_collector=args.xfa_collector)
     data = SyntheticLMData(cfg, args.batch, args.seq)
     with runtime_mesh(mesh):
         state, metrics = trainer.run(jax.random.key(0), data, args.steps,

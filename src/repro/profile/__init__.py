@@ -21,8 +21,16 @@ queryable ("all runs of arch X on mesh Y").
                 delta-of-deltas (`timeline RUN_A --diff RUN_B`)
   diff.py       run-over-run comparison with per-edge regression flagging
                 (global threshold, or calibrated per-edge noise bands)
+  transport.py  framed TCP wire protocol (length-prefixed json header +
+                payload) and FleetPublisher — ships snapshot-ring deltas
+                to a collector, resuming from its acked (shard, seq)
+                state; publish failures degrade to local-only rings
+  collector.py  threaded collector daemon + spool layout
+                (SPOOL/<run_id>/<host>/<shard>.seq<N>.xfa.npz) behind
+                `python -m repro.profile collect`
   __main__.py   CLI: python -m repro.profile
-                {report,merge,diff,query,gc,timeline,calibrate,diagnose}
+                {report,merge,diff,query,gc,timeline,calibrate,diagnose,
+                 collect}
 
 Interpretation of all of this — the typed Cross Flow Graph, the detector
 suite behind `diagnose`, and the noise-band calibration behind
@@ -36,20 +44,29 @@ not per-edge EdgeStats dict loops (benchmarks/merge.py measures the gap).
 
 from .snapshot import SCHEMA_VERSION, SNAPSHOT_SUFFIX, ProfileSnapshot
 from .store import (ProfileStore, RetentionPolicy, find_run_dirs,
-                    load_profile, split_snapshot_name, tracer_folded)
+                    host_label, load_profile, ring_entries, set_host_label,
+                    split_snapshot_name, tracer_folded)
 from .index import (MANIFEST_NAME, RunManifest, RunRegistry, kv_pair,
                     parse_mesh, register_run)
 from .timeline import (ShardTimeline, TimelineDiff, build_timelines,
                        pair_timelines, render_timeline, render_timeline_diff)
 from .diff import EdgeDelta, ProfileDiff, diff_profiles
+from .transport import (PROTO_VERSION, Disconnect, FleetPublisher,
+                        FrameError, frame_checksum, parse_addr, recv_frame,
+                        send_frame)
+from .collector import Collector, collect_main
 
 __all__ = [
     "SCHEMA_VERSION", "SNAPSHOT_SUFFIX", "ProfileSnapshot",
-    "ProfileStore", "RetentionPolicy", "find_run_dirs", "load_profile",
+    "ProfileStore", "RetentionPolicy", "find_run_dirs", "host_label",
+    "load_profile", "ring_entries", "set_host_label",
     "split_snapshot_name", "tracer_folded",
     "MANIFEST_NAME", "RunManifest", "RunRegistry", "kv_pair", "parse_mesh",
     "register_run",
     "ShardTimeline", "TimelineDiff", "build_timelines", "pair_timelines",
     "render_timeline", "render_timeline_diff",
     "EdgeDelta", "ProfileDiff", "diff_profiles",
+    "PROTO_VERSION", "Disconnect", "FleetPublisher", "FrameError",
+    "frame_checksum", "parse_addr", "recv_frame", "send_frame",
+    "Collector", "collect_main",
 ]

@@ -11,6 +11,9 @@
     python -m repro.profile diagnose  ROOT [--run GLOB] [--baseline B]
                                       [--thresholds T] [--detector-config C]
                                       [--fail-on warn|crit]
+                                      [--fleet [--config GLOB]]
+    python -m repro.profile collect   --spool DIR [--bind H] [--port P]
+                                      [--max-seconds S]
 
 `report` reduces every given shard/dir into one profile and renders the
 paper's component/API views + flow matrix.  `merge` persists that reduction.
@@ -25,7 +28,13 @@ bands from baseline profiles (or ring intervals) into a thresholds JSON;
 `diagnose` runs the cross-flow detectors (repro.analysis) over a run and
 exits 1 when findings reach `--fail-on` severity; `--detector-config`
 loads per-detector constructor parameters from JSON so projects tune
-thresholds without code (unknown keys exit 2).
+thresholds without code (unknown keys exit 2); `diagnose --fleet`
+diagnoses every run matching `--config`/`--run`, adds cross-host
+fleet-straggler and cross-run outlier findings, and ranks the union.
+`collect` runs the fleet collector daemon: publishers (trainers/servers
+launched with `--xfa-collector HOST:PORT`) stream snapshot-ring deltas
+to it and it spools them under `SPOOL/<run_id>/<host>/` — a registry
+root the other subcommands read directly (see docs/fleet.md).
 
 Full reference with flag tables, worked examples and the exit-code
 contract (0 ok / 1 gated finding / 2 usage error): docs/cli.md —
@@ -255,11 +264,23 @@ def _cmd_calibrate(args: argparse.Namespace) -> int:
 
 
 def _cmd_diagnose(args: argparse.Namespace) -> int:
-    from ..analysis import diagnose
+    from ..analysis import diagnose, diagnose_fleet
     try:
-        diag = diagnose(args.root, run=args.run, baseline=args.baseline,
-                        thresholds_path=args.thresholds,
-                        detector_config=args.detector_config)
+        if args.fleet:
+            if args.baseline:
+                raise ValueError("--baseline does not apply to --fleet "
+                                 "(cross-run comparison is built in)")
+            diag = diagnose_fleet(args.root, config=args.config,
+                                  run=args.run,
+                                  thresholds_path=args.thresholds,
+                                  detector_config=args.detector_config)
+        else:
+            if args.config:
+                raise ValueError("--config selects runs for --fleet; use "
+                                 "--run to pick the single run to diagnose")
+            diag = diagnose(args.root, run=args.run, baseline=args.baseline,
+                            thresholds_path=args.thresholds,
+                            detector_config=args.detector_config)
     except (FileNotFoundError, LookupError, ValueError) as e:
         # bad inputs (missing run, ambiguous --run, corrupt/unsupported
         # --thresholds json, unknown --detector-config keys) are usage
@@ -274,6 +295,16 @@ def _cmd_diagnose(args: argparse.Namespace) -> int:
     else:
         print(diag.render(top=args.top))
     return 1 if diag.should_fail(args.fail_on) else 0
+
+
+def _cmd_collect(args: argparse.Namespace) -> int:
+    from .collector import collect_main
+    return collect_main(args.spool, host=args.bind, port=args.port,
+                        timeout=args.timeout,
+                        max_frame_bytes=args.max_frame_bytes,
+                        max_seconds=args.max_seconds,
+                        self_profile=not args.no_self_profile,
+                        self_profile_interval_s=args.self_profile_interval_s)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -380,11 +411,20 @@ def build_parser() -> argparse.ArgumentParser:
     cal.set_defaults(fn=_cmd_calibrate)
 
     dia = sub.add_parser("diagnose",
-                         help="run cross-flow detectors over one run")
+                         help="run cross-flow detectors over one run "
+                              "(or a whole fleet with --fleet)")
     dia.add_argument("root", help="a run dir, or a registry root "
                                   "(then select with --run)")
     dia.add_argument("--run", help="run-id/label/config glob under ROOT "
-                                   "(must match exactly one run)")
+                                   "(must match exactly one run; with "
+                                   "--fleet, selects every match)")
+    dia.add_argument("--fleet", action="store_true",
+                     help="diagnose EVERY matching run, add cross-host "
+                          "fleet-straggler and cross-run outlier findings, "
+                          "rank the union; JSON output groups findings by "
+                          "(severity, detector, host)")
+    dia.add_argument("--config", help="with --fleet: config-name glob "
+                                      "selecting which runs to include")
     dia.add_argument("--baseline", metavar="RUN",
                      help="baseline run dir or registry glob: enables the "
                           "cross-run drift-regression detector")
@@ -404,6 +444,33 @@ def build_parser() -> argparse.ArgumentParser:
                      help="max findings rendered in text mode")
     dia.add_argument("--json", action="store_true")
     dia.set_defaults(fn=_cmd_diagnose)
+
+    col = sub.add_parser("collect",
+                         help="run the fleet collector daemon (spool "
+                              "snapshot deltas shipped by publishers)")
+    col.add_argument("--spool", required=True,
+                     help="spool root: SPOOL/<run_id>/<host>/<shard>."
+                          "seq<N>.xfa.npz — a registry root that query/"
+                          "merge/diagnose understand directly")
+    col.add_argument("--bind", default="127.0.0.1",
+                     help="interface to listen on")
+    col.add_argument("--port", type=int, default=0,
+                     help="TCP port (0: ephemeral; the bound port is "
+                          "printed on startup)")
+    col.add_argument("--timeout", type=float, default=30.0,
+                     help="per-socket-operation timeout in seconds")
+    col.add_argument("--max-frame-bytes", type=int,
+                     default=256 * 1024 * 1024,
+                     help="reject frames with larger payloads")
+    col.add_argument("--max-seconds", type=float, default=0.0,
+                     help="exit after S seconds (0: serve until "
+                          "SIGINT/SIGTERM) — CI lanes use this")
+    col.add_argument("--no-self-profile", action="store_true",
+                     help="do not spool the collector's own ingest "
+                          "metrics into SPOOL/_collector")
+    col.add_argument("--self-profile-interval-s", type=float, default=30.0,
+                     help="seconds between self-metric snapshots")
+    col.set_defaults(fn=_cmd_collect)
     return ap
 
 

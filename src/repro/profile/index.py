@@ -23,7 +23,6 @@ from __future__ import annotations
 import fnmatch
 import json
 import os
-import socket
 import tempfile
 import time
 from contextlib import contextmanager
@@ -228,7 +227,8 @@ def register_run(run_dir: str, *,
         m.jax_version = m.jax_version or _jax_version()
         m.schema = SCHEMA_VERSION
         m.meta.update(meta or {})
-        writer = {"label": label, "host": socket.gethostname(),
+        from .store import host_label
+        writer = {"label": label, "host": host_label(),
                   "pid": os.getpid()}
         ident = (writer["label"], writer["host"], writer["pid"])
         if ident not in {(w.get("label"), w.get("host"), w.get("pid"))
@@ -249,10 +249,19 @@ class RunRegistry:
         return sorted(os.path.dirname(p) for p in hits)
 
     def runs(self) -> List[RunManifest]:
+        """Load every registered run from ONE snapshot of the directory
+        listing.  The registry is scanned while publishers/collectors
+        register concurrently (fleet spools grow mid-query), so a run
+        dir that appears after the listing is simply absent from this
+        scan, and one whose manifest vanishes or is mid-merge between
+        listing and load is skipped — never an exception out of query.
+        """
         out = []
         for d in self.run_dirs():
             try:
                 out.append(RunManifest.load(d))
+            except FileNotFoundError:
+                continue          # registered mid-scan and gone, or racing
             except (json.JSONDecodeError, ValueError, OSError) as e:
                 import warnings
                 warnings.warn(f"run registry: skipping unreadable manifest "

@@ -42,6 +42,29 @@ from .snapshot import SNAPSHOT_SUFFIX, ProfileSnapshot
 #: sequence-numbered ring entry: <stem>.<seq:06d>.xfa.npz
 _SEQ_RE = re.compile(r"^(?P<stem>.+)\.(?P<seq>\d{6})$")
 
+#: manifest filename (canonically index.MANIFEST_NAME; repeated here as a
+#: literal because index imports store — host_label — and a module cycle
+#: is worse than one duplicated constant)
+_MANIFEST_NAME = "manifest.json"
+
+#: process-wide host identity override (``--xfa-host-label``): shard
+#: stems, snapshot/writer metadata and the fleet transport all derive
+#: the host from here, so tests and containers with meaningless
+#: hostnames can give every publisher a distinct, stable identity.
+_HOST_LABEL: Optional[str] = None
+
+
+def set_host_label(label: Optional[str]) -> None:
+    """Override the host identity recorded by every profile writer in
+    this process (None restores `socket.gethostname()`)."""
+    global _HOST_LABEL
+    _HOST_LABEL = label or None
+
+
+def host_label() -> str:
+    """The host identity profile writers record (override or hostname)."""
+    return _HOST_LABEL or socket.gethostname()
+
 
 def split_snapshot_name(path: str) -> Tuple[str, int]:
     """(shard stem, sequence number) of a snapshot path; legacy un-numbered
@@ -57,6 +80,31 @@ def split_snapshot_name(path: str) -> Tuple[str, int]:
 
 def snapshot_name(stem: str, seq: int) -> str:
     return f"{stem}.{seq:06d}{SNAPSHOT_SUFFIX}"
+
+
+def ring_entries(root: str) -> List[Tuple[str, int, str]]:
+    """Every ring entry under a run dir as (qualified stem, seq, path).
+
+    A run dir is either flat (each writer's ring directly inside) or the
+    collector's spool layout with one subdirectory per HOST
+    (`<run>/<host>/<shard>.<seq>.xfa.npz`, docs/fleet.md).  Subdir
+    entries get host-qualified stems (`<host>/<shard>`) so two hosts'
+    same-named rings never alias in reduce/shard_graphs/timeline.  A
+    subdirectory carrying its own manifest is its OWN run dir (a nested
+    registry), not a host of this one, and is skipped.
+    """
+    out = []
+    for p in glob.glob(os.path.join(root, f"*{SNAPSHOT_SUFFIX}")):
+        stem, seq = split_snapshot_name(p)
+        out.append((stem, seq, p))
+    for p in glob.glob(os.path.join(root, "*", f"*{SNAPSHOT_SUFFIX}")):
+        sub = os.path.dirname(p)
+        if os.path.exists(os.path.join(sub, _MANIFEST_NAME)):
+            continue
+        stem, seq = split_snapshot_name(p)
+        out.append((f"{os.path.basename(sub)}/{stem}", seq, p))
+    out.sort()
+    return out
 
 
 def tracer_folded(tracer=None) -> FoldedTable:
@@ -95,13 +143,14 @@ class RetentionPolicy:
         if self.unbounded:
             return []
         now = time.time() if now is None else now
-        entries = []  # (stem, seq, path, size, mtime)
-        for p in glob.glob(os.path.join(root, f"*{SNAPSHOT_SUFFIX}")):
+        entries = []  # (stem, seq, path, size, mtime); stems are host-
+        # qualified in the collector's spool layout, so keep-last applies
+        # per (host, shard) ring, exactly as the publishers wrote them
+        for stem, seq, p in ring_entries(root):
             try:
                 st = os.stat(p)
             except FileNotFoundError:      # concurrent writer GC'd it
                 continue
-            stem, seq = split_snapshot_name(p)
             entries.append((stem, seq, p, st.st_size, st.st_mtime))
         newest = {}  # stem -> max seq
         for stem, seq, *_ in entries:
@@ -161,12 +210,11 @@ class ProfileStore:
 
     # -- writer side --------------------------------------------------------
     def shard_stem(self, label: str = "shard") -> str:
-        host = socket.gethostname().split(".")[0]
+        host = host_label().split(".")[0]
         return f"{label}-{host}-{os.getpid()}"
 
     def next_seq(self, stem: str) -> int:
-        seqs = [seq for s, seq in map(split_snapshot_name,
-                                      self.snapshot_paths()) if s == stem]
+        seqs = [seq for s, seq, _ in ring_entries(self.root) if s == stem]
         return max(seqs, default=0) + 1
 
     def write_shard(self, folded: FoldedTable, label: str = "shard",
@@ -180,7 +228,7 @@ class ProfileStore:
         seq = self.next_seq(stem)
         shard_meta: Dict[str, Any] = {
             "label": label,
-            "host": socket.gethostname(),
+            "host": host_label(),
             "pid": os.getpid(),
             "seq": seq,
             "written_at": time.time(),
@@ -193,15 +241,15 @@ class ProfileStore:
 
     # -- reader side ----------------------------------------------------------
     def snapshot_paths(self) -> List[str]:
-        """Every ring entry of every shard in this run dir."""
-        return sorted(glob.glob(os.path.join(self.root,
-                                             f"*{SNAPSHOT_SUFFIX}")))
+        """Every ring entry of every shard in this run dir (including the
+        per-host subdirectories of a collector spool run)."""
+        return sorted(p for _stem, _seq, p in ring_entries(self.root))
 
     def shards(self) -> Dict[str, List[Tuple[int, str]]]:
-        """stem -> [(seq, path), ...] ascending — each shard's time series."""
+        """stem -> [(seq, path), ...] ascending — each shard's time series.
+        Stems of spool-layout entries are host-qualified (`host/shard`)."""
         out: Dict[str, List[Tuple[int, str]]] = {}
-        for p in self.snapshot_paths():
-            stem, seq = split_snapshot_name(p)
+        for stem, seq, p in ring_entries(self.root):
             out.setdefault(stem, []).append((seq, p))
         for ring in out.values():
             ring.sort()
@@ -260,11 +308,20 @@ class ProfileStore:
 
 def find_run_dirs(root: str) -> List[str]:
     """Directories under `root` (inclusive) holding profile snapshots —
-    the unit `gc` applies a RetentionPolicy to."""
+    the unit `gc` applies a RetentionPolicy to.  A directory whose
+    PARENT carries a manifest is a per-host subdirectory of a collector
+    spool run (docs/fleet.md), not a run of its own: it collapses into
+    the parent so retention sees the whole run (host-qualified rings,
+    one byte budget) exactly as the reducer does."""
     dirs = set()
     for p in glob.glob(os.path.join(root, "**", f"*{SNAPSHOT_SUFFIX}"),
                        recursive=True):
-        dirs.add(os.path.dirname(p))
+        d = os.path.dirname(p)
+        parent = os.path.dirname(d)
+        if not os.path.exists(os.path.join(d, _MANIFEST_NAME)) and \
+                os.path.exists(os.path.join(parent, _MANIFEST_NAME)):
+            d = parent
+        dirs.add(d)
     return sorted(dirs)
 
 

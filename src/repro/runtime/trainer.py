@@ -185,6 +185,11 @@ class Trainer:
     profile_retention: Optional[Any] = None
     #: extra key=value metadata for the run manifest (experiment name, ...)
     profile_meta: Optional[Dict[str, Any]] = None
+    #: collector address 'HOST:PORT' — when set (and profile_dir is set),
+    #: every shard refresh also streams the ring's unacked entries to the
+    #: fleet collector (repro.profile.FleetPublisher).  Publish failures
+    #: degrade to local-only rings; they never interrupt the train loop.
+    xfa_collector: str = ""
 
     def __post_init__(self):
         if self.session is None:
@@ -195,10 +200,15 @@ class Trainer:
             # crosses the budget (core.sampler)
             xfa.TRACER.set_overhead_budget(self.tcfg.xfa_overhead_budget)
         self._profile_store = None
+        self._publisher = None
         if self.profile_dir:
             from repro.profile import ProfileStore
             self._profile_store = ProfileStore(
                 self.profile_dir, retention=self.profile_retention)
+            if self.xfa_collector:
+                from repro.profile import FleetPublisher
+                self._publisher = FleetPublisher(self.xfa_collector,
+                                                 self.profile_dir)
 
     def _register_run(self, n_steps: int) -> None:
         """Write/merge this rank into the run manifest (the registry index:
@@ -231,6 +241,11 @@ class Trainer:
                 meta={"step": step, "n_steps": self.session.n_steps,
                       "wall_ns": self.session.wall_ns,
                       "rank": jax.process_index()})
+        if self._publisher is not None:
+            # local ring first, then stream the delta; a dead collector
+            # costs one rate-limited connect attempt, nothing else
+            with xfa.scope("runtime", "profile_publish"):
+                self._publisher.publish()
 
     @xfa.api("runtime", "compile_step")
     def _compile(self, step_fn, state, batch, table):
@@ -289,4 +304,6 @@ class Trainer:
         self.session.finish_device(table)
         # final shard includes the device fold fetched above
         self._write_profile_shard(n_steps)
+        if self._publisher is not None:
+            self._publisher.close()
         return state, last_metrics

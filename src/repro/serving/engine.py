@@ -186,6 +186,7 @@ class ServingEngine:
         self._stop = False
         self._error: Optional[BaseException] = None   # terminal loop failure
         self._profile_store = None
+        self._publisher = None
         self._ticks = 0
         if scfg.profile_dir:
             from repro.profile import (ProfileStore, RetentionPolicy,
@@ -211,6 +212,10 @@ class ServingEngine:
                 meta={"max_batch": scfg.max_batch,
                       "max_seq_len": scfg.max_seq_len,
                       **dict(scfg.profile_meta)})
+            if scfg.xfa_collector:
+                from repro.profile import FleetPublisher
+                self._publisher = FleetPublisher(scfg.xfa_collector,
+                                                 scfg.profile_dir)
 
     # -- client API ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
@@ -301,6 +306,8 @@ class ServingEngine:
         with self._lock:
             if self._thread is t:
                 self._thread = None
+        if self._publisher is not None:
+            self._publisher.close()
         return True
 
     # -- engine internals ---------------------------------------------------
@@ -645,6 +652,11 @@ class ServingEngine:
         self._profile_store.write_shard(
             tracer_folded(), label=self.scfg.profile_label,
             meta={"ticks": self._ticks, "completed": len(self.completed)})
+        if self._publisher is not None:
+            # local ring first, then the delta stream; publish() never
+            # raises — a dead collector degrades to local-only profiling
+            with xfa.scope("serve", "profile_publish"):
+                self._publisher.publish()
 
     # -- synchronous driver -------------------------------------------------
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:

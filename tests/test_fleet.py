@@ -1,0 +1,595 @@
+"""Fleet profile plane: transport framing, publisher/collector spool,
+fault paths, host-qualified identity, and `diagnose --fleet`.
+
+The transport's whole contract is fault tolerance: deltas only, resume
+from the collector's ack state, rejects on checksum mismatch, and a
+spool that never holds a torn file.  These tests exercise each clause
+in-process (scripted sockets against a live threaded collector) and
+then end-to-end as three real OS processes (2 publishers + 1 collector
+-> merge -> diagnose --fleet flags the injected straggler host).
+"""
+
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.core.folding import fold_event_log
+from repro.profile import (Collector, FleetPublisher, ProfileStore,
+                           RetentionPolicy, RunRegistry, frame_checksum,
+                           parse_addr, recv_frame, register_run, send_frame,
+                           set_host_label)
+from repro.profile.transport import PROTO_VERSION, Disconnect, FrameError
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+EVENTS = [
+    ("app", "runtime", "step", 3_000_000),
+    ("app", "runtime", "step", 3_000_000),
+    ("app", "io", "load", 1_000_000),
+    ("moe", "pthread", "lock", 500_000),
+]
+
+
+@pytest.fixture(autouse=True)
+def _reset_host_label():
+    yield
+    set_host_label(None)
+
+
+def build_ring(run_dir, host, n=3, scale=1.0, label="trainer"):
+    """A registered run dir with an n-deep ring written as `host`."""
+    set_host_label(host)
+    register_run(str(run_dir), config="fleetcfg", kind="train", label=host)
+    store = ProfileStore(str(run_dir))
+    table = fold_event_log(EVENTS).scale_time(scale)
+    for _ in range(n):
+        store.write_shard(table, label=label)
+    set_host_label(None)
+    return store
+
+
+def spool_files(spool):
+    out = []
+    for root, _dirs, files in os.walk(str(spool)):
+        out.extend(os.path.join(root, f) for f in files)
+    return sorted(out)
+
+
+# -- wire framing ----------------------------------------------------------
+
+class TestFraming:
+    def test_roundtrip(self):
+        a, b = socket.socketpair()
+        try:
+            payload = b"x" * 1000
+            send_frame(a, {"type": "snapshot", "seq": 7}, payload)
+            header, got = recv_frame(b)
+            assert header["type"] == "snapshot"
+            assert header["seq"] == 7
+            assert header["length"] == len(payload)
+            assert header["sha256"] == frame_checksum(payload)
+            assert got == payload
+        finally:
+            a.close()
+            b.close()
+
+    def test_empty_payload_frame(self):
+        a, b = socket.socketpair()
+        try:
+            send_frame(a, {"type": "bye"})
+            header, got = recv_frame(b)
+            assert header == {"type": "bye", "length": 0}
+            assert got == b""
+        finally:
+            a.close()
+            b.close()
+
+    def test_eof_between_frames_is_disconnect(self):
+        a, b = socket.socketpair()
+        a.close()
+        try:
+            with pytest.raises(Disconnect):
+                recv_frame(b)
+        finally:
+            b.close()
+
+    def test_eof_mid_frame_is_disconnect(self):
+        a, b = socket.socketpair()
+        try:
+            raw = json.dumps({"type": "snapshot", "length": 100}).encode()
+            import struct
+            a.sendall(struct.pack("!I", len(raw)) + raw + b"only-20-bytes")
+            a.close()
+            with pytest.raises(Disconnect):
+                recv_frame(b)
+        finally:
+            b.close()
+
+    def test_oversized_payload_is_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            send_frame(a, {"type": "snapshot", "length": 1 << 30})
+            with pytest.raises(FrameError):
+                recv_frame(b, max_bytes=1 << 20)
+        finally:
+            a.close()
+            b.close()
+
+    def test_headerless_garbage_is_frame_error(self):
+        a, b = socket.socketpair()
+        try:
+            import struct
+            a.sendall(struct.pack("!I", 4) + b"not{")
+            with pytest.raises(FrameError):
+                recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_parse_addr(self):
+        assert parse_addr("127.0.0.1:9000") == ("127.0.0.1", 9000)
+        with pytest.raises(ValueError):
+            parse_addr("no-port")
+        with pytest.raises(ValueError):
+            parse_addr(":9000")
+
+
+# -- publisher <-> collector ----------------------------------------------
+
+class TestPublishSpool:
+    def test_round_trip_spool_bytes_identical(self, tmp_path):
+        store = build_ring(tmp_path / "runA", "hosta", n=3)
+        with Collector(str(tmp_path / "spool")) as col:
+            pub = FleetPublisher("127.0.0.1:%d" % col.port,
+                                 str(tmp_path / "runA"), run_id="runX",
+                                 host="hosta")
+            stats = pub.publish()
+            pub.close()
+        assert stats["shipped"] == 3 and stats["errors"] == 0
+        for stem, ring in store.shards().items():
+            for seq, path in ring:
+                spooled = os.path.join(str(tmp_path / "spool"), "runX",
+                                       "hosta", os.path.basename(path))
+                with open(path, "rb") as f_local, \
+                        open(spooled, "rb") as f_spool:
+                    assert f_local.read() == f_spool.read(), (stem, seq)
+        # the manifest was shipped too and the spool is a registered run
+        assert os.path.exists(
+            os.path.join(str(tmp_path / "spool"), "runX", "manifest.json"))
+
+    def test_second_publish_ships_nothing(self, tmp_path):
+        store = build_ring(tmp_path / "runA", "hosta", n=2)
+        with Collector(str(tmp_path / "spool")) as col:
+            pub = FleetPublisher("127.0.0.1:%d" % col.port,
+                                 str(tmp_path / "runA"), run_id="runX",
+                                 host="hosta")
+            assert pub.publish()["shipped"] == 2
+            assert pub.publish()["shipped"] == 0          # delta semantics
+            store.write_shard(fold_event_log(EVENTS), label="trainer")
+            s = pub.publish()
+            pub.close()
+        assert s["shipped"] == 1                          # only the new seq
+
+    def test_reconnect_resumes_from_ack_state(self, tmp_path):
+        store = build_ring(tmp_path / "runA", "hosta", n=2)
+        spool = str(tmp_path / "spool")
+        with Collector(spool) as col:
+            pub = FleetPublisher("127.0.0.1:%d" % col.port,
+                                 str(tmp_path / "runA"), run_id="runX",
+                                 host="hosta")
+            assert pub.publish()["shipped"] == 2
+            pub.close()
+        # collector restarted: a FRESH publisher (no client-side state)
+        # must learn the resume point from the spool-rebuilt ack state
+        store.write_shard(fold_event_log(EVENTS), label="trainer")
+        with Collector(spool) as col2:
+            pub2 = FleetPublisher("127.0.0.1:%d" % col2.port,
+                                  str(tmp_path / "runA"), run_id="runX",
+                                  host="hosta")
+            s = pub2.publish()
+            pub2.close()
+        assert s["shipped"] == 1, s      # unacked suffix only, no re-ship
+        names = [os.path.basename(p) for p in
+                 spool_files(os.path.join(spool, "runX"))]
+        assert len([n for n in names if n.endswith(".xfa.npz")]) == 3
+
+    def test_dead_collector_degrades_not_raises(self, tmp_path):
+        build_ring(tmp_path / "runA", "hosta", n=2)
+        col = Collector(str(tmp_path / "spool"))
+        port = col.port
+        col.start()
+        col.shutdown()                       # nobody listening anymore
+        pub = FleetPublisher("127.0.0.1:%d" % port, str(tmp_path / "runA"),
+                             run_id="runX", host="hosta", timeout=1.0,
+                             retry_interval_s=0.0)
+        stats = pub.publish()                # must NOT raise
+        assert stats["errors"] == 1
+        assert stats["pending"] == 2
+        assert pub.last_error
+
+    def test_checksum_mismatch_rejected_and_spool_untorn(self, tmp_path):
+        spool = str(tmp_path / "spool")
+        with Collector(spool) as col:
+            sock = socket.create_connection(("127.0.0.1", col.port),
+                                            timeout=5.0)
+            sock.settimeout(5.0)
+            send_frame(sock, {"type": "hello", "proto": PROTO_VERSION,
+                              "run_id": "runX", "host": "hosta"})
+            header, _ = recv_frame(sock)
+            assert header["type"] == "ack_state"
+            payload = b"corrupted-on-the-wire"
+            send_frame(sock, {"type": "snapshot", "run_id": "runX",
+                              "host": "hosta", "shard": "rank0", "seq": 1,
+                              "length": len(payload),
+                              "sha256": "0" * 64}, payload)
+            reply, _ = recv_frame(sock)
+            assert reply["type"] == "reject"
+            # nothing spooled, not even a tmp file
+            assert spool_files(os.path.join(spool, "runX")) == []
+            # the re-sent (correct) frame is acked and lands atomically
+            send_frame(sock, {"type": "snapshot", "run_id": "runX",
+                              "host": "hosta", "shard": "rank0", "seq": 1},
+                       payload)
+            reply, _ = recv_frame(sock)
+            assert reply["type"] == "ack" and not reply["dedup"]
+            send_frame(sock, {"type": "bye"})
+            sock.close()
+        files = spool_files(os.path.join(spool, "runX"))
+        assert [os.path.basename(p) for p in files] == \
+            ["rank0.000001.xfa.npz"]
+        with open(files[0], "rb") as f:
+            assert f.read() == payload
+
+    def test_publisher_resends_once_after_reject(self, tmp_path):
+        build_ring(tmp_path / "runA", "hosta", n=1)
+        a, b = socket.socketpair()
+        a.settimeout(5.0)
+        b.settimeout(5.0)
+        seen = []
+
+        def fake_collector():
+            h1, p1 = recv_frame(b)
+            seen.append((h1, p1))
+            send_frame(b, {"type": "reject", "shard": h1["shard"],
+                           "seq": h1["seq"], "reason": "checksum"})
+            h2, p2 = recv_frame(b)
+            seen.append((h2, p2))
+            send_frame(b, {"type": "ack", "shard": h2["shard"],
+                           "seq": h2["seq"], "dedup": False})
+
+        t = threading.Thread(target=fake_collector)
+        t.start()
+        pub = FleetPublisher("127.0.0.1:1", str(tmp_path / "runA"),
+                             run_id="runX", host="hosta")
+        try:
+            ok = pub._ship_one(a, {"type": "snapshot", "run_id": "runX",
+                                   "host": "hosta", "shard": "rank0",
+                                   "seq": 1}, b"payload", "rank0 seq 1")
+        finally:
+            t.join(timeout=5.0)
+            a.close()
+            b.close()
+        assert ok
+        assert len(seen) == 2                     # exactly one re-send
+        assert seen[0][1] == seen[1][1] == b"payload"
+
+    def test_mid_frame_disconnect_leaves_collector_healthy(self, tmp_path):
+        spool = str(tmp_path / "spool")
+        with Collector(spool) as col:
+            sock = socket.create_connection(("127.0.0.1", col.port),
+                                            timeout=5.0)
+            send_frame(sock, {"type": "hello", "proto": PROTO_VERSION,
+                              "run_id": "runX", "host": "hosta"})
+            recv_frame(sock)
+            # half a snapshot frame, then vanish
+            import struct
+            raw = json.dumps({"type": "snapshot", "run_id": "runX",
+                              "host": "hosta", "shard": "rank0", "seq": 1,
+                              "length": 10_000,
+                              "sha256": "0" * 64}).encode()
+            sock.sendall(struct.pack("!I", len(raw)) + raw + b"torn")
+            sock.close()
+            time.sleep(0.2)
+            # no torn file, and the collector still serves new sessions
+            assert spool_files(os.path.join(spool, "runX")) == []
+            build_ring(tmp_path / "runA", "hosta", n=1)
+            pub = FleetPublisher("127.0.0.1:%d" % col.port,
+                                 str(tmp_path / "runA"), run_id="runX",
+                                 host="hosta")
+            assert pub.publish()["shipped"] == 1
+            pub.close()
+
+    def test_path_escaping_identity_is_rejected(self, tmp_path):
+        with Collector(str(tmp_path / "spool")) as col:
+            sock = socket.create_connection(("127.0.0.1", col.port),
+                                            timeout=5.0)
+            sock.settimeout(5.0)
+            send_frame(sock, {"type": "hello", "proto": PROTO_VERSION,
+                              "run_id": "..", "host": "hosta"})
+            reply, _ = recv_frame(sock)
+            assert reply["type"] == "error"
+            sock.close()
+        assert spool_files(str(tmp_path / "spool")) == []
+
+
+# -- host-qualified identity ----------------------------------------------
+
+class TestHostIdentity:
+    def test_same_shard_name_from_two_hosts_never_aliases(self, tmp_path):
+        spool = str(tmp_path / "spool")
+        blob_a = b"host-a-bytes"
+        blob_b = b"host-b-bytes-different"
+        with Collector(spool) as col:
+            for host, blob in (("hosta", blob_a), ("hostb", blob_b)):
+                sock = socket.create_connection(("127.0.0.1", col.port),
+                                                timeout=5.0)
+                sock.settimeout(5.0)
+                send_frame(sock, {"type": "hello", "proto": PROTO_VERSION,
+                                  "run_id": "runX", "host": host})
+                recv_frame(sock)
+                send_frame(sock, {"type": "snapshot", "run_id": "runX",
+                                  "host": host, "shard": "rank0", "seq": 1},
+                           blob)
+                reply, _ = recv_frame(sock)
+                assert reply["type"] == "ack"
+                sock.close()
+        run_dir = os.path.join(spool, "runX")
+        stems = sorted(ProfileStore(run_dir).shards())
+        assert stems == ["hosta/rank0", "hostb/rank0"]
+
+    def test_writers_record_host_label(self, tmp_path):
+        build_ring(tmp_path / "runA", "hostq", n=1)
+        from repro.profile import RunManifest
+        m = RunManifest.load(str(tmp_path / "runA"))
+        assert [w["host"] for w in m.writers] == ["hostq"]
+        stems = list(ProfileStore(str(tmp_path / "runA")).shards())
+        assert len(stems) == 1 and "-hostq-" in stems[0]
+
+    def test_stem_host_parsing(self):
+        from repro.analysis import stem_host
+        assert stem_host("hosta/trainer-x") == "hosta"
+        assert stem_host("trainer-hostb-123") == "hostb"
+        assert stem_host("plain", {"host": "hc"}) == "hc"
+        assert stem_host("plain") == "-"
+
+    def test_host_graphs_merge_per_host(self, tmp_path):
+        build_ring(tmp_path / "runA", "hosta", n=1, label="r0")
+        build_ring(tmp_path / "runA", "hosta", n=1, label="r1")
+        build_ring(tmp_path / "runA", "hostb", n=1, scale=2.0, label="r0")
+        from repro.analysis import host_graphs
+        hg = host_graphs(str(tmp_path / "runA"))
+        assert sorted(hg) == ["hosta", "hostb"]
+        one = fold_event_log(EVENTS).total_ns()
+        assert hg["hosta"].total_ns() == 2 * one      # two ranks merged
+        assert hg["hostb"].total_ns() == 2 * one      # one rank, scaled 2x
+
+
+# -- registry concurrency + gc on the spool --------------------------------
+
+class TestRegistryAndGC:
+    def test_query_tolerates_run_vanishing_mid_scan(self, tmp_path,
+                                                    monkeypatch):
+        register_run(str(tmp_path / "a"), config="cfg")
+        ghost = str(tmp_path / "ghost")      # listed, but manifest gone
+        monkeypatch.setattr(
+            RunRegistry, "run_dirs",
+            lambda self: [str(tmp_path / "a"), ghost])
+        runs = RunRegistry(str(tmp_path)).runs()      # must not raise
+        assert [m.run_id for m in runs] == ["a"]
+
+    def test_query_skips_corrupt_manifest_with_warning(self, tmp_path):
+        register_run(str(tmp_path / "a"), config="cfg")
+        os.makedirs(str(tmp_path / "b"))
+        with open(str(tmp_path / "b" / "manifest.json"), "w") as f:
+            f.write("{torn")
+        with pytest.warns(UserWarning, match="unreadable manifest"):
+            runs = RunRegistry(str(tmp_path)).runs()
+        assert [m.run_id for m in runs] == ["a"]
+
+    def test_gc_honors_spool_layout(self, tmp_path):
+        spool = str(tmp_path / "spool")
+        with Collector(spool) as col:
+            for host in ("hosta", "hostb"):
+                run = tmp_path / ("local_" + host)
+                build_ring(run, host, n=3)
+                pub = FleetPublisher("127.0.0.1:%d" % col.port, str(run),
+                                     run_id="runX", host=host)
+                assert pub.publish()["shipped"] == 3
+                pub.close()
+        run_dir = os.path.join(spool, "runX")
+        doomed = RetentionPolicy(keep_last=1).doomed(run_dir)
+        # per host-qualified ring: 2 of 3 doomed, newest survives
+        assert len(doomed) == 4
+        by_stem = ProfileStore(run_dir).shards()
+        for stem, ring in by_stem.items():
+            newest = ring[-1][1]
+            assert newest not in doomed, stem
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.profile", "gc", spool,
+             "--keep-last", "1"],
+            capture_output=True, text=True, timeout=120, env=env)
+        assert p.returncode == 0, p.stderr
+        left = ProfileStore(run_dir).shards()
+        assert sorted(left) == sorted(by_stem)
+        assert all(len(ring) == 1 for ring in left.values())
+
+
+# -- fleet diagnosis -------------------------------------------------------
+
+class TestFleetDiagnosis:
+    @pytest.fixture()
+    def fleet_spool(self, tmp_path):
+        """One spooled run, two hosts, hostb injected as a 3x straggler."""
+        spool = str(tmp_path / "spool")
+        with Collector(spool) as col:
+            for host, scale in (("hosta", 1.0), ("hostb", 3.0)):
+                run = tmp_path / ("local_" + host)
+                build_ring(run, host, n=2, scale=scale)
+                pub = FleetPublisher("127.0.0.1:%d" % col.port, str(run),
+                                     run_id="runX", host=host)
+                assert pub.publish()["errors"] == 0
+                pub.close()
+        return spool
+
+    def test_straggler_host_is_top_finding(self, fleet_spool):
+        from repro.analysis import diagnose_fleet
+        fd = diagnose_fleet(fleet_spool)
+        ranked = fd.ranked()
+        assert ranked, "expected findings"
+        run_id, top = ranked[0]
+        assert run_id == "runX"
+        assert top.detector == "fleet-straggler"
+        assert top.severity == "crit"            # 3x vs mean 2x -> rel 0.5
+        assert top.subject == "host:hostb"
+        assert top.evidence["widest_component"] == "runtime"
+
+    def test_json_groups_by_severity_detector_host(self, fleet_spool):
+        from repro.analysis import diagnose_fleet
+        doc = diagnose_fleet(fleet_spool).to_json()
+        assert doc["runs"][0]["hosts"] == ["hosta", "hostb"]
+        groups = doc["groups"]
+        assert groups[0]["severity"] == "crit"
+        assert groups[0]["detector"] == "fleet-straggler"
+        assert groups[0]["host"] == "hostb"
+        keys = [(g["severity"], g["detector"], g["host"]) for g in groups]
+        assert len(set(keys)) == len(keys)        # one group per triple
+        sev_rank = {"crit": 2, "warn": 1, "info": 0}
+        assert keys == sorted(
+            keys, key=lambda k: (-sev_rank[k[0]], k[1], k[2]))
+
+    def test_single_run_dir_degrades_to_one_run_fleet(self, fleet_spool):
+        from repro.analysis import diagnose_fleet
+        fd = diagnose_fleet(os.path.join(fleet_spool, "runX"))
+        assert len(fd.runs) == 1
+        assert any(f.detector == "fleet-straggler"
+                   for _r, f in fd.ranked())
+
+    def test_config_filter_selects_runs(self, fleet_spool):
+        from repro.analysis import diagnose_fleet
+        fd = diagnose_fleet(fleet_spool, config="fleetcfg")
+        assert len(fd.runs) == 1
+        with pytest.raises(LookupError):
+            diagnose_fleet(fleet_spool, config="no-such-config")
+
+    def test_cli_flag_validation(self, tmp_path):
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.profile", "diagnose",
+             str(tmp_path), "--config", "x"],
+            capture_output=True, text=True, timeout=120, env=env)
+        assert p.returncode == 2
+        assert "--fleet" in p.stderr
+
+
+# -- three-process localhost e2e -------------------------------------------
+
+PUBLISHER_SCRIPT = """
+import sys
+from repro.core.folding import fold_event_log
+from repro.profile import (FleetPublisher, ProfileStore, register_run,
+                           set_host_label)
+
+addr, run_dir, host, scale = sys.argv[1:5]
+set_host_label(host)
+register_run(run_dir, config="fleetcfg", kind="train", label=host)
+store = ProfileStore(run_dir)
+EVENTS = [("app", "runtime", "step", 3_000_000)] * 2 + \\
+         [("app", "io", "load", 1_000_000)]
+table = fold_event_log(EVENTS).scale_time(float(scale))
+
+pub = FleetPublisher(addr, run_dir, run_id="fleetrun", host=host)
+for _ in range(2):
+    store.write_shard(table, label="trainer")
+    stats = pub.publish()
+    assert stats["errors"] == 0, stats
+pub.close()
+
+# reconnect: a fresh publisher resumes from the collector's acked seqs
+store.write_shard(table, label="trainer")
+pub2 = FleetPublisher(addr, run_dir, run_id="fleetrun", host=host)
+stats = pub2.publish()
+assert stats["shipped"] == 1, ("resume re-shipped acked entries", stats)
+pub2.close()
+print("PUBLISHED", host, stats["shipped"])
+"""
+
+
+@pytest.mark.slow
+class TestThreeProcessE2E:
+    def test_two_publishers_one_collector(self, tmp_path):
+        env = dict(os.environ,
+                   PYTHONPATH=SRC + os.pathsep
+                   + os.environ.get("PYTHONPATH", ""))
+        spool = str(tmp_path / "spool")
+        col = subprocess.Popen(
+            [sys.executable, "-m", "repro.profile", "collect",
+             "--spool", spool, "--port", "0", "--max-seconds", "300",
+             "--self-profile-interval-s", "120"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env)
+        try:
+            line = col.stdout.readline()
+            assert "collector listening on" in line, line
+            addr = line.split()[3]            # HOST:PORT
+            pubs = []
+            for host, scale in (("hosta", "1.0"), ("hostb", "3.0")):
+                run_dir = str(tmp_path / ("local_" + host))
+                pubs.append((host, run_dir, subprocess.Popen(
+                    [sys.executable, "-c", PUBLISHER_SCRIPT, addr,
+                     run_dir, host, scale],
+                    stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                    text=True, env=env)))
+            for host, _run_dir, p in pubs:
+                out, err = p.communicate(timeout=180)
+                assert p.returncode == 0, (host, out, err)
+                assert f"PUBLISHED {host} 1" in out
+
+            # spool snapshots byte-identical to each publisher's ring
+            run_dir_spool = os.path.join(spool, "fleetrun")
+            for host, run_dir, _p in pubs:
+                for _stem, ring in ProfileStore(run_dir).shards().items():
+                    for _seq, path in ring:
+                        spooled = os.path.join(run_dir_spool, host,
+                                               os.path.basename(path))
+                        with open(path, "rb") as fl, \
+                                open(spooled, "rb") as fs:
+                            assert fl.read() == fs.read(), spooled
+
+            # the spool is a run the rest of the CLI understands: merge
+            merged = str(tmp_path / "merged.xfa.npz")
+            p = subprocess.run(
+                [sys.executable, "-m", "repro.profile", "merge",
+                 run_dir_spool, "-o", merged],
+                capture_output=True, text=True, timeout=120, env=env)
+            assert p.returncode == 0, p.stderr
+            assert os.path.exists(merged)
+
+            # ... and diagnose --fleet flags the injected straggler host
+            p = subprocess.run(
+                [sys.executable, "-m", "repro.profile", "diagnose", spool,
+                 "--fleet", "--config", "fleetcfg", "--json"],
+                capture_output=True, text=True, timeout=120, env=env)
+            assert p.returncode == 0, p.stderr
+            doc = json.loads(p.stdout)
+            top = doc["groups"][0]
+            assert top["severity"] == "crit"
+            assert top["detector"] == "fleet-straggler"
+            assert top["host"] == "hostb"
+        finally:
+            if col.poll() is None:
+                col.send_signal(signal.SIGTERM)
+            out, err = col.communicate(timeout=60)
+        assert col.returncode == 0, (out, err)
+        assert "collector stopped" in out
