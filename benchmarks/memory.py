@@ -3,10 +3,24 @@
 Scaler: 15.5% memory overhead because Relation-Aware Data Folding never
 appends. We fold a synthetic stream and compare the shadow-table bytes with
 what an append-style event log (ltrace/perf model) would need, at several
-stream lengths — the fold's slope over events must be ZERO."""
+stream lengths — the fold's slope over events must be ZERO.
+
+Serving arm (--serving): the same economy argument for the KV-cache.
+The contiguous pool charges every admitted request a full
+[max_seq_len]-row cache; the paged pool charges the pages it actually
+touches.  At EQUAL arena bytes (max_batch x max_seq_len rows vs
+max_cache_pages x page_size rows) a mixed 32/2048-token workload is
+driven through both engines and the peak number of CONCURRENTLY
+admitted requests is compared — the paged pool must admit at least
+--assert-admission-ratio (CI: 4.0) times more, and resident cache bytes
+per admitted request are reported for both.  --profile-dir additionally
+writes the paged run's XFA shard so CI can assert the
+serve.cache_pages_in_use gauge round-trips through
+`repro.profile query --kind serve`."""
 
 from __future__ import annotations
 
+import argparse
 import sys
 
 from repro.core import Tracer
@@ -45,6 +59,102 @@ def run():
     return rows
 
 
+def _cache_bytes(tree) -> int:
+    import jax
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def run_serving(profile_dir: str = "") -> list:
+    """Contiguous vs paged pool at equal arena bytes, mixed-length load."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.configs.base import ServeConfig
+    from repro.models import build_model
+    from repro.serving import ServingEngine
+
+    MAX_SEQ = 2048
+    PAGE = 64
+    CONTIG_SLOTS = 4                       # 4 x 2048 rows
+    PAGES = CONTIG_SLOTS * MAX_SEQ // PAGE  # same rows as the contiguous pool
+    MAX_NEW = 8
+
+    cfg = dataclasses.replace(get_smoke("tinyllama_1_1b"), n_layers=2,
+                              vocab=256)
+    model = build_model(cfg, impl="ref")
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    # mixed workload: many short requests + a few full-context ones — the
+    # shape where per-slot worst-case reservation hurts most
+    prompts = [rng.integers(3, 250, size=32).astype(np.int32)
+               for _ in range(24)]
+    prompts += [rng.integers(3, 250, size=2000).astype(np.int32)
+                for _ in range(2)]
+
+    def drive(paged: bool):
+        scfg = ServeConfig(
+            max_batch=32 if paged else CONTIG_SLOTS, max_seq_len=MAX_SEQ,
+            prefill_chunk=512, eos_token=-1,   # no early EOS: peak is exact
+            page_size=PAGE, max_cache_pages=PAGES if paged else 0,
+            profile_dir=profile_dir if paged else "",
+            profile_interval_ticks=1)
+        eng = ServingEngine(model, params, scfg)
+        assert eng.paged == paged
+        for p in prompts:
+            eng.submit(p, max_new_tokens=MAX_NEW)
+        peak = 0
+        for _ in range(10_000):
+            n = eng.step()
+            peak = max(peak, n)
+            if n == 0 and not eng.scheduler.has_waiting():
+                break
+        if paged and profile_dir:
+            eng.write_profile_shard()
+        return peak, _cache_bytes(eng.cache)
+
+    contig_peak, contig_bytes = drive(False)
+    paged_peak, paged_bytes = drive(True)
+    assert contig_bytes == paged_bytes, "arms must compare equal arenas"
+    rows = [
+        ("memory.serve_arena_bytes", float(contig_bytes),
+         f"{CONTIG_SLOTS}x{MAX_SEQ} rows == {PAGES}x{PAGE} rows"),
+        ("memory.serve_contig_peak_admitted", float(contig_peak),
+         "slot-gated admission"),
+        ("memory.serve_paged_peak_admitted", float(paged_peak),
+         "page-gated admission"),
+        ("memory.serve_contig_bytes_per_request",
+         contig_bytes / max(contig_peak, 1), "resident cache per admitted"),
+        ("memory.serve_paged_bytes_per_request",
+         paged_bytes / max(paged_peak, 1), "resident cache per admitted"),
+        ("memory.serve_admission_ratio", paged_peak / max(contig_peak, 1),
+         "paged vs contiguous concurrent admissions at equal arena bytes"),
+    ]
+    return rows
+
+
 if __name__ == "__main__":
-    for name, val, note in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serving", action="store_true",
+                    help="run the serving-cache arm instead of the fold arm")
+    ap.add_argument("--assert-admission-ratio", type=float, default=0.0,
+                    help="fail unless paged/contiguous peak concurrent "
+                         "admissions >= this (CI gate: 4.0)")
+    ap.add_argument("--profile-dir", default="",
+                    help="write the paged serving run's XFA profile shard "
+                         "here (for the cache_pages_in_use round-trip "
+                         "assert)")
+    args = ap.parse_args()
+    rows = run_serving(args.profile_dir) if args.serving else run()
+    for name, val, note in rows:
         print(f"{name},{val:.1f},{note}")
+    if args.assert_admission_ratio:
+        ratio = dict((n, v) for n, v, _ in rows)["memory.serve_admission_ratio"]
+        if ratio < args.assert_admission_ratio:
+            print(f"FAIL: admission ratio {ratio:.2f} < "
+                  f"{args.assert_admission_ratio}", file=sys.stderr)
+            sys.exit(1)
+        print(f"admission ratio {ratio:.2f} >= "
+              f"{args.assert_admission_ratio} (gate passed)")

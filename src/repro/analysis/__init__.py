@@ -8,7 +8,7 @@ orchestration behind `python -m repro.profile diagnose`.
 
   graph.py      FlowGraph (typed nodes/edges from EdgeColumns) + per-shard
                 projections (one comparable subgraph per rank/replica)
-  detectors.py  Detector protocol, Finding, and the 7 built-in detectors
+  detectors.py  Detector protocol, Finding, and the 9 built-in detectors
   calibrate.py  per-edge noise bands (mean/std/p95) from baseline runs or
                 a ring, serialized as a thresholds JSON
   diagnose.py   run selection -> DiagnosisContext -> findings -> report
@@ -21,9 +21,9 @@ from .graph import (FlowEdge, FlowGraph, FlowNode, edge_label, run_graph,
                     shard_graphs)
 from .calibrate import (CALIBRATE_FIELDS, EdgeBand, Thresholds,
                         calibrate_ring, calibrate_runs)
-from .detectors import (SEVERITIES, CallAmplification, Detector,
-                        DiagnosisContext, DriftRegression, Finding,
-                        HotEdgeConcentration, QueueSaturation,
+from .detectors import (SEVERITIES, CachePressure, CallAmplification,
+                        Detector, DiagnosisContext, DriftRegression,
+                        Finding, HotEdgeConcentration, QueueSaturation,
                         RankImbalance, SamplingBackoff, SloViolation,
                         WaitDominance, builtin_detectors, detector_classes,
                         run_detectors, severity_rank)
@@ -37,7 +37,8 @@ __all__ = [
     "shard_graphs",
     "CALIBRATE_FIELDS", "EdgeBand", "Thresholds", "calibrate_ring",
     "calibrate_runs",
-    "SEVERITIES", "CallAmplification", "Detector", "DiagnosisContext",
+    "SEVERITIES", "CachePressure", "CallAmplification", "Detector",
+    "DiagnosisContext",
     "DriftRegression", "Finding", "HotEdgeConcentration", "QueueSaturation",
     "RankImbalance", "SamplingBackoff", "SloViolation", "WaitDominance",
     "builtin_detectors", "detector_classes", "run_detectors",

@@ -19,6 +19,11 @@ Built-ins:
   rank-imbalance       straggler rank/replica across a run's shards
   queue-saturation     serve queue_wait per-interval mean grows along the
                        ring (admission can't keep up with arrivals)
+  cache-pressure       the paged KV-cache pool is the bottleneck: the
+                       cache_pages_in_use gauge approaches capacity while
+                       queue depth grows — PAGES, not slots, are the
+                       saturation resource (add pages or shrink max_new,
+                       not max_batch)
   drift-regression     per-interval delta-of-deltas vs a baseline run
                        trends up (cost grows run-over-run AND over time)
   call-amplification   count blowup along a caller -> B -> callee chain
@@ -271,6 +276,83 @@ class QueueSaturation:
 
 
 @dataclass
+class CachePressure:
+    """Paged serving cache near exhaustion while the queue backs up.
+
+    Reads the engine's paged-pool gauges (per-interval means along the
+    snapshot ring): `cache_pages_in_use` against `cache_pages_capacity`
+    — the usable arena the allocator reports — corroborated by a growing
+    `queue_depth`.  Fires only when BOTH hold: high page utilization
+    with a draining queue is a healthy full pipe, and a growing queue
+    with free pages is some other bottleneck (see queue-saturation).
+    The point of the finding is the RESOURCE: admission stalls on pages,
+    so the fix is more pages / smaller max_new_tokens, not more slots."""
+
+    name: str = "cache-pressure"
+    in_use_api: str = "cache_pages_in_use"
+    capacity_api: str = "cache_pages_capacity"
+    depth_api: str = "queue_depth"
+    warn_util: float = 0.80
+    crit_util: float = 0.95
+    min_intervals: int = 3
+    tolerance: float = 0.1     # queue dips smaller than this still "grow"
+
+    def detect(self, ctx: DiagnosisContext) -> List[Finding]:
+        out = []
+        for tl in ctx.timelines:
+            # a trimmed ring's first "delta" is a cumulative fold, not an
+            # interval (cf. calibrate_ring)
+            start = 0 if (tl.seqs and tl.seqs[0] == 1) else 1
+            for key in tl.edges():
+                if key[2] != self.in_use_api:
+                    continue
+                used = [m for m in tl.deltas(key, "mean_ns")[start:]
+                        if m >= 0]
+                if len(used) < self.min_intervals:
+                    continue
+                # capacity/queue gauges fold from the engine loop like
+                # in_use but under their own api; match on component
+                capacity = depth = None
+                for okey in tl.edges():
+                    if okey[1] != key[1]:
+                        continue
+                    if okey[2] == self.capacity_api:
+                        caps = [m for m in tl.deltas(okey, "mean_ns")[start:]
+                                if m > 0]
+                        capacity = caps[-1] if caps else None
+                    elif okey[2] == self.depth_api:
+                        depth = tl.deltas(okey, "mean_ns")[start:]
+                if not capacity:
+                    continue
+                util = used[-1] / capacity
+                if util < self.warn_util:
+                    continue
+                growing = (depth is not None
+                           and len(depth) >= self.min_intervals
+                           and all(b >= a * (1.0 - self.tolerance)
+                                   for a, b in zip(depth, depth[1:]))
+                           and depth[-1] > depth[0])
+                if not growing:
+                    continue
+                out.append(Finding(
+                    self.name,
+                    "crit" if util >= self.crit_util else "warn",
+                    f"edge:{edge_label(key)}",
+                    f"KV-cache pages are the saturation resource on ring "
+                    f"'{tl.stem}': {_pct(util)} of {capacity:.0f} usable "
+                    f"pages in use while queue depth grew "
+                    f"{depth[0]:.1f} -> {depth[-1]:.1f} — admission is "
+                    f"gated by free pages, not slots (grow "
+                    f"max_cache_pages or cut max_new_tokens; adding "
+                    f"max_batch slots will not help)",
+                    evidence={"util": util, "capacity_pages": capacity,
+                              "in_use_means": used,
+                              "queue_depth_means": list(depth),
+                              "shard": tl.stem}))
+        return out
+
+
+@dataclass
 class DriftRegression:
     """Cross-run drift: per-interval cost grows vs baseline, and keeps
     growing over the run (delta-of-deltas trending up)."""
@@ -463,8 +545,8 @@ class SamplingBackoff:
 def detector_classes() -> Dict[str, type]:
     """Shipped detector classes keyed by their canonical name."""
     classes = (WaitDominance, HotEdgeConcentration, RankImbalance,
-               QueueSaturation, DriftRegression, CallAmplification,
-               SloViolation, SamplingBackoff)
+               QueueSaturation, CachePressure, DriftRegression,
+               CallAmplification, SloViolation, SamplingBackoff)
     return {cls().name: cls for cls in classes}
 
 

@@ -323,6 +323,22 @@ class ServeConfig:
     #: set (pad rows masked via `valid`), so the compiled prefill
     #: program set stays O(log prefill_batch x log max_seq_len).
     prefill_batch: int = 8
+    # -- paged KV-cache pool -------------------------------------------------
+    #: rows per KV-cache page.  With max_cache_pages > 0 the engine swaps
+    #: the contiguous [max_batch, max_seq_len] cache for a fixed arena of
+    #: pages plus a per-slot block table: pages are granted lazily as a
+    #: slot's pos crosses page boundaries and recycled at finish, so a
+    #: 30-token request stops paying for a full-context row
+    page_size: int = 64
+    #: total pages in the arena (0 = paged cache off, contiguous pool).
+    #: Page 0 is reserved as a scratch page (bucket-pad rows and
+    #: past-frontier pad writes land there, masked on read), so the
+    #: usable pool is max_cache_pages - 1 pages.  Admission is gated by
+    #: free pages — the resource that actually runs out — with FCFS
+    #: back-pressure into the waiting queue.  Families whose cache is
+    #: O(1) in sequence length (hybrid/ssm/audio) ignore this and keep
+    #: their dense layout behind the same engine API.
+    max_cache_pages: int = 0
     eos_token: int = 2
     #: default per-request e2e deadline in ms (0 = deadlines untracked);
     #: submit(deadline_ms=...) overrides per request.  Tracked requests

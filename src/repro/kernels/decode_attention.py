@@ -209,6 +209,228 @@ def _chunk_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
         o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
 
 
+def _decode_paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *,
+                         sm_scale: float, page_size: int, num_pages: int):
+    """Paged flash-decode body: identical online softmax to _decode_kernel,
+    but the KV grid dimension walks BLOCK-TABLE SLOTS — the BlockSpec
+    index map already dereferenced bt_ref[b, ik] (scalar prefetch), so
+    k_ref/v_ref hold page `block_table[b, ik]` of the arena.  Ungranted
+    slots point at the reserved scratch page 0; the kv_len column mask
+    gives those columns exactly-zero softmax mass."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kv_len = len_ref[b]
+
+    @pl.when(ik * page_size < kv_len)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [PS, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [PS, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        cols = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_pages - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, *, block_table: jax.Array,
+                           kv_len: jax.Array,
+                           sm_scale: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D]; k_pages, v_pages: [P, Hkv, page_size, D] arena;
+    block_table: [B, NB] int32 page ids; kv_len: [B] -> [B, Hq, D].
+
+    The block table and per-row lengths ride as SCALAR-PREFETCH operands
+    (pltpu.PrefetchScalarGridSpec): they are resident before the body
+    runs, so the k/v BlockSpec index maps dereference bt_ref[b, ik] to
+    DMA exactly the page each (row, kv-slot) grid point needs — the
+    kernel streams a slot's own pages and nothing else, and a row at
+    depth 100 never touches a neighbour's 32k-deep allocation.  The
+    per-row early exit additionally skips whole slots past kv_len (the
+    scratch-page fetch for those slots is dead DMA, never compute)."""
+    B, Hq, D = q.shape
+    P, Hkv, ps, _ = k_pages.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    NB = block_table.shape[1]
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, g, D)
+    kernel = functools.partial(
+        _decode_paged_kernel, sm_scale=scale, page_size=ps, num_pages=NB)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, D),
+                         lambda b, h, ik, len_ref, bt_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, ik, len_ref, bt_ref:
+                         (bt_ref[b, ik], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, ik, len_ref, bt_ref:
+                         (bt_ref[b, ik], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, D), lambda b, h, ik, len_ref, bt_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, D), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+            pltpu.VMEM((g, LANES), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="xfa_decode_attention_paged",
+    )(jnp.asarray(kv_len, jnp.int32), jnp.asarray(block_table, jnp.int32),
+      qg, k_pages, v_pages)
+    return o.reshape(B, Hq, D)
+
+
+def _chunk_paged_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *,
+                        sm_scale: float, page_size: int, num_pages: int,
+                        chunk: int):
+    """Paged offset-causal chunk body (see _chunk_kernel): q rows are
+    (g, t) row-major, column limit pos + r % chunk; the KV grid walks
+    block-table slots with the page id prefetched into the BlockSpec."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[b]
+
+    # per-row early exit: no query of this chunk reaches past pos + T - 1
+    @pl.when(ik * page_size < pos + chunk)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G*T, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [PS, D]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [PS, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = ik * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(cols <= pos + rows % chunk, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new[:, None], m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new[:, None], l_ref.shape)
+
+    @pl.when(ik == num_pages - 1)
+    def _finalize():
+        l = l_ref[:, 0]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention_paged(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, *, block_table: jax.Array,
+                          pos: jax.Array, sm_scale: Optional[float] = None,
+                          interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, T, D] chunk queries; k_pages, v_pages:
+    [P, Hkv, page_size, D] arena; block_table: [B, NB]; pos: [B]
+    -> [B, Hq, T, D].
+
+    The paged generalization of chunk_attention: the chunk's own K/V was
+    already scattered through the block table at virtual rows
+    [pos, pos+T), and query t of row b attends virtual columns
+    <= pos[b] + t.  Block-table slots are this kernel's KV blocks —
+    slots past a row's pos + T early-exit exactly like dense KV blocks
+    do, so the mixed-depth serving property is preserved page-granular."""
+    B, Hq, T, D = q.shape
+    P, Hkv, ps, _ = k_pages.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    NB = block_table.shape[1]
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+
+    qg = q.reshape(B, Hkv, g, T, D).reshape(B, Hkv, g * T, D)
+    kernel = functools.partial(
+        _chunk_paged_kernel, sm_scale=scale, page_size=ps, num_pages=NB,
+        chunk=T)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, NB),
+        in_specs=[
+            pl.BlockSpec((1, 1, g * T, D),
+                         lambda b, h, ik, pos_ref, bt_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, ik, pos_ref, bt_ref:
+                         (bt_ref[b, ik], h, 0, 0)),
+            pl.BlockSpec((1, 1, ps, D),
+                         lambda b, h, ik, pos_ref, bt_ref:
+                         (bt_ref[b, ik], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g * T, D),
+            lambda b, h, ik, pos_ref, bt_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g * T, D), jnp.float32),
+            pltpu.VMEM((g * T, LANES), jnp.float32),
+            pltpu.VMEM((g * T, LANES), jnp.float32),
+        ],
+    )
+    o = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g * T, D), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="xfa_chunk_attention_paged",
+    )(jnp.asarray(pos, jnp.int32), jnp.asarray(block_table, jnp.int32),
+      qg, k_pages, v_pages)
+    return o.reshape(B, Hq, T, D)
+
+
 def chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     pos: jax.Array, sm_scale: Optional[float] = None,
                     block_k: int = 512, interpret: bool = False):

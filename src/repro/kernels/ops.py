@@ -111,6 +111,67 @@ def chunk_attention(q, k, v, *, pos, sm_scale=None, impl: str = "auto",
                                 interpret=itp)
 
 
+def decode_attention_paged(q, k_pages, v_pages, *, block_table, kv_len,
+                           sm_scale=None, impl: str = "auto",
+                           interpret: Optional[bool] = None,
+                           component: str = "attention") -> jax.Array:
+    """Paged single-token decode: q [B, Hq, D] against a page arena
+    k_pages/v_pages [P, Hkv, page_size, D] addressed through block_table
+    [B, NB] (int32 page ids; unassigned slots point at the reserved
+    scratch page 0 and are masked by kv_len [B])."""
+    B, Hq, D = q.shape
+    P, _, ps, _ = k_pages.shape
+    NB = block_table.shape[1]
+    # cost model charges the VISIBLE prefix, not the arena: each row
+    # streams at most NB pages of its own table
+    annotate_cost(xfa.current_component(), component, "decode_attention_paged",
+                  flops=4.0 * B * Hq * NB * ps * D,
+                  bytes=2.0 * B * NB * ps * D * k_pages.dtype.itemsize)
+    mode = _resolve(impl)
+    if mode in ("ref", "chunked"):
+        return ref.decode_attention_paged(q, k_pages, v_pages,
+                                          block_table=block_table,
+                                          kv_len=kv_len, sm_scale=sm_scale)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return _dec.decode_attention_paged(q, k_pages, v_pages,
+                                       block_table=block_table,
+                                       kv_len=kv_len, sm_scale=sm_scale,
+                                       interpret=itp)
+
+
+def chunk_attention_paged(q, k_pages, v_pages, *, block_table, pos,
+                          sm_scale=None, impl: str = "auto",
+                          interpret: Optional[bool] = None,
+                          component: str = "attention") -> jax.Array:
+    """Paged positioned-chunk attention: q [B, Hq, T, D] at per-row
+    offsets pos [B]; KV lives in the page arena [P, Hkv, page_size, D]
+    and each row's visible prefix is gathered through block_table
+    [B, NB].  Same offset-causal mask as chunk_attention — the paged
+    pool changes where rows live, never what a query sees."""
+    B, Hq, T, D = q.shape
+    P, _, ps, _ = k_pages.shape
+    NB = block_table.shape[1]
+    annotate_cost(xfa.current_component(), component, "chunk_attention_paged",
+                  flops=4.0 * B * Hq * T * NB * ps * D,
+                  bytes=2.0 * B * NB * ps * D * k_pages.dtype.itemsize)
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.chunk_attention_paged(q, k_pages, v_pages,
+                                         block_table=block_table,
+                                         pos=pos, sm_scale=sm_scale)
+    if mode == "chunked":
+        # blocked-jnp dry-run path: one page of live scores at a time,
+        # same footprint shape as the Pallas kernel
+        return ref.chunk_attention_paged_blocked(q, k_pages, v_pages,
+                                                 block_table=block_table,
+                                                 pos=pos, sm_scale=sm_scale)
+    itp = (not _on_tpu()) if interpret is None else interpret
+    return _dec.chunk_attention_paged(q, k_pages, v_pages,
+                                      block_table=block_table,
+                                      pos=pos, sm_scale=sm_scale,
+                                      interpret=itp)
+
+
 def rmsnorm(x, w, *, eps: float = 1e-5, impl: str = "auto",
             interpret: Optional[bool] = None,
             component: str = "norm") -> jax.Array:

@@ -358,6 +358,95 @@ def chunk_attention_blocked(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return (acc / l[..., None]).astype(q.dtype)
 
 
+def gather_kv_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize a paged KV arena as per-row dense caches.
+
+    pages: [P, Hkv, page_size, D] — the page arena (page 0 is the
+    engine's reserved scratch page); block_table: [B, NB] int32 page ids,
+    row b's virtual cache row being the concatenation of its NB pages.
+    Returns [B, Hkv, NB*page_size, D].  Unassigned block-table entries
+    point at page 0; whatever lives there is masked by pos/kv_len on
+    every read path, so the gather never has to know the frontier."""
+    g = pages[block_table]                       # [B, NB, Hkv, ps, D]
+    B, NB, Hkv, ps, D = g.shape
+    return jnp.moveaxis(g, 1, 2).reshape(B, Hkv, NB * ps, D)
+
+
+def chunk_attention_paged(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, *, block_table: jax.Array,
+                          pos: jax.Array,
+                          sm_scale: Optional[float] = None) -> jax.Array:
+    """Paged positioned-chunk attention oracle: gather the visible
+    prefix's KV pages through the block table, then run the dense
+    offset-causal reference.  q: [B, Hq, T, D]; k_pages/v_pages:
+    [P, Hkv, page_size, D]; block_table: [B, NB]; pos: [B].  Numerically
+    identical to chunk_attention over the equivalent contiguous cache:
+    columns past pos[b] + t get exactly-zero softmax mass, so scratch-page
+    content and ungranted pages can never leak in."""
+    k = gather_kv_pages(k_pages, block_table)
+    v = gather_kv_pages(v_pages, block_table)
+    return chunk_attention(q, k, v, pos=pos, sm_scale=sm_scale)
+
+
+def decode_attention_paged(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, *, block_table: jax.Array,
+                           kv_len: Optional[jax.Array] = None,
+                           sm_scale: Optional[float] = None) -> jax.Array:
+    """Paged single-token decode oracle (gather pages, dense reference).
+
+    q: [B, Hq, D]; k_pages/v_pages: [P, Hkv, page_size, D];
+    block_table: [B, NB]; kv_len: [B] valid prefix lengths."""
+    k = gather_kv_pages(k_pages, block_table)
+    v = gather_kv_pages(v_pages, block_table)
+    if kv_len is None:
+        kv_len = jnp.full((q.shape[0],), k.shape[2], jnp.int32)
+    return decode_attention(q, k, v, kv_len=kv_len, sm_scale=sm_scale)
+
+
+def chunk_attention_paged_blocked(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, *,
+                                  block_table: jax.Array, pos: jax.Array,
+                                  sm_scale: Optional[float] = None
+                                  ) -> jax.Array:
+    """Flash-pattern PAGED chunk attention in pure jnp — the dry-run
+    stand-in for the Pallas paged kernel: one page gathered per scan
+    step (never the whole [B, NB*ps] cache), online softmax carried
+    across pages.  Block k IS the page: the kernel's KV grid dimension
+    walks block-table slots, and this mirrors that blocking exactly."""
+    B, Hq, T, D = q.shape
+    P, Hkv, ps, _ = k_pages.shape
+    NB = block_table.shape[1]
+    g = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Hkv, g * T, D)
+    limit = pos[:, None] + jnp.arange(T)[None, :]          # [B, T]
+    limit = jnp.tile(limit, (1, g))                        # rows are (g, t)
+
+    def body(carry, ik):
+        m, l, acc = carry
+        page_ids = block_table[:, ik]                      # [B]
+        kk = k_pages[page_ids].astype(jnp.float32)         # [B, Hkv, ps, D]
+        vv = v_pages[page_ids].astype(jnp.float32)
+        s = jnp.einsum("bhtd,bhkd->bhtk", qf, kk)
+        cols = ik * ps + jnp.arange(ps)
+        s = jnp.where(cols[None, None, None, :]
+                      <= limit[:, None, :, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhtk,bhkd->bhtd", p, vv)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hkv, g * T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, g * T), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, g * T, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NB))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = (acc / l[..., None]).reshape(B, Hkv, g, T, D)
+    return o.reshape(B, Hq, T, D).astype(q.dtype)
+
+
 def combine_decode_partials(o_parts, m_parts, l_parts):
     """Numerically-stable split-K combine of per-shard decode partials.
 

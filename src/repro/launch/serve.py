@@ -84,6 +84,16 @@ def main() -> int:
                          "into ONE forward_chunk call per tick (capped at "
                          "--max-batch; 1 reproduces per-slot batch=1 "
                          "prefill)")
+    # -- paged KV-cache pool -------------------------------------------------
+    ap.add_argument("--max-cache-pages", type=int, default=0,
+                    help="swap the contiguous [max_batch, max_seq] cache "
+                         "for a paged arena of this many pages (0: off); "
+                         "admission is then gated by free pages, not slot "
+                         "count — page 0 is reserved scratch.  Transformer/"
+                         "MLA families only; recurrent families keep their "
+                         "dense O(1)-per-slot state")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="cache rows per page of the paged pool")
     # -- sampling ------------------------------------------------------------
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy")
@@ -147,6 +157,8 @@ def main() -> int:
         bucket_chunks=not args.no_bucket_chunks,
         min_chunk_bucket=args.min_chunk_bucket,
         prefill_batch=args.prefill_batch,
+        page_size=args.page_size,
+        max_cache_pages=args.max_cache_pages,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         sample_seed=args.sample_seed,
         profile_dir=args.profile_dir,

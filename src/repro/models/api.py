@@ -48,6 +48,15 @@ class Model:
     forward_chunk: Callable
     prefill: Callable
     decode_step: Callable
+    # paged serving cache (transformer families only; None elsewhere —
+    # recurrent state is O(1) in sequence length, nothing to page):
+    #   init_paged_cache(pages, page_size)          -> arena pytree
+    #   forward_chunk_paged(params, tokens, table, arena, pos,
+    #                       block_table[, valid])   -> (logits, arena, table)
+    #   decode_step_paged(params, tok, table, arena, pos, block_table)
+    init_paged_cache: Optional[Callable] = None
+    forward_chunk_paged: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
 
     def batch_spec(self, shape: ShapeConfig) -> Dict[str, Any]:
         """ShapeDtypeStruct stand-ins for a training batch (dry-run safe)."""
@@ -134,6 +143,25 @@ def build_model(cfg: ModelConfig, impl: str = "auto") -> Model:
         return mod.forward_chunk(params, token[:, None], rt, table, cache,
                                  pos)
 
+    paged: Dict[str, Any] = {}
+    if mod is transformer:
+        def init_paged_cache(pages, page_size):
+            return transformer.init_paged_cache(cfg, pages, page_size)
+
+        def forward_chunk_paged(params, tokens, table, cache, pos,
+                                block_table, valid=None):
+            return transformer.forward_chunk_paged(
+                params, tokens, rt, table, cache, pos, block_table,
+                valid=valid)
+
+        def decode_step_paged(params, token, table, cache, pos, block_table):
+            return transformer.decode_step_paged(params, token, rt, table,
+                                                 cache, pos, block_table)
+
+        paged = {"init_paged_cache": init_paged_cache,
+                 "forward_chunk_paged": forward_chunk_paged,
+                 "decode_step_paged": decode_step_paged}
+
     return Model(cfg=cfg, rt=rt, fold_spec=spec, init=init, loss_fn=loss_fn,
                  init_cache=init_cache, forward_chunk=forward_chunk,
-                 prefill=prefill, decode_step=decode_step)
+                 prefill=prefill, decode_step=decode_step, **paged)

@@ -162,6 +162,41 @@ def update_cache_rows(dst: jax.Array, src: jax.Array, pos: jax.Array,
     return jax.vmap(one)(dst, src.astype(dst.dtype), pos)
 
 
+def update_cache_pages(arena: jax.Array, src: jax.Array, pos: jax.Array,
+                       block_table: jax.Array,
+                       seq_axis: int = 2) -> jax.Array:
+    """Paged cache scatter: the PAGE-ARENA twin of update_cache_rows.
+
+    arena: [P, ..., page_size, ...] page pool (page id replaces the batch
+    dim; `seq_axis` is the row-within-page axis); src: [B, ..., T, ...]
+    fresh rows; pos: [B] per-row virtual offsets; block_table: [B, NB]
+    int32 page ids mapping virtual page `v` of row b to arena page
+    block_table[b, v].
+
+    Virtual row pos[b]+t of batch row b lands at
+    (block_table[b, (pos[b]+t) // page_size], (pos[b]+t) % page_size).
+    Page 0 is the engine's reserved scratch page: bucket-pad rows and
+    past-frontier writes of a padded chunk resolve there (their table
+    entries are 0) and are overwritten or masked before any read — the
+    same discard contract dense pads have, made page-granular."""
+    ps = arena.shape[seq_axis]
+    NB = block_table.shape[1]
+    B = src.shape[0]
+    T = src.shape[seq_axis]
+    abs_pos = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    blk = jnp.clip(abs_pos // ps, 0, NB - 1)
+    pg = jnp.take_along_axis(jnp.asarray(block_table, jnp.int32), blk, axis=1)
+    row = abs_pos % ps
+    # [B, ..., T, ...] -> [B*T, ...rest] matching the advanced-index
+    # selection shape (page and row indices broadcast to the front)
+    srcf = jnp.moveaxis(src, seq_axis, 1).reshape(
+        (B * T,) + src.shape[1:seq_axis] + src.shape[seq_axis + 1:])
+    index = [slice(None)] * arena.ndim
+    index[0] = pg.reshape(-1)
+    index[seq_axis] = row.reshape(-1)
+    return arena.at[tuple(index)].set(srcf.astype(arena.dtype))
+
+
 def last_valid(x: jax.Array, valid: Optional[jax.Array]) -> jax.Array:
     """x: [B, T, d] -> [B, 1, d] at each row's last VALID position.  A
     bucket-padded chunk carries valid: [B] real-token counts; the logits a
@@ -192,7 +227,8 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
               cache: Optional[Params] = None, pos: Optional[jax.Array] = None,
               kv: Optional[jax.Array] = None, causal: bool = True,
-              return_kv: bool = False
+              return_kv: bool = False,
+              block_table: Optional[jax.Array] = None
               ) -> Tuple[jax.Array, Optional[Params]]:
     """GQA/MQA (optionally qk-norm) attention.
 
@@ -203,13 +239,17 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
     queries attend offset-causally against the row's full prefix.  S == 1
     is the pooled decode step, S > 1 an in-model prefill chunk — the same
     operation at different widths;
+    block_table: [B, NB] int32 page ids — when given, `cache` is a PAGE
+    ARENA ([P, Hkv, page_size, h] per layer) rather than per-row storage:
+    writes scatter and reads gather through the table, so a row only
+    touches the pages it was granted;
     positions: [S] shared rope positions, or [B, S] per-row (chunk/decode);
     return_kv: return this call's post-rope K/V (prefill cache building).
     Returns (y [B, S, d], cache-or-kv).
     """
     if rt.cfg.mla:
         return mla_attention(p, x, rt, positions, cache, pos,
-                             return_kv=return_kv)
+                             return_kv=return_kv, block_table=block_table)
     cfg = rt.cfg
     ap = p["attn"]
     B, S, d = x.shape
@@ -240,7 +280,27 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
         k = shard(k, "batch", "model" if cfg.n_kv_heads > 1 else None,
                   None, None)
 
-        if cache is not None:
+        if cache is not None and block_table is not None:
+            # paged positioned chunk: scatter the S fresh rows through the
+            # block table into the shared page arena, read back the row's
+            # visible prefix through the same indirection
+            pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+            ck = update_cache_pages(cache["k"], k, pos, block_table,
+                                    seq_axis=2)
+            cv = update_cache_pages(cache["v"], v, pos, block_table,
+                                    seq_axis=2)
+            if S == 1:                 # decode width: paged flash-decode
+                o = ops.decode_attention_paged(
+                    q[:, :, 0], ck, cv, block_table=block_table,
+                    kv_len=pos + 1, impl=rt.impl)
+                o = o.reshape(B, 1, cfg.n_heads, h)
+            else:                      # prefill chunk at per-row offsets
+                o = ops.chunk_attention_paged(
+                    q, ck, cv, block_table=block_table, pos=pos,
+                    impl=rt.impl)
+                o = o.swapaxes(1, 2)                   # [B,S,Hq,h]
+            new_cache = {"k": ck, "v": cv}
+        elif cache is not None:
             # positioned chunk: append each row's S fresh k/v rows at its
             # own `pos`, attend to the row's own prefix (offset-causal)
             pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
@@ -270,14 +330,18 @@ def attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
 def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
                   cache: Optional[Params] = None,
                   pos: Optional[jax.Array] = None,
-                  return_kv: bool = False
+                  return_kv: bool = False,
+                  block_table: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, Optional[Params]]:
     """Multi-head Latent Attention (DeepSeek-V2).
 
     Prefill/train: expand the latent into full per-head K/V.
     Decode: matrix-absorbed latent attention — the cache stores ONLY
     (c_kv [B,S,r], k_rope [B,S,dr]); queries are projected into the latent
-    space, and the decode kernel runs with a single latent 'kv head'."""
+    space, and the decode kernel runs with a single latent 'kv head'.
+    With block_table the latent cache is a page arena ([P, page_size, r] /
+    [P, page_size, dr]) addressed exactly like the GQA one — the latent
+    rows page the same way full K/V rows do."""
     cfg = rt.cfg
     ap = p["attn"]
     B, S, d = x.shape
@@ -306,19 +370,38 @@ def mla_attention(p: Params, x: jax.Array, rt: Runtime, positions: jax.Array,
             # run the decode kernel (S == 1) or the offset-causal chunk
             # kernel (S > 1) over the single latent 'kv head'
             pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
-            cc = update_cache_rows(cache["ckv"], c_kv, pos, seq_axis=1)
-            cr = update_cache_rows(cache["krope"], k_rope[:, 0], pos,
-                                   seq_axis=1)
+            if block_table is not None:
+                cc = update_cache_pages(cache["ckv"], c_kv, pos,
+                                        block_table, seq_axis=1)
+                cr = update_cache_pages(cache["krope"], k_rope[:, 0], pos,
+                                        block_table, seq_axis=1)
+            else:
+                cc = update_cache_rows(cache["ckv"], c_kv, pos, seq_axis=1)
+                cr = update_cache_rows(cache["krope"], k_rope[:, 0], pos,
+                                       seq_axis=1)
             # absorb: q_latent = q_nope @ wk_b^T  -> [B,nh,S,r]
             q_lat = jnp.einsum("bhtd,rhd->bhtr",
                                q_nope.swapaxes(1, 2).astype(jnp.float32),
                                wk_b.astype(jnp.float32)).astype(x.dtype)
             q_full = jnp.concatenate([q_lat, q_rope], -1)   # [B,nh,S,r+dr]
-            k_full = jnp.concatenate([cc, cr], -1)[:, None]  # [B,1,Smax,r+dr]
+            # [B,1,Smax,r+dr] dense; [P,1,page,r+dr] paged arena — the
+            # added axis is the single latent 'kv head' either way
+            k_full = jnp.concatenate([cc, cr], -1)[:, None]
             # v = c_kv (latent); pad to r+dr so k/v share a kernel shape
             v_lat = jnp.pad(cc, ((0, 0), (0, 0), (0, dr)))[:, None]
             scale = (dn + dr) ** -0.5
-            if S == 1:
+            if block_table is not None:
+                if S == 1:
+                    o_lat = ops.decode_attention_paged(
+                        q_full[:, :, 0], k_full, v_lat,
+                        block_table=block_table, kv_len=pos + 1,
+                        sm_scale=scale, impl=rt.impl)[:, None]
+                else:
+                    o_lat = ops.chunk_attention_paged(
+                        q_full, k_full, v_lat, block_table=block_table,
+                        pos=pos, sm_scale=scale,
+                        impl=rt.impl).swapaxes(1, 2)
+            elif S == 1:
                 kv_len = pos + 1
                 o_lat = ops.decode_attention(
                     q_full[:, :, 0], k_full, v_lat, kv_len=kv_len,

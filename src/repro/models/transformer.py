@@ -48,10 +48,12 @@ def decoder_layer(p: Params, x: jax.Array, rt: Runtime, table: jax.Array,
                   positions: jax.Array, kind: str,
                   cache: Optional[Params] = None,
                   pos: Optional[jax.Array] = None,
-                  return_kv: bool = False):
+                  return_kv: bool = False,
+                  block_table: Optional[jax.Array] = None):
     """Pre-norm block. Returns (x, table, aux, new_cache)."""
     h = norm(p["norm1"], x, rt)
-    a, new_cache = attention(p, h, rt, positions, cache=cache, pos=pos)
+    a, new_cache = attention(p, h, rt, positions, cache=cache, pos=pos,
+                             block_table=block_table)
     x = x + a
     h = norm(p["norm2"], x, rt)
     if kind == "moe":
@@ -179,15 +181,18 @@ def _split_cache(cache: Params, boundaries) -> Tuple[Params, ...]:
 def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
                   cache: Params, pos: jax.Array,
                   valid: Optional[jax.Array] = None,
-                  prefix_embeds: Optional[jax.Array] = None):
+                  prefix_embeds: Optional[jax.Array] = None,
+                  block_table: Optional[jax.Array] = None):
     """THE serving entry point: write a T-token chunk at per-slot offsets.
 
     tokens: [B, T]; pos: [B] int32 per-slot cache depths (scalar
     broadcasts); valid: [B] tokens of the chunk that are real (None = T;
     bucket-padded chunks mask the pad — pad K/V rows are written past the
     frontier but the NEXT chunk overwrites them and no query ever attends
-    them).  Returns (last-valid-token logits [B, V], new stacked cache,
-    table).
+    them).  block_table: [B, NB] int32 — when given, `cache` is the paged
+    arena ([L, P, Hkv, page_size, h]) and every layer writes/reads through
+    the SAME per-slot table (one table per slot, shared across layers).
+    Returns (last-valid-token logits [B, V], new stacked cache, table).
 
     Prefill and decode are this operation at different widths: pos = 0,
     T = prompt length is bulk prefill; T = 1 is the pooled decode tick;
@@ -212,7 +217,7 @@ def forward_chunk(p: Params, tokens: jax.Array, rt: Runtime, table: jax.Array,
             layer_p, layer_cache = inp
             x, table, _, new_cache = decoder_layer(
                 layer_p, x, rt, table, positions, kind,
-                cache=layer_cache, pos=pos)
+                cache=layer_cache, pos=pos, block_table=block_table)
             return (x, table), new_cache
 
         with scan_multiplier(count):
@@ -239,6 +244,38 @@ def decode_step(p: Params, token: jax.Array, rt: Runtime, table: jax.Array,
                 cache: Params, pos: jax.Array):
     """Pooled decode = forward_chunk at width T = 1.  token: [B]."""
     return forward_chunk(p, token[:, None], rt, table, cache, pos)
+
+
+# ------------------------------------------------------- paged serving ----
+def init_paged_cache(cfg: ModelConfig, pages: int, page_size: int, dtype=None
+                     ) -> Params:
+    """Page-arena KV cache: the per-slot batch dim of init_cache becomes
+    the PAGE dim ([L, P, Hkv, page_size, h] / MLA [L, P, page_size, r]).
+    Ownership lives outside: the engine's block tables map (slot,
+    virtual page) -> arena page, so a 30-token slot holds one page and a
+    full-context one holds max_seq_len / page_size — memory follows the
+    request, not the worst case.  Page 0 is reserved scratch."""
+    return init_cache(cfg, pages, page_size, dtype)
+
+
+def forward_chunk_paged(p: Params, tokens: jax.Array, rt: Runtime,
+                        table: jax.Array, cache: Params, pos: jax.Array,
+                        block_table: jax.Array,
+                        valid: Optional[jax.Array] = None,
+                        prefix_embeds: Optional[jax.Array] = None):
+    """forward_chunk against the page arena — same math, block-table
+    indirection for every cache write and read."""
+    return forward_chunk(p, tokens, rt, table, cache, pos, valid=valid,
+                         prefix_embeds=prefix_embeds,
+                         block_table=block_table)
+
+
+def decode_step_paged(p: Params, token: jax.Array, rt: Runtime,
+                      table: jax.Array, cache: Params, pos: jax.Array,
+                      block_table: jax.Array):
+    """Pooled paged decode = forward_chunk_paged at width T = 1."""
+    return forward_chunk_paged(p, token[:, None], rt, table, cache, pos,
+                               block_table)
 
 
 # -------------------------------------------------------------- vlm stub ----

@@ -1,17 +1,20 @@
 """repro.serving — layered continuous-batching serving subsystem.
 
 scheduler.py (admission + chunked-prefill budget) -> sampling.py (pooled
-per-slot sampling) -> engine.py (per-slot-position decode pool, background
+per-slot sampling) -> paging.py (page-arena allocator for the paged
+KV-cache pool) -> engine.py (per-slot-position decode pool, background
 serving thread, client handles).  See engine.py for the full design notes.
 """
 
 from .engine import Request, ServingEngine
+from .paging import PageAllocator
 from .sampling import GREEDY, PooledSampler, SamplingParams, sample_tokens
 from .scheduler import Scheduler, Slot
 from .workload import latency_stats, run_workload
 
 __all__ = [
     "Request", "ServingEngine",
+    "PageAllocator",
     "GREEDY", "PooledSampler", "SamplingParams", "sample_tokens",
     "Scheduler", "Slot",
     "latency_stats", "run_workload",

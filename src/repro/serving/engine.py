@@ -30,6 +30,20 @@ in-model via `valid`), so the set of compiled prefill programs is
 O(log prefill_batch x log max_seq_len), not one per distinct prompt
 length or admission pattern.
 
+Paged KV-cache pool (ServeConfig.max_cache_pages > 0, transformer/MLA
+families): the contiguous [max_batch, max_seq_len] cache becomes a fixed
+arena of pages plus per-slot block tables (paging.PageAllocator owns the
+accounting).  Admission is gated by FREE PAGES — the scheduler's page
+gate reserves a request's worst-case pages (prompt + max_new - 1 rows)
+or back-pressures the FCFS queue — and pages are granted lazily as a
+slot's `pos` crosses page boundaries, recycled at finish.  Prefill
+groups and the decode tick write straight into the shared arena through
+the tables (no batch=1 stashes, no scatter); pages-in-use /
+high-water-mark / capacity fold as `serve.cache_pages_*` gauges, the
+saturation resource the cache-pressure detector reads.  Recurrent
+families (mamba/xlstm/encdec), whose state is O(1) in sequence length,
+keep the dense layout behind the same API.
+
 Client API: `submit()` returns a Request handle immediately; tokens
 stream through an optional `on_token` callback and `handle.result()`
 blocks until completion.  `start()` runs the engine on a background
@@ -159,13 +173,39 @@ class ServingEngine:
         self.scheduler = Scheduler(scfg)
         self.sampler = PooledSampler(scfg.max_batch)
         self.table = model.table()
-        self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
-        self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+        # paged pool: swap the contiguous [max_batch, max_seq_len] cache
+        # for a page arena + per-slot block tables, admission gated by
+        # free pages.  Families without a paged entry point (recurrent
+        # state is O(1) in sequence length) keep the dense layout even
+        # when max_cache_pages is set — same engine API either way.
+        self.paged = bool(scfg.max_cache_pages > 0
+                          and model.forward_chunk_paged is not None)
+        self.allocator = None
+        if self.paged:
+            from .paging import PageAllocator
+            self.allocator = PageAllocator(scfg.max_cache_pages,
+                                           scfg.page_size)
+            # virtual pages per slot: covers a full max_seq_len row (the
+            # block table is the slot's whole address space; unassigned
+            # entries point at scratch page 0)
+            self._n_blocks = -(-scfg.max_seq_len // scfg.page_size)
+            self.block_tables = np.zeros(
+                (scfg.max_batch, self._n_blocks), np.int32)
+            self.cache = model.init_paged_cache(scfg.max_cache_pages,
+                                                scfg.page_size)
+            self._decode = jax.jit(model.decode_step_paged,
+                                   donate_argnums=(3,))
+            self._chunk = jax.jit(model.forward_chunk_paged,
+                                  donate_argnums=(3,))
+            self.scheduler.page_gate = self._page_gate
+        else:
+            self.cache = model.init_cache(scfg.max_batch, scfg.max_seq_len)
+            self._decode = jax.jit(model.decode_step, donate_argnums=(3,))
+            self._chunk = jax.jit(model.forward_chunk, donate_argnums=(3,))
         # one compiled program per (BATCH BUCKET, CHUNK WIDTH) pair (both
         # bucketed powers of two); _chunk_programs tracks the scheduled
         # set — tests assert it stays bounded regardless of how many
         # distinct prompt lengths or admission patterns arrive
-        self._chunk = jax.jit(model.forward_chunk, donate_argnums=(3,))
         self._chunk_programs: set = set()
         # per-leaf batch axes of the cache pytree (-1: unbatched leaf),
         # inferred once from shapes — the batch axis differs per
@@ -211,6 +251,9 @@ class ServingEngine:
                 label=scfg.profile_label, kind="serve",
                 meta={"max_batch": scfg.max_batch,
                       "max_seq_len": scfg.max_seq_len,
+                      **({"page_size": scfg.page_size,
+                          "max_cache_pages": scfg.max_cache_pages}
+                         if self.paged else {}),
                       **dict(scfg.profile_meta)})
             if scfg.xfa_collector:
                 from repro.profile import FleetPublisher
@@ -244,6 +287,39 @@ class ServingEngine:
                 top_p=self.scfg.top_p, seed=self.scfg.sample_seed)
         if deadline_ms is None and self.scfg.deadline_ms > 0:
             deadline_ms = self.scfg.deadline_ms
+        # fit the request to the cache row AT SUBMIT, not mid-prefill:
+        # the client sees the truncation on the handle it got back, and
+        # the paged admission gate prices the rows that will really be
+        # used.  Keep at least one prompt token even when max_new_tokens
+        # alone (nearly) fills the row — matches Scheduler.admit_cost.
+        truncated = False
+        limit = max(1, self.scfg.max_seq_len - max_new_tokens - 1)
+        if prompt.size > limit:
+            # visible truncation: flagged on the handle AND folded as a
+            # count event so fleets can alarm on it
+            prompt = prompt[:limit]
+            truncated = True
+            xfa.count_event("serve", "truncated_prompt")
+        cap = self.scfg.max_seq_len - prompt.size
+        if max_new_tokens > cap:
+            # generation budget clamped so the slot's pos can never run
+            # off the end of its cache row (oversized max_new_tokens)
+            max_new_tokens = cap
+            truncated = True
+            xfa.count_event("serve", "clamped_max_new")
+        if self.paged:
+            # a request whose worst case exceeds the whole pool could
+            # never pass the page gate: structured rejection here instead
+            # of a silent deadlock at the head of the FCFS queue
+            rows = int(prompt.size) + max_new_tokens - 1
+            need = self.allocator.pages_needed(rows)
+            if need > self.allocator.usable:
+                raise ValueError(
+                    f"request needs {need} cache pages ({rows} rows at "
+                    f"page_size={self.scfg.page_size}) but the pool has "
+                    f"only {self.allocator.usable} usable pages "
+                    f"(max_cache_pages={self.scfg.max_cache_pages}, "
+                    f"page 0 reserved)")
         # timestamp BEFORE taking the lock: a tick in progress holds it,
         # and that wait is queueing delay the client really experienced
         submitted_at = time.monotonic()
@@ -257,7 +333,7 @@ class ServingEngine:
             req = Request(self._uid, prompt,
                           max_new_tokens, sampling=sampling,
                           submitted_at=submitted_at, on_token=on_token,
-                          deadline_ms=deadline_ms)
+                          deadline_ms=deadline_ms, truncated=truncated)
             self.scheduler.add(req)
             self._work.notify_all()
         return req
@@ -351,11 +427,24 @@ class ServingEngine:
         actually scheduled (the recompile-hazard bound)."""
         for w in self.chunk_buckets() or [self.scfg.prefill_chunk or 1]:
             for b in self.batch_buckets() or [1]:
-                cache = self.model.init_cache(b, self.scfg.max_seq_len)
-                logits, _, self.table = self._chunk(
-                    self.params, jnp.zeros((b, w), jnp.int32), self.table,
-                    cache, jnp.zeros((b,), jnp.int32),
-                    jnp.ones((b,), jnp.int32))
+                if self.paged:
+                    # the arena shape is part of the compiled program, so
+                    # warm against a scratch arena of the SAME size; an
+                    # all-zero block table routes every write to the
+                    # scratch page
+                    cache = self.model.init_paged_cache(
+                        self.scfg.max_cache_pages, self.scfg.page_size)
+                    logits, _, self.table = self._chunk(
+                        self.params, jnp.zeros((b, w), jnp.int32),
+                        self.table, cache, jnp.zeros((b,), jnp.int32),
+                        jnp.zeros((b, self._n_blocks), jnp.int32),
+                        jnp.ones((b,), jnp.int32))
+                else:
+                    cache = self.model.init_cache(b, self.scfg.max_seq_len)
+                    logits, _, self.table = self._chunk(
+                        self.params, jnp.zeros((b, w), jnp.int32),
+                        self.table, cache, jnp.zeros((b,), jnp.int32),
+                        jnp.ones((b,), jnp.int32))
                 jax.block_until_ready(logits)
 
     @property
@@ -406,6 +495,36 @@ class ServingEngine:
                 l, row, row + 1, axis=ax)
         return jax.tree.map(leaf, self._batch_axes, gathered)
 
+    # -- paged pool ---------------------------------------------------------
+    def _page_gate(self, req: Request) -> bool:
+        """Scheduler admission gate: reserve the request's WORST-CASE
+        pages (truncated prompt + clamped max_new - 1 rows — submit
+        already fitted both to the row) or report back-pressure.  A True
+        return has committed pages: _admit's slot consumes them via
+        lazy grants, rollback paths cancel them."""
+        rows = len(req.prompt) + req.max_new_tokens - 1
+        return self.allocator.try_reserve(
+            req.uid, self.allocator.pages_needed(rows))
+
+    def _grant_rows(self, slot_idx: int, rows: int) -> None:
+        """Ensure slot `slot_idx` owns pages covering its first `rows`
+        cache rows, drawing lazily from the allocator as the frontier
+        crosses page boundaries (granted page ids append to the slot's
+        block table; page 0 is never granted, so count_nonzero IS the
+        pages-held count)."""
+        have = int(np.count_nonzero(self.block_tables[slot_idx]))
+        need = self.allocator.pages_needed(rows) - have
+        if need > 0:
+            uid = self.scheduler.slots[slot_idx].request.uid
+            pages = self.allocator.grant(uid, need)
+            self.block_tables[slot_idx, have:have + need] = pages
+
+    def _release_pages(self, slot_idx: int, req: Request) -> None:
+        """Recycle a finished/failed slot's pages and clear its table."""
+        if self.paged:
+            self.allocator.release(req.uid)
+            self.block_tables[slot_idx, :] = 0
+
     def _prefill_group(self, idxs: list, ns: list, width: int) -> None:
         """One batched prefill chunk: advance the B slots in `idxs` by
         their next ns[r] tokens through a SINGLE forward_chunk at
@@ -426,12 +545,27 @@ class ServingEngine:
             tokens[r, :n] = [slot.pending.popleft() for _ in range(n)]
             pos[r] = slot.pos
             valid[r] = n
-        gathered = self._gather_stashes([slots[i].stash for i in idxs],
-                                        Bb - B)
-        t0 = time.perf_counter_ns()
-        logits, gathered, self.table = self._chunk(
-            self.params, jnp.asarray(tokens), self.table, gathered,
-            jnp.asarray(pos), jnp.asarray(valid))
+        if self.paged:
+            # grant the pages this chunk's frontier will cross, then run
+            # the group straight against the shared arena — no stashes,
+            # no scatter: the block table IS the slot's cache row.  Pad
+            # rows carry an all-zero table (writes land on scratch).
+            for i, n in zip(idxs, ns):
+                self._grant_rows(i, slots[i].pos + n)
+            bt = np.zeros((Bb, self._n_blocks), np.int32)
+            bt[:B] = self.block_tables[idxs]
+            gathered = None
+            t0 = time.perf_counter_ns()
+            logits, self.cache, self.table = self._chunk(
+                self.params, jnp.asarray(tokens), self.table, self.cache,
+                jnp.asarray(pos), jnp.asarray(bt), jnp.asarray(valid))
+        else:
+            gathered = self._gather_stashes([slots[i].stash for i in idxs],
+                                            Bb - B)
+            t0 = time.perf_counter_ns()
+            logits, gathered, self.table = self._chunk(
+                self.params, jnp.asarray(tokens), self.table, gathered,
+                jnp.asarray(pos), jnp.asarray(valid))
         # sync before the end timestamp: jitted calls return unready
         # arrays, and mid-prompt chunks have no downstream host read to
         # block on — without this the fold times dispatch, not compute
@@ -450,13 +584,16 @@ class ServingEngine:
         for r, (i, n) in enumerate(zip(idxs, ns)):
             slot = slots[i]
             slot.pos += n
-            row = gathered if B == 1 and Bb == 1 \
-                else self._take_row(gathered, r)
-            if slot.pending:
-                slot.stash = row
-                continue
-            self.cache = _scatter_slot(self.cache, row, i)
-            slot.stash = None
+            if not self.paged:
+                row = gathered if B == 1 and Bb == 1 \
+                    else self._take_row(gathered, r)
+                if slot.pending:
+                    slot.stash = row
+                    continue
+                self.cache = _scatter_slot(self.cache, row, i)
+                slot.stash = None
+            elif slot.pending:
+                continue               # arena already holds the chunk
             # the first token is EOS-checked — a first-token EOS finishes
             # without any decode ticks instead of burning max_new - 1
             tok = self.sampler.sample_one(
@@ -475,8 +612,9 @@ class ServingEngine:
         req.admitted_at = now
         xfa.record_duration("serve", "queue_wait",
                             (now - req.submitted_at) * 1e9, kind=KIND_WAIT)
-        # keep at least one prompt token even when max_new_tokens alone
-        # (nearly) fills the row — matches Scheduler.admit_cost's clamp
+        # safety-net truncation for requests bound without going through
+        # submit() (which already fitted prompt and max_new to the row —
+        # these branches are then no-ops, so the count events fire once)
         limit = max(1, scfg.max_seq_len - req.max_new_tokens - 1)
         prompt = req.prompt
         if len(prompt) > limit:
@@ -492,8 +630,11 @@ class ServingEngine:
             req.max_new_tokens = cap
             req.truncated = True
             xfa.count_event("serve", "clamped_max_new")
+        # paged pool: the slot writes straight into the shared arena
+        # through its block table — no batch=1 stash to fill or scatter
         self.scheduler.bind(slot_idx, req, pos=0, pending=prompt,
-                            stash=model.init_cache(1, scfg.max_seq_len))
+                            stash=None if self.paged
+                            else model.init_cache(1, scfg.max_seq_len))
         self.sampler.bind(slot_idx, req.sampling)
         return self.scheduler.admit_cost(req)
 
@@ -509,10 +650,19 @@ class ServingEngine:
         pos = self.scheduler.pos_vector()
         for i in active:
             tokens[i] = slots[i].request.output[-1]
+        if self.paged:
+            # the write frontier (row `pos`) may cross into a new page
+            for i in active:
+                self._grant_rows(i, slots[i].pos + 1)
         t0 = time.perf_counter_ns()
-        logits, self.cache, self.table = self._decode(
-            self.params, jnp.asarray(tokens), self.table, self.cache,
-            jnp.asarray(pos))
+        if self.paged:
+            logits, self.cache, self.table = self._decode(
+                self.params, jnp.asarray(tokens), self.table, self.cache,
+                jnp.asarray(pos), jnp.asarray(self.block_tables))
+        else:
+            logits, self.cache, self.table = self._decode(
+                self.params, jnp.asarray(tokens), self.table, self.cache,
+                jnp.asarray(pos))
         nxt = self.sampler(logits, step=pos + 1)
         tick_ns = time.perf_counter_ns() - t0
         now = time.monotonic()
@@ -552,6 +702,7 @@ class ServingEngine:
             xfa.count_event("serve", "deadline_miss" if req.deadline_missed
                             else "deadline_met")
         self.completed.append(req)
+        self._release_pages(slot_idx, req)
         self.scheduler.release(slot_idx)
         self.sampler.release(slot_idx)
         req._done_event.set()
@@ -574,6 +725,17 @@ class ServingEngine:
                 # admission is structurally behind the arrival rate)
                 xfa.record_gauge("serve", "queue_depth",
                                  len(self.scheduler.waiting))
+                if self.paged:
+                    # pages are the admission resource: fold occupancy,
+                    # high-water mark and capacity as gauges so cache
+                    # pressure is a flow-graph edge (what the
+                    # cache-pressure detector and the fleet plane read)
+                    xfa.record_gauge("serve", "cache_pages_in_use",
+                                     self.allocator.in_use)
+                    xfa.record_gauge("serve", "cache_page_hwm",
+                                     self.allocator.hwm)
+                    xfa.record_gauge("serve", "cache_pages_capacity",
+                                     self.allocator.usable)
                 cont, deferred = self.scheduler.continuation_plan()
                 # strict FCFS: if any mid-prefill slot (older than every
                 # waiting request) was deferred by the budget, nothing
@@ -592,8 +754,14 @@ class ServingEngine:
                         # _fail_outstanding to find
                         req.error = e
                         req._done_event.set()
+                        self._release_pages(idx, req)
                         self.scheduler.release(idx)
                         for _, later in reversed(picked[k + 1:]):
+                            if self.paged:
+                                # the page gate reserved for them; back in
+                                # the queue they must not hold pages (they
+                                # re-reserve at their next gate pass)
+                                self.allocator.cancel(later.uid)
                             self.scheduler.waiting.appendleft(later)
                         raise
                 # continuations AND admissions batch together: one
@@ -601,6 +769,10 @@ class ServingEngine:
                 for idxs, ns, width in \
                         self.scheduler.batched_prefill_plan(items):
                     self._prefill_group(idxs, ns, width)
+                # pad stashes are per-TICK scratch: groups in this tick
+                # shared them by size, but holding them across ticks pins
+                # dead full-context rows for the engine's lifetime
+                self._pad_stashes.clear()
                 self._tick()
                 self._ticks += 1
                 interval = self.scfg.profile_interval_ticks
@@ -636,6 +808,12 @@ class ServingEngine:
                     if s.request is not None]
             live += list(self.scheduler.waiting)
             self.scheduler.waiting.clear()
+            if self.paged:
+                # recycle every page and reservation so a post-mortem
+                # reading the allocator sees the true terminal state
+                for req in live:
+                    self.allocator.release(req.uid)
+                self.block_tables[:] = 0
             for i in self.scheduler.active():
                 self.scheduler.release(i)
             for req in live:

@@ -70,6 +70,15 @@ class Scheduler:
         self.waiting: Deque = deque()
         self.slots: List[Slot] = [Slot() for _ in range(scfg.max_batch)]
         self._admit_seq = 0
+        # paged-cache admission gate: callable(req) -> bool, set by the
+        # engine when the pool is paged.  True = the pool RESERVED the
+        # request's worst-case pages (the gate has side effects — the
+        # engine must consume or cancel the reservation); False = not
+        # enough free pages, and because admission is strict FCFS the
+        # whole queue waits behind its head rather than letting a short
+        # request jump a long one (no out-of-order admission, no
+        # starvation).  None = slot count is the only admission resource.
+        self.page_gate = None
 
     # -- queue side ---------------------------------------------------------
     def add(self, req) -> None:
@@ -218,6 +227,9 @@ class Scheduler:
             cost = self.admit_cost(self.waiting[0])
             if (out or spent) and budget and spent + cost > budget:
                 break
+            if self.page_gate is not None \
+                    and not self.page_gate(self.waiting[0]):
+                break                      # page back-pressure: FCFS waits
             out.append((free.pop(0), self.waiting.popleft()))
             spent += cost
         return out

@@ -12,7 +12,8 @@ import pytest
 from repro.core.folding import EdgeStats, FoldedTable, fold_event_log
 from repro.core.shadow import KIND_WAIT
 from repro.core.histogram import hist_of
-from repro.analysis import (CallAmplification, DiagnosisContext,
+from repro.analysis import (CachePressure, CallAmplification,
+                            DiagnosisContext,
                             DriftRegression, EdgeBand, FlowGraph,
                             HotEdgeConcentration, QueueSaturation,
                             RankImbalance, SloViolation, Thresholds,
@@ -200,6 +201,67 @@ class TestQueueSaturation:
         # the trimmed head's run-averaged 10k mean is excluded
         assert f.evidence["means_ns"] == [20_000.0, 40_000.0, 80_000.0]
         assert f.severity == "crit"
+
+
+class TestCachePressure:
+    def _ring(self, tmp_path, in_use, depth, capacity=100):
+        """Cumulative folds whose paged-pool gauges follow the given
+        per-interval means (one gauge event per interval: mean is
+        delta_total / delta_count)."""
+        tables, iu_tot, d_tot = [], 0, 0
+        for i, (u, d) in enumerate(zip(in_use, depth), start=1):
+            iu_tot += int(u)
+            d_tot += int(d)
+            tables.append(FoldedTable({
+                ("app", "serve", "cache_pages_in_use"): edge(i, iu_tot),
+                ("app", "serve", "cache_pages_capacity"):
+                    edge(i, capacity * i),
+                ("app", "serve", "queue_depth"): edge(i, d_tot),
+                ("app", "serve", "decode_tick"): edge(10 * i, 10 * i * MS),
+            }))
+        return build_timelines(write_ring(tmp_path, tables))
+
+    def test_fires_when_pages_saturate_and_queue_grows(self, tmp_path):
+        tls = self._ring(tmp_path, in_use=[70, 88, 96], depth=[2, 5, 9])
+        [f] = CachePressure().detect(ctx_of(healthy_table(), timelines=tls))
+        assert f.severity == "crit"          # 96/100 >= crit_util 0.95
+        assert f.detector == "cache-pressure"
+        assert "pages" in f.message and "max_cache_pages" in f.message
+        assert f.evidence["util"] == pytest.approx(0.96)
+        assert f.evidence["capacity_pages"] == 100.0
+        assert f.evidence["queue_depth_means"] == [2.0, 5.0, 9.0]
+
+    def test_warn_band_below_crit_util(self, tmp_path):
+        tls = self._ring(tmp_path, in_use=[60, 75, 85], depth=[1, 2, 4])
+        [f] = CachePressure().detect(ctx_of(healthy_table(), timelines=tls))
+        assert f.severity == "warn"          # 0.80 <= 0.85 < 0.95
+
+    def test_silent_when_queue_drains_despite_full_pool(self, tmp_path):
+        """A full arena with a SHRINKING queue is a healthy full pipe —
+        pages are not the bottleneck."""
+        tls = self._ring(tmp_path, in_use=[96, 96, 96], depth=[9, 4, 1])
+        assert CachePressure().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
+
+    def test_silent_when_pages_free_while_queue_grows(self, tmp_path):
+        """Growing queue with free pages is some OTHER bottleneck
+        (queue-saturation's business, not this detector's)."""
+        tls = self._ring(tmp_path, in_use=[20, 30, 40], depth=[2, 5, 9])
+        assert CachePressure().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
+
+    def test_silent_without_capacity_gauge(self, tmp_path):
+        """No capacity edge on the ring (pre-paging shard): never fire
+        on utilization it cannot compute."""
+        tables = []
+        for i in range(1, 4):
+            tables.append(FoldedTable({
+                ("app", "serve", "cache_pages_in_use"): edge(i, 90 * i),
+                ("app", "serve", "queue_depth"): edge(i, 3 * i * i),
+            }))
+        tls = build_timelines(write_ring(tmp_path, tables))
+        assert CachePressure().detect(
+            ctx_of(healthy_table(), timelines=tls)) == []
 
 
 class TestDriftRegression:
